@@ -1,0 +1,52 @@
+"""Shared benchmark plumbing: timing, CSV emission, device-count setup.
+
+Each benchmark module sets its host-device count BEFORE importing jax (so
+run.py executes them as subprocesses) and prints ``name,us_per_call,derived``
+CSV rows, mirroring the paper's measurement discipline: warmup iterations,
+then mean over N timed iterations of start+wait, worst-case (max) across
+ranks implicit in single-process host timing.
+"""
+
+from __future__ import annotations
+
+import csv
+import os
+import sys
+import time
+from typing import Callable
+
+
+def set_host_devices(n: int) -> None:
+    assert "jax" not in sys.modules, "set_host_devices must run before jax import"
+    os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_BASE_XLA", "")
+                               + f" --xla_force_host_platform_device_count={n}")
+
+
+def time_call(fn: Callable[[], object], iters: int = 30, warmup: int = 5) -> float:
+    """Mean seconds per call (block_until_ready barriers included)."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / iters
+
+
+class Csv:
+    def __init__(self, path: str | None = None):
+        self.rows: list[tuple] = []
+        self.path = path
+
+    def row(self, name: str, us_per_call: float, derived: str = "") -> None:
+        self.rows.append((name, f"{us_per_call:.1f}", derived))
+        print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+    def save(self) -> None:
+        if not self.path:
+            return
+        os.makedirs(os.path.dirname(self.path), exist_ok=True)
+        with open(self.path, "w", newline="") as f:
+            w = csv.writer(f)
+            w.writerow(["name", "us_per_call", "derived"])
+            w.writerows(self.rows)

@@ -1,0 +1,66 @@
+"""Benchmark (paper Eq. 1-3 / Sec. 5): break-even analysis.
+
+Measures T_init (one-time host metadata; compile reported separately since
+JAX's trace+compile has no MPI analogue), T_persist (start+wait), and T_MPI
+(non-persistent call), then reports N_breakeven per message size.  The
+paper's claim: for sizes >= 32,768 bytes the savings are positive and
+N_breakeven = 1 (immediate payoff).
+"""
+
+import sys
+
+from _util import Csv, set_host_devices, time_call
+
+N_RANKS = 8
+
+
+def main(iters=30, out="experiments/bench/breakeven.csv"):
+    set_host_devices(N_RANKS)
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import breakeven
+    from repro.core import metadata as md
+    from repro.core.api import alltoallv_init, reset_global_plan_cache
+    from repro.core.baseline import make_nonpersistent
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(N_RANKS)
+    feature = 256
+    csv = Csv(out)
+
+    for nbytes in (4096, 32768, 262144, 2097152):
+        reset_global_plan_cache()
+        rows_per_pair = max(nbytes // (feature * 4), 1)
+        counts = np.full((N_RANKS, N_RANKS), rows_per_pair, np.int64)
+        send_rows = md.round_up(md.max_total_send(counts), 8)
+        x = jax.device_put(
+            jnp.asarray(np.random.default_rng(0).standard_normal(
+                (N_RANKS * send_rows, feature)), jnp.float32),
+            NamedSharding(mesh, P("x")))
+
+        plan = alltoallv_init(counts, (feature,), jnp.float32, mesh,
+                              axis="x", variant="fence")
+        plan.compile()
+        base = make_nonpersistent(
+            mesh, axis="x", p=N_RANKS, capacity=plan.capacity,
+            send_rows=send_rows, recv_rows=plan.recv_rows,
+            feature_shape=(feature,), dtype=jnp.float32)
+        cnts = jax.device_put(jnp.asarray(counts.reshape(-1), jnp.int32),
+                              NamedSharding(mesh, P("x")))
+
+        be = breakeven.measure(
+            run_persistent=lambda: plan.start(x),
+            run_baseline=lambda: base(x, cnts),
+            t_init=plan.init_host_seconds, iters=iters)
+        csv.row(f"breakeven/{nbytes}B", be.t_persist * 1e6,
+                f"t_mpi_us={be.t_mpi*1e6:.1f};t_init_us={be.t_init*1e6:.0f};"
+                f"t_compile_s={plan.init_compile_seconds:.2f};"
+                f"N_be={be.n_breakeven};savings={be.savings_pct:.1f}%")
+    csv.save()
+
+
+if __name__ == "__main__":
+    main(iters=int(sys.argv[1]) if len(sys.argv) > 1 else 30)

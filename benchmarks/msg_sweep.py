@@ -1,0 +1,75 @@
+"""Benchmark (paper Fig. 2): message-size sweep, fixed rank count.
+
+Uniform alltoallv with `bytes_per_pair` from 1 KiB to ~1 MiB across 8 ranks;
+compares the non-persistent baseline against the persistent fence and lock
+variants, and evaluates the break-even model (Eq. 1-3) at every size.
+The paper's headline claims to reproduce: persistence pays off beyond a
+message-size threshold; N_breakeven = 1 there; fence > lock.
+"""
+
+import sys
+
+from _util import Csv, set_host_devices, time_call
+
+N_RANKS = 8
+
+
+def main(sizes=None, iters=30, out="experiments/bench/msg_sweep.csv"):
+    set_host_devices(N_RANKS)
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import alltoallv_init, breakeven
+    from repro.core.baseline import make_nonpersistent
+    from repro.core import metadata as md
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(N_RANKS)
+    feature = 256                      # fp32 lanes -> 1 KiB per row
+    row_bytes = feature * 4
+    sizes = sizes or [1024, 4096, 16384, 65536, 262144, 1048576]
+    csv = Csv(out)
+
+    for nbytes in sizes:
+        rows_per_pair = max(nbytes // row_bytes, 1)
+        counts = np.full((N_RANKS, N_RANKS), rows_per_pair, np.int64)
+        send_rows = md.round_up(md.max_total_send(counts), 8)
+        rng = np.random.default_rng(0)
+        x = jax.device_put(
+            jnp.asarray(rng.standard_normal((N_RANKS * send_rows, feature)),
+                        jnp.float32),
+            NamedSharding(mesh, P("x")))
+
+        plans = {}
+        for variant in ("fence", "lock"):
+            plans[variant] = alltoallv_init(counts, (feature,), jnp.float32,
+                                            mesh, axis="x", variant=variant)
+            plans[variant].compile()
+
+        base = make_nonpersistent(
+            mesh, axis="x", p=N_RANKS, capacity=plans["fence"].capacity,
+            send_rows=send_rows, recv_rows=plans["fence"].recv_rows,
+            feature_shape=(feature,), dtype=jnp.float32)
+        cnts = jax.device_put(jnp.asarray(counts.reshape(-1), jnp.int32),
+                              NamedSharding(mesh, P("x")))
+
+        t_base = time_call(lambda: base(x, cnts), iters)
+        csv.row(f"msg_sweep/baseline/{nbytes}B", t_base * 1e6,
+                f"bytes_per_pair={nbytes}")
+        for variant in ("fence", "lock"):
+            plan = plans[variant]
+            t = time_call(lambda: plan.start(x), iters)
+            be = breakeven.BreakEven(
+                t_init=plan.init_host_seconds, t_persist=t, t_mpi=t_base,
+                n_breakeven=breakeven.n_breakeven(
+                    plan.init_host_seconds, t_base, t))
+            csv.row(f"msg_sweep/{variant}_persistent/{nbytes}B", t * 1e6,
+                    f"savings={be.savings_pct:.1f}%;N_be={be.n_breakeven};"
+                    f"t_init_us={plan.init_host_seconds*1e6:.0f}")
+    csv.save()
+
+
+if __name__ == "__main__":
+    main(iters=int(sys.argv[1]) if len(sys.argv) > 1 else 30)

@@ -1,0 +1,57 @@
+"""Roofline table: renders experiments/dryrun/*.json into the §Roofline
+report (one row per arch x shape x mesh).  No devices needed."""
+
+import glob
+import json
+import os
+import sys
+
+
+def load(dryrun_dir="experiments/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_table(rows, mesh_filter=None):
+    out = []
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':9s} {'micro':5s} "
+           f"{'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "
+           f"{'dominant':>10s} {'useful':>7s} {'mem_GiB':>8s}")
+    out.append(hdr)
+    out.append("-" * len(hdr))
+    for r in rows:
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        roof = r["roofline"]
+        mem = (r.get("memory_analysis") or {})
+        used = (mem.get("temp_size_in_bytes", 0)
+                + mem.get("argument_size_in_bytes", 0)) / 2**30
+        out.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:9s} "
+            f"{str(r.get('n_micro') or '-'):5s} "
+            f"{roof['compute_s']:10.4f} {roof['memory_s']:10.4f} "
+            f"{roof['collective_s']:10.4f} {roof['dominant']:>10s} "
+            f"{roof['useful_ratio']:7.3f} {used:8.2f}")
+    return "\n".join(out)
+
+
+def main(dryrun_dir="experiments/dryrun"):
+    rows = load(dryrun_dir)
+    if not rows:
+        print(f"roofline_table,0,no dryrun artifacts in {dryrun_dir} "
+              "(run python -m repro.launch.dryrun first)")
+        return
+    print(fmt_table(rows, mesh_filter="pod256"))
+    for r in rows:
+        roof = r["roofline"]
+        dom_s = max(roof["compute_s"], roof["memory_s"], roof["collective_s"])
+        print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},"
+              f"{dom_s*1e6:.1f},dominant={roof['dominant']};"
+              f"useful={roof['useful_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun")

@@ -1,0 +1,73 @@
+"""Benchmark harness — one benchmark per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only name,...]
+
+Each benchmark runs in its own subprocess (device counts must be set before
+jax initializes) and prints ``name,us_per_call,derived`` CSV rows.
+
+  weak_scaling     paper Fig. 1  (2 MiB/rank, rank-count sweep)
+  msg_sweep        paper Fig. 2  (message-size sweep + Eq. 3 break-even)
+  breakeven_model  paper Eq. 1-3 (T_init / T_persist / T_MPI table)
+  sparse_pattern   paper Fig. 3/4 (hugetrace-like irregular patterns)
+  moe_dispatch     framework integration (persistent vs per-call vs gspmd)
+  compression      int8 error-feedback gradient all-reduce
+  roofline_table   renders experiments/dryrun artifacts (§Roofline)
+"""
+
+import argparse
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+SRC = os.path.abspath(os.path.join(HERE, "..", "src"))
+
+BENCHES = [
+    ("weak_scaling", []),
+    ("msg_sweep", []),
+    ("breakeven_model", []),
+    ("sparse_pattern", []),
+    ("moe_dispatch", []),
+    ("compression", []),
+    ("roofline_table", []),
+]
+
+QUICK_ITERS = {"weak_scaling": None, "msg_sweep": "8", "breakeven_model": "8",
+               "sparse_pattern": "8", "moe_dispatch": "5", "compression": "5"}
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true", help="fewer iterations")
+    p.add_argument("--only", default=None, help="comma list of benchmarks")
+    args = p.parse_args(argv)
+
+    only = set(args.only.split(",")) if args.only else None
+    env = dict(os.environ,
+               PYTHONPATH=SRC + os.pathsep + HERE
+               + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    os.makedirs("experiments/bench", exist_ok=True)
+
+    failures = []
+    for name, extra in BENCHES:
+        if only and name not in only:
+            continue
+        cmd = [sys.executable, os.path.join(HERE, name + ".py")] + extra
+        if args.quick and QUICK_ITERS.get(name):
+            cmd.append(QUICK_ITERS[name])
+        print(f"# === {name} ===", flush=True)
+        r = subprocess.run(cmd, env=env, text=True, capture_output=True)
+        sys.stdout.write(r.stdout)
+        if r.returncode != 0:
+            failures.append(name)
+            sys.stderr.write(r.stderr[-3000:])
+            print(f"# {name} FAILED", flush=True)
+    if failures:
+        print(f"# benchmark failures: {failures}")
+        return 1
+    print("# all benchmarks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,93 @@
+"""Benchmark (paper Fig. 1): weak scaling at fixed bytes per process.
+
+The paper holds 2,097,152 bytes per process and sweeps 28 -> 448 processes;
+here rank counts sweep over host devices (subprocess re-invokes per count,
+since the device count is fixed at jax init).  Reproduction targets:
+fence-persistent beats the baseline and the gap widens with rank count;
+lock-persistent trails fence.
+"""
+
+import os
+import subprocess
+import sys
+
+BYTES_PER_RANK = 2_097_152
+
+
+def run_one(n_ranks: int, iters: int, bytes_per_rank: int):
+    from _util import Csv, set_host_devices, time_call
+    set_host_devices(n_ranks)
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import alltoallv_init
+    from repro.core.baseline import make_nonpersistent
+    from repro.core import metadata as md
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(n_ranks)
+    feature = 256
+    rows_total = max(bytes_per_rank // (feature * 4), n_ranks)
+    rows_per_pair = max(rows_total // n_ranks, 1)
+    counts = np.full((n_ranks, n_ranks), rows_per_pair, np.int64)
+    send_rows = md.round_up(md.max_total_send(counts), 8)
+    x = jax.device_put(
+        jnp.asarray(np.random.default_rng(0).standard_normal(
+            (n_ranks * send_rows, feature)), jnp.float32),
+        NamedSharding(mesh, P("x")))
+
+    csv = Csv()
+    plans = {v: alltoallv_init(counts, (feature,), jnp.float32, mesh,
+                               axis="x", variant=v).compile()
+             for v in ("fence", "lock")}
+    base = make_nonpersistent(
+        mesh, axis="x", p=n_ranks, capacity=plans["fence"].capacity,
+        send_rows=send_rows, recv_rows=plans["fence"].recv_rows,
+        feature_shape=(feature,), dtype=jnp.float32)
+    cnts = jax.device_put(jnp.asarray(counts.reshape(-1), jnp.int32),
+                          NamedSharding(mesh, P("x")))
+
+    t = time_call(lambda: base(x, cnts), iters)
+    csv.row(f"weak_scaling/baseline/p{n_ranks}", t * 1e6,
+            f"bytes_per_rank={bytes_per_rank}")
+    for v, plan in plans.items():
+        t = time_call(lambda: plan.start(x), iters)
+        csv.row(f"weak_scaling/{v}_persistent/p{n_ranks}", t * 1e6,
+                f"bytes_per_rank={bytes_per_rank}")
+
+
+def main(rank_counts=(2, 4, 8, 16), iters=20,
+         bytes_per_rank=BYTES_PER_RANK,
+         out="experiments/bench/weak_scaling.csv"):
+    rows = []
+    for n in rank_counts:
+        r = subprocess.run(
+            [sys.executable, os.path.abspath(__file__), "child",
+             str(n), str(iters), str(bytes_per_rank)],
+            capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            env=dict(os.environ, PYTHONPATH=os.path.abspath(
+                os.path.join(os.path.dirname(__file__), "..", "src"))
+                + os.pathsep + os.path.dirname(os.path.abspath(__file__))))
+        if r.returncode != 0:
+            print(r.stdout)
+            print(r.stderr[-2000:], file=sys.stderr)
+            raise RuntimeError(f"weak_scaling child p={n} failed")
+        for line in r.stdout.splitlines():
+            if line.startswith("weak_scaling/"):
+                print(line, flush=True)
+                rows.append(line.split(","))
+    if out:
+        os.makedirs(os.path.dirname(out), exist_ok=True)
+        with open(out, "w") as f:
+            f.write("name,us_per_call,derived\n")
+            f.writelines(",".join(r) + "\n" for r in rows)
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "child":
+        run_one(int(sys.argv[2]), int(sys.argv[3]), int(sys.argv[4]))
+    else:
+        main()

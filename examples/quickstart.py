@@ -1,0 +1,31 @@
+"""Quickstart: train a small LM for a few steps and watch the loss drop.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.configs import ShapeConfig, get_reduced
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_mesh
+from repro.train import ScheduleConfig, Trainer, TrainerConfig
+
+
+def main():
+    cfg = get_reduced("olmo-1b")                      # 4L/128d smoke config
+    shape = ShapeConfig("quickstart", "train", seq_len=128, global_batch=8)
+    mesh = make_mesh((1, 1), ("data", "model"))       # single device
+
+    bundle = steps_mod.make_train_bundle(
+        cfg, shape, mesh,
+        sched=ScheduleConfig(kind="cosine", peak_lr=3e-3, warmup_steps=5,
+                             total_steps=50))
+    trainer = Trainer(bundle, TrainerConfig(n_steps=50, log_every=10))
+    result = trainer.run()
+
+    first = trainer.history[0]["nll"]
+    last = trainer.history[-1]["nll"]
+    print(f"\nnll {first:.3f} -> {last:.3f} over {result['final_step']} steps")
+    assert last < first
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Batched serving: prefill a batch of prompts, decode with persistent KV
+caches (donated buffers = window reuse), report throughput.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.launch.mesh import make_mesh
+from repro.serve import ServeEngine
+
+
+def main():
+    cfg = get_reduced("minicpm-2b")
+    mesh = make_mesh((1, 1), ("data", "model"))
+    batch, prompt_len, n_tokens = 4, 32, 16
+
+    engine = ServeEngine(cfg, mesh, batch=batch, prompt_len=prompt_len,
+                         max_seq=prompt_len + n_tokens + 8, seed=0)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (batch, prompt_len)).astype(np.int32)
+
+    tokens, stats = engine.generate(prompts, n_tokens)
+    print(f"prompts {prompts.shape} -> generated {tokens.shape}")
+    print(f"prefill: {stats.prefill_seconds*1e3:.1f} ms")
+    print(f"decode:  {stats.decode_seconds_per_token*1e3:.2f} ms/token "
+          f"({batch / max(stats.decode_seconds_per_token, 1e-9):.1f} tok/s batched)")
+    print("first sequences:", tokens[:2].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Checkpointing: atomic save/restore + elastic resharding."""
+
+from . import manager, reshard
+from .manager import CheckpointManager
+from .reshard import load_to_mesh, put_tree
+
+__all__ = ["manager", "reshard", "CheckpointManager", "load_to_mesh", "put_tree"]

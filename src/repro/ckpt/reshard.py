@@ -1,0 +1,40 @@
+"""Elastic resharding: restore a checkpoint onto a different mesh.
+
+The manifest stores logical (mesh-free) arrays, so loading onto any mesh is
+a device_put against that mesh's shardings.  This is the elastic-scaling
+path: train on (2,16,16), lose a pod, resume on (16,16) — the sharding trees
+are recomputed from the same logical specs under the new mesh."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+
+def put_tree(host_tree, shardings_tree, dtype_tree=None):
+    """device_put each leaf against its sharding (resharding as needed)."""
+    def put(x, s, d=None):
+        arr = jnp.asarray(x, d) if d is not None else jnp.asarray(x)
+        return jax.device_put(arr, s)
+    if dtype_tree is None:
+        return jax.tree.map(put, host_tree, shardings_tree)
+    return jax.tree.map(put, host_tree, shardings_tree, dtype_tree)
+
+
+def load_to_mesh(manager, mesh: Mesh, shardings: dict[str, Any],
+                 step: int | None = None):
+    """Load + place: shardings = {"params": tree, "opt": tree, ...} built
+    under the TARGET mesh.  Returns (step, {"name": device tree}, extras)."""
+    step, host_trees, extras = manager.load(step)
+    if step is None:
+        return None, None, None
+    placed = {}
+    for name, tree in host_trees.items():
+        if name in shardings:
+            placed[name] = put_tree(tree, shardings[name])
+        else:
+            placed[name] = jax.tree.map(jnp.asarray, tree)
+    return step, placed, extras

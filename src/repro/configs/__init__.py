@@ -1,0 +1,11 @@
+"""Architecture configs (assigned pool) + shape cells + registry."""
+
+from .base import (SHAPES, MambaConfig, ModelConfig, MoEConfig, ShapeConfig,
+                   XLSTMConfig, reduced)
+from .registry import ARCHS, cells, get, get_reduced, list_archs, shape_skip_reason
+
+__all__ = [
+    "SHAPES", "MambaConfig", "ModelConfig", "MoEConfig", "ShapeConfig",
+    "XLSTMConfig", "reduced",
+    "ARCHS", "cells", "get", "get_reduced", "list_archs", "shape_skip_reason",
+]

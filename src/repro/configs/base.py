@@ -1,0 +1,150 @@
+"""Model / run configuration dataclasses.
+
+One ``ModelConfig`` describes any architecture in the assigned pool; the
+``family`` field selects the block structure (dense / moe / ssm / hybrid /
+vlm / audio).  ``ShapeConfig`` describes one assigned input-shape cell.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int                 # FFN hidden size per expert
+    every_k_layers: int = 1       # MoE layer cadence (jamba: 2)
+    n_shared_experts: int = 0     # moonshot/deepseek-style shared experts
+    capacity_factor: float = 1.25
+    router_z_loss: float = 1e-3
+    aux_loss: float = 1e-2
+    # dispatch implementation: persistent_a2a (paper technique) |
+    # nonpersistent_a2a (per-call metadata baseline) | dense_einsum (GShard)
+    dispatch: str = "persistent_a2a"
+    a2a_variant: str = "fence"    # fence | lock | fence_hierarchy
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: Optional[int] = None  # default ceil(d_model / 16)
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    # block pattern: 1 = sLSTM, 0 = mLSTM; xLSTM[7:1] paper notation
+    slstm_every: int = 2           # every 2nd block is sLSTM
+    qk_dim_factor: float = 0.5
+    proj_factor: float = 1.3333
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: Optional[int] = None   # default d_model // n_heads
+    norm: str = "rmsnorm"          # rmsnorm | layernorm | nonparametric_ln
+    activation: str = "swiglu"     # swiglu | squared_relu | gelu
+    moe: Optional[MoEConfig] = None
+    mamba: Optional[MambaConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    attn_every: int = 1            # hybrid (jamba): attention layer cadence (8)
+    rope_theta: Optional[float] = 10000.0   # None = no positional encoding (jamba)
+    max_seq: int = 8192
+    tie_embeddings: bool = False
+    # mup-ish scaling knobs (minicpm)
+    embed_scale: float = 1.0
+    residual_scale: float = 1.0
+    logit_scale: float = 1.0
+    qk_norm: bool = False
+    # encoder-decoder (whisper)
+    encdec: bool = False
+    n_enc_layers: int = 0
+    # modality frontend stub: none | audio_frames | vision_patches
+    frontend: str = "none"
+    frontend_dim: int = 0          # raw stub embedding dim (pre-projector)
+    frontend_len: int = 0          # frames/patches per example
+    param_dtype: str = "bfloat16"
+    source: str = ""               # provenance note [arXiv / hf]
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head is not None else self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding/logits tables padded to 256 (Megatron-style) so the
+        vocab dim always divides the model axis; logits for pad ids are
+        masked to -inf in lm_logits."""
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """Eligible for long_500k (SSM / hybrid: state-space decode path)."""
+        return self.family in ("ssm", "hybrid")
+
+    def layer_kind(self, i: int) -> str:
+        """Block type at depth i, covering dense/moe/hybrid interleaves."""
+        if self.family == "ssm":
+            assert self.xlstm is not None
+            return "slstm" if (i % self.xlstm.slstm_every) == (self.xlstm.slstm_every - 1) else "mlstm"
+        if self.family == "hybrid":
+            # jamba: attention every `attn_every` layers, mamba otherwise;
+            # MoE replaces the MLP every `every_k_layers`.
+            return "attn" if (i % self.attn_every) == (self.attn_every // 2) else "mamba"
+        return "attn"
+
+    def is_moe_layer(self, i: int) -> bool:
+        return self.moe is not None and (i % self.moe.every_k_layers) == (self.moe.every_k_layers - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str                      # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str                      # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524_288, 1),
+}
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Smoke-test variant: same family/block structure, tiny dimensions."""
+    small: dict = dict(
+        n_layers=min(cfg.n_layers, 4 if cfg.family != "hybrid" else 8),
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 4) if cfg.n_kv_heads < cfg.n_heads else 4,
+        d_head=32,
+        d_ff=256 if cfg.d_ff else 0,
+        vocab_size=512,
+        max_seq=256,
+        param_dtype="float32",
+    )
+    if cfg.moe is not None:
+        small["moe"] = dataclasses.replace(
+            cfg.moe, n_experts=8, top_k=min(cfg.moe.top_k, 2), d_expert=64)
+    if cfg.frontend != "none":
+        small["frontend_dim"] = 64
+        small["frontend_len"] = 16
+    if cfg.encdec:
+        small["n_enc_layers"] = 2
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)

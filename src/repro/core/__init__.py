@@ -1,0 +1,20 @@
+"""Persistent RMA-style Alltoallv for JAX/TPU (the paper's contribution).
+
+Public surface:
+    alltoallv_init / AlltoallvPlan.start / .wait / .free   persistent path
+    baseline.make_nonpersistent                            MPI_Alltoallv stand-in
+    breakeven                                              Eq. 1-3 model
+    reference.alltoallv_global                             numpy oracle
+"""
+
+from .api import alltoallv_init, global_plan_cache, reset_global_plan_cache
+from .plan import AlltoallvPlan, AlltoallvSpec, PlanCache, VARIANTS
+from .window import Window, WindowCache
+from . import baseline, breakeven, metadata, reference, variants
+
+__all__ = [
+    "alltoallv_init", "global_plan_cache", "reset_global_plan_cache",
+    "AlltoallvPlan", "AlltoallvSpec", "PlanCache", "VARIANTS",
+    "Window", "WindowCache",
+    "baseline", "breakeven", "metadata", "reference", "variants",
+]

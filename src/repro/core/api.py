@@ -1,0 +1,62 @@
+"""Public persistent-alltoallv API: INIT / START / WAIT / FREE.
+
+    plan = alltoallv_init(send_counts, feature_shape, dtype, mesh,
+                          axis="x", variant="fence")
+    recv = plan.start(sendbuf)     # async launch (epoch open + puts)
+    recv = plan.wait(recv)         # epoch close
+    ...
+    plan.free()
+
+For embedding inside a larger shard_map program (MoE dispatch), use
+``plan.shard_fn`` or the traced helpers in ``repro.models.moe``.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from .plan import AlltoallvPlan, AlltoallvSpec, PlanCache
+from .window import WindowCache
+
+_GLOBAL_CACHE = PlanCache()
+
+
+def alltoallv_init(
+    send_counts: np.ndarray,
+    feature_shape: Sequence[int],
+    dtype,
+    mesh: jax.sharding.Mesh,
+    axis: str | Sequence[str] = "x",
+    variant: str = "fence",
+    lock_schedule: str = "ring",
+    tile_rows: int | None = None,
+    pack_impl: str = "jnp",
+    cache: PlanCache | None = None,
+) -> AlltoallvPlan:
+    """Build (or fetch from cache) a persistent plan for a frozen pattern."""
+    from . import metadata as md
+
+    axis_t = (axis,) if isinstance(axis, str) else tuple(axis)
+    spec = AlltoallvSpec(
+        send_counts=np.asarray(send_counts, np.int64),
+        feature_shape=tuple(int(s) for s in feature_shape),
+        dtype=dtype,
+        axis=axis_t,
+        variant=variant,
+        lock_schedule=lock_schedule,
+        tile_rows=tile_rows if tile_rows is not None else md.TILE_ROWS,
+        pack_impl=pack_impl,
+    )
+    return (cache or _GLOBAL_CACHE).get(spec, mesh)
+
+
+def global_plan_cache() -> PlanCache:
+    return _GLOBAL_CACHE
+
+
+def reset_global_plan_cache() -> None:
+    global _GLOBAL_CACHE
+    _GLOBAL_CACHE = PlanCache()

@@ -1,0 +1,74 @@
+"""Break-even model for persistence (paper Eq. 1-3).
+
+    T_persist_total = T_init + N * T_persist          (1)
+    T_base_total    = N * T_MPI                        (2)
+    N_breakeven     = ceil(T_init / (T_MPI - T_persist))   (3)
+
+On JAX the one-time cost has two components with very different magnitudes:
+host-side metadata (microseconds, the paper's regime) and trace+compile of
+the specialized executable (seconds, TPU-specific).  Both are reported; the
+`include_compile` flag selects which enters Eq. 3.  A warm PlanCache (the
+common production case: the same pattern recurs across steps/restarts) pays
+neither.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class BreakEven:
+    t_init: float                 # one-time INIT cost (seconds)
+    t_persist: float              # per-iteration start+wait (seconds)
+    t_mpi: float                  # per-iteration non-persistent (seconds)
+    n_breakeven: float            # iterations to amortize; inf if no gain
+
+    @property
+    def delta(self) -> float:
+        return self.t_mpi - self.t_persist
+
+    @property
+    def savings_pct(self) -> float:
+        return 100.0 * self.delta / self.t_mpi if self.t_mpi > 0 else 0.0
+
+    def total_persistent(self, n: int) -> float:
+        return self.t_init + n * self.t_persist
+
+    def total_baseline(self, n: int) -> float:
+        return n * self.t_mpi
+
+
+def n_breakeven(t_init: float, t_mpi: float, t_persist: float) -> float:
+    """Eq. 3; math.inf when persistence never pays off."""
+    delta = t_mpi - t_persist
+    if delta <= 0:
+        return math.inf
+    return math.ceil(t_init / delta) if t_init > 0 else 1
+
+
+def measure(run_persistent: Callable[[], jax.Array],
+            run_baseline: Callable[[], jax.Array],
+            t_init: float,
+            iters: int = 50,
+            warmup: int = 5) -> BreakEven:
+    """Time both paths (block_until_ready per call, max-style like MPI_MAX
+    reduction is implicit: single-process host timing covers all shards)."""
+    for _ in range(warmup):
+        jax.block_until_ready(run_persistent())
+        jax.block_until_ready(run_baseline())
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(run_persistent())
+    t_persist = (time.perf_counter() - t0) / iters
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(run_baseline())
+    t_mpi = (time.perf_counter() - t0) / iters
+    return BreakEven(t_init=t_init, t_persist=t_persist, t_mpi=t_mpi,
+                     n_breakeven=n_breakeven(t_init, t_mpi, t_persist))

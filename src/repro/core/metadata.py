@@ -1,0 +1,200 @@
+"""INIT-phase metadata for persistent alltoallv plans.
+
+Everything here is the JAX/TPU rendition of what the paper's
+``ALLTOALLV_RMA_*_INIT`` routines compute once and cache in the persistent
+``MPIX_Request``:
+
+  * the recv-count matrix (the ``MPI_Alltoall(sendcounts)`` exchange — on a
+    host-known pattern this is just the transpose),
+  * send/recv displacements in row units (``sdispls``/``rdispls``),
+  * remote put displacements (``put_displs`` — where my data lands inside each
+    target's exposed window),
+  * the capacity schedule that converts a ragged pattern into the statically
+    shaped, tile-aligned layout XLA requires (global capacity for the fused
+    fence collective, per-round capacities for the lock schedule, and the
+    two-stage capacities for the hierarchical variant),
+  * pack/unpack gather index maps (constants once the pattern is frozen).
+
+All of it is plain numpy: it runs on host at INIT time and is baked into the
+compiled START executable as constants — that is precisely the persistence
+win on TPU (a non-persistent call recomputes these in-graph every iteration).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Sequence
+
+import numpy as np
+
+# Rows are padded to multiples of this so MXU/VPU tiles stay aligned when the
+# row width is itself 128-lane aligned.  8 sublanes * fp32 is the minimal TPU
+# tile height; capacity buckets are rounded up to it.
+TILE_ROWS = 8
+
+
+def _as_counts(counts: np.ndarray) -> np.ndarray:
+    c = np.asarray(counts)
+    if c.ndim != 2 or c.shape[0] != c.shape[1]:
+        raise ValueError(f"counts must be square [P, P], got {c.shape}")
+    if np.any(c < 0):
+        raise ValueError("counts must be non-negative")
+    return c.astype(np.int64)
+
+
+def round_up(x: int, q: int) -> int:
+    return int(-(-int(x) // q) * q)
+
+
+def recv_counts(send_counts: np.ndarray) -> np.ndarray:
+    """recv_counts[i, j] = rows rank i receives from rank j.
+
+    The device-side equivalent is one int32 ``all_to_all`` at INIT time (the
+    paper's ``MPI_Alltoall`` over counts); for a host-known pattern it is the
+    transpose of the send matrix.
+    """
+    return _as_counts(send_counts).T.copy()
+
+
+def displacements(counts: np.ndarray) -> np.ndarray:
+    """Exclusive prefix sum per row: displs[i, j] = offset of peer j's block."""
+    c = _as_counts(counts)
+    return np.concatenate(
+        [np.zeros((c.shape[0], 1), np.int64), np.cumsum(c, axis=1)[:, :-1]], axis=1
+    )
+
+
+def put_displacements(send_counts: np.ndarray) -> np.ndarray:
+    """put_displs[i, j] = offset inside rank j's window where rank i's data lands.
+
+    This is the metadata the paper obtains with ``MPI_Alltoall(rdispls)``:
+    rank j's window is laid out in sender order, so rank i's block starts at
+    rank j's rdispls[j, i].
+    """
+    rc = recv_counts(send_counts)
+    rd = displacements(rc)
+    return rd.T.copy()  # [sender i, target j]
+
+
+def global_capacity(send_counts: np.ndarray, tile_rows: int = TILE_ROWS) -> int:
+    """Capacity of one per-peer bucket for the fused (fence) layout."""
+    c = _as_counts(send_counts)
+    return max(round_up(int(c.max(initial=0)), tile_rows), tile_rows)
+
+
+def ring_round_capacities(
+    send_counts: np.ndarray, tile_rows: int = TILE_ROWS
+) -> np.ndarray:
+    """Per-round payload capacity for the lock (pairwise ring) schedule.
+
+    Round r in [1, P) exchanges rank i -> rank (i + r) % P.  The round's
+    shape must be uniform across ranks, so its capacity is the max count on
+    that diagonal — the TPU expression of the paper's observation that one
+    hot target gates the whole lock epoch.
+    """
+    c = _as_counts(send_counts)
+    p = c.shape[0]
+    caps = np.zeros(p, np.int64)
+    for r in range(1, p):
+        diag = c[np.arange(p), (np.arange(p) + r) % p]
+        caps[r] = max(round_up(int(diag.max(initial=0)), tile_rows), tile_rows)
+    return caps
+
+
+def hierarchy_shape(p: int, p_outer: int) -> tuple[int, int]:
+    if p % p_outer != 0:
+        raise ValueError(f"axis size {p} not divisible by outer factor {p_outer}")
+    return p_outer, p // p_outer
+
+
+def total_rows(counts_row: np.ndarray) -> int:
+    return int(np.sum(counts_row))
+
+
+def max_total_send(send_counts: np.ndarray) -> int:
+    return int(_as_counts(send_counts).sum(axis=1).max(initial=0))
+
+
+def max_total_recv(send_counts: np.ndarray) -> int:
+    return int(_as_counts(send_counts).sum(axis=0).max(initial=0))
+
+
+def pack_index_map(
+    counts_row: np.ndarray, displs_row: np.ndarray, capacity: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Gather map ragged-send-buffer -> bucketed [P * capacity] layout.
+
+    Returns (src_idx, valid) with src_idx[t] the source row feeding packed row
+    t and valid[t] the padding mask.  With a frozen pattern both are numpy
+    constants, so the persistent executable embeds them; the non-persistent
+    path recomputes the same map from traced counts every call.
+    """
+    p = counts_row.shape[0]
+    t = np.arange(p * capacity, dtype=np.int64)
+    peer = t // capacity
+    k = t % capacity
+    cnt = counts_row[peer]
+    valid = k < cnt
+    src = displs_row[peer] + np.minimum(k, np.maximum(cnt - 1, 0))
+    return np.where(valid, src, 0).astype(np.int32), valid
+
+
+def unpack_index_map(
+    recv_counts_row: np.ndarray,
+    rdispls_row: np.ndarray,
+    capacity: int,
+    out_rows: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Gather map bucketed recv layout [P * capacity] -> ragged recv buffer."""
+    p = recv_counts_row.shape[0]
+    m = np.arange(out_rows, dtype=np.int64)
+    # peer owning output row m: last j with rdispls[j] <= m (rows are laid out
+    # in sender order, contiguously).
+    edges = np.concatenate([rdispls_row, [rdispls_row[-1] + recv_counts_row[-1]]])
+    peer = np.clip(np.searchsorted(edges, m, side="right") - 1, 0, p - 1)
+    within = m - rdispls_row[peer]
+    valid = within < recv_counts_row[peer]
+    src = peer * capacity + np.minimum(within, capacity - 1)
+    return np.where(valid, src, 0).astype(np.int32), valid
+
+
+@dataclasses.dataclass(frozen=True)
+class PatternSignature:
+    """Hashable identity of a communication pattern (the plan-cache key).
+
+    Mirrors the paper's window-reuse rule: a plan (and its window) is reused
+    while the pattern — and hence ``total_recv_bytes`` — is unchanged; any
+    change in counts/shape/dtype forces re-INIT.
+    """
+
+    digest: str
+    p: int
+    feature_shape: tuple[int, ...]
+    dtype: str
+    variant: str
+    axis: tuple[str, ...]
+    total_recv_bytes: int
+
+    @staticmethod
+    def build(
+        send_counts: np.ndarray,
+        feature_shape: Sequence[int],
+        dtype,
+        variant: str,
+        axis: Sequence[str],
+        row_bytes: int,
+    ) -> "PatternSignature":
+        c = _as_counts(send_counts)
+        h = hashlib.sha1()
+        h.update(c.tobytes())
+        h.update(str((tuple(feature_shape), str(dtype), variant, tuple(axis))).encode())
+        return PatternSignature(
+            digest=h.hexdigest()[:16],
+            p=c.shape[0],
+            feature_shape=tuple(int(s) for s in feature_shape),
+            dtype=str(dtype),
+            variant=variant,
+            axis=tuple(axis),
+            total_recv_bytes=int(c.sum()) * row_bytes,
+        )

@@ -1,0 +1,266 @@
+"""AlltoallvPlan — the persistent ``MPIX_Request`` analogue.
+
+``alltoallv_init`` (api.py) builds a plan from a frozen communication
+pattern.  INIT performs, once:
+
+  1. the metadata exchange (recv counts, displacements, put displacements),
+  2. the capacity schedule (fence bucket size, per-round lock capacities,
+     hierarchy factorization),
+  3. window acquisition from the WindowCache (reused while total_recv_bytes
+     is unchanged, recreated otherwise — the paper's rule),
+  4. AOT lowering + compilation of the START executable with the metadata
+     baked in as constants and the window buffer donated.
+
+START then launches the compiled executable (JAX async dispatch returns
+immediately — genuine start semantics) and WAIT blocks on the result.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from . import metadata as md
+from . import variants
+from .window import Window, WindowCache
+
+VARIANTS = ("fence", "lock", "fence_hierarchy", "ragged")
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # eq=False: ndarray field
+class AlltoallvSpec:
+    """Frozen description of one alltoallv pattern (the INIT arguments)."""
+
+    send_counts: Any                      # [P, P] host array, rows = sender
+    feature_shape: tuple[int, ...]        # trailing dims of one row
+    dtype: Any
+    axis: tuple[str, ...]                 # 1 mesh axis, or (outer, inner)
+    variant: str = "fence"
+    lock_schedule: str = "ring"           # ring | pairwise
+    tile_rows: int = md.TILE_ROWS
+    pack_impl: str = "jnp"                # jnp | pallas
+
+    def __post_init__(self):
+        if self.variant not in VARIANTS:
+            raise ValueError(f"variant must be one of {VARIANTS}")
+        if self.variant == "fence_hierarchy" and len(self.axis) != 2:
+            raise ValueError("fence_hierarchy needs axis=(outer, inner)")
+        if self.variant != "fence_hierarchy" and len(self.axis) != 1:
+            raise ValueError(f"variant {self.variant} takes a single axis")
+
+
+class AlltoallvPlan:
+    """Persistent request object: metadata + window + compiled executable."""
+
+    def __init__(self, spec: AlltoallvSpec, mesh: jax.sharding.Mesh,
+                 window_cache: WindowCache | None = None):
+        self.spec = spec
+        self.mesh = mesh
+        t0 = time.perf_counter()
+
+        sc = np.asarray(spec.send_counts, dtype=np.int64)
+        self.p = sc.shape[0]
+        axis_sizes = [mesh.shape[a] for a in spec.axis]
+        p_mesh = int(np.prod(axis_sizes))
+        if p_mesh != self.p:
+            raise ValueError(
+                f"counts are {self.p}x{self.p} but axis {spec.axis} has size {p_mesh}")
+
+        # --- metadata exchange (host-side; the INIT-time MPI_Alltoall) ---
+        self.send_counts = sc
+        self.recv_counts = md.recv_counts(sc)
+        self.sdispls = md.displacements(sc)
+        self.rdispls = md.displacements(self.recv_counts)
+        self.put_displs = md.put_displacements(sc)
+
+        # --- capacity schedule ---
+        self.capacity = md.global_capacity(sc, spec.tile_rows)
+        self.round_capacities = (
+            md.ring_round_capacities(sc, spec.tile_rows)
+            if spec.variant == "lock" else None)
+        if spec.variant == "fence_hierarchy":
+            self.p_outer, self.p_inner = axis_sizes
+        else:
+            self.p_outer = self.p_inner = None
+
+        # --- buffer geometry (SPMD: padded to the max over ranks) ---
+        self.send_rows = max(
+            md.round_up(md.max_total_send(sc), spec.tile_rows), spec.tile_rows)
+        self.recv_rows = max(
+            md.round_up(md.max_total_recv(sc), spec.tile_rows), spec.tile_rows)
+
+        row_elems = int(np.prod(spec.feature_shape)) if spec.feature_shape else 1
+        row_bytes = row_elems * jnp.dtype(spec.dtype).itemsize
+        self.signature = md.PatternSignature.build(
+            sc, spec.feature_shape, spec.dtype, spec.variant, spec.axis, row_bytes)
+
+        # --- window (paper: reuse while total_recv_bytes unchanged) ---
+        self._window_cache = window_cache if window_cache is not None else WindowCache()
+        self.window: Window = self._window_cache.get(
+            self.recv_rows, spec.feature_shape, spec.dtype)
+
+        # --- constant metadata tables (baked into the executable) ---
+        self._sc_tbl = jnp.asarray(sc, jnp.int32)
+        self._sd_tbl = jnp.asarray(self.sdispls, jnp.int32)
+        self._rc_tbl = jnp.asarray(self.recv_counts, jnp.int32)
+        self._rd_tbl = jnp.asarray(self.rdispls, jnp.int32)
+        self._put_tbl = jnp.asarray(self.put_displs, jnp.int32)
+
+        self.shard_fn = self._build_shard_fn()
+        self._compiled = None
+        self._x_sharding = NamedSharding(self.mesh, P(spec.axis if len(spec.axis) > 1
+                                                      else spec.axis[0]))
+        self.init_host_seconds = time.perf_counter() - t0
+        self.init_compile_seconds = 0.0
+        self.starts = 0
+
+    # -- geometry ------------------------------------------------------------
+    @property
+    def global_send_shape(self) -> tuple[int, ...]:
+        return (self.p * self.send_rows,) + self.spec.feature_shape
+
+    @property
+    def global_recv_shape(self) -> tuple[int, ...]:
+        return (self.p * self.recv_rows,) + self.spec.feature_shape
+
+    def _axis_index(self) -> jax.Array:
+        ax = self.spec.axis
+        if len(ax) == 1:
+            return jax.lax.axis_index(ax[0])
+        return jax.lax.axis_index(ax[0]) * self.mesh.shape[ax[1]] + jax.lax.axis_index(ax[1])
+
+    # -- per-shard START body --------------------------------------------------
+    def _build_shard_fn(self) -> Callable:
+        spec = self.spec
+        p, cap = self.p, self.capacity
+        a2a_axis = spec.axis[0] if len(spec.axis) == 1 else None
+
+        if spec.pack_impl == "pallas":
+            from repro.kernels import ops as kops
+            pack, unpack = kops.pack, kops.unpack
+        else:
+            pack, unpack = variants.pack_rows, partial(variants.unpack_rows)
+
+        def shard_fn(x: jax.Array, window: jax.Array) -> jax.Array:
+            i = self._axis_index()
+            if spec.variant == "ragged":
+                return variants.ragged_exchange(
+                    x, window,
+                    self._sd_tbl[i], self._sc_tbl[i],
+                    self._put_tbl[i], self._rc_tbl[i], a2a_axis)
+
+            src, valid = variants.pack_index_map_in_graph(
+                self._sc_tbl[i], self._sd_tbl[i], p, cap)
+            packed = pack(x, src, valid)
+
+            if spec.variant == "fence":
+                buckets = variants.fence_exchange(packed, a2a_axis)
+            elif spec.variant == "lock":
+                buckets = variants.lock_exchange(
+                    packed, a2a_axis, p, cap,
+                    self.round_capacities, spec.lock_schedule)
+            else:  # fence_hierarchy
+                buckets = variants.hierarchy_exchange(
+                    packed, spec.axis[0], spec.axis[1],
+                    self.p_outer, self.p_inner, cap)
+
+            rsrc, rvalid = variants.unpack_index_map_in_graph(
+                self._rc_tbl[i], self._rd_tbl[i], p, cap, self.recv_rows)
+            out = unpack(buckets, rsrc, rvalid)
+            # Write-through into the window: padding keeps stale window bytes
+            # (real RMA semantics) and lets XLA alias the donated buffer.
+            mask = rvalid.reshape(rvalid.shape + (1,) * (out.ndim - 1))
+            return jnp.where(mask, out, window)
+
+        return shard_fn
+
+    # -- AOT compile ----------------------------------------------------------
+    def compile(self) -> "AlltoallvPlan":
+        if self._compiled is not None:
+            return self
+        t0 = time.perf_counter()
+        fn = jax.shard_map(
+            self.shard_fn, mesh=self.mesh,
+            in_specs=(self._x_sharding.spec, self._x_sharding.spec),
+            out_specs=self._x_sharding.spec, check_vma=False)
+        jitted = jax.jit(fn, donate_argnums=(1,))
+        x_s = jax.ShapeDtypeStruct(self.global_send_shape, self.spec.dtype,
+                                   sharding=self._x_sharding)
+        w_s = jax.ShapeDtypeStruct(self.global_recv_shape, self.spec.dtype,
+                                   sharding=self._x_sharding)
+        self._compiled = jitted.lower(x_s, w_s).compile()
+        self.init_compile_seconds = time.perf_counter() - t0
+        return self
+
+    # -- START / WAIT / FREE ----------------------------------------------------
+    def start(self, sendbuf: jax.Array) -> jax.Array:
+        """Launch one epoch. Returns the (async) recv buffer."""
+        self.compile()
+        win = self.window.materialize(self.global_recv_shape, self._x_sharding)
+        out = self._compiled(sendbuf, win)
+        self.window.adopt(out)   # donated-in, aliased-out: window reuse
+        self.starts += 1
+        return out
+
+    @staticmethod
+    def wait(recvbuf: jax.Array) -> jax.Array:
+        return jax.block_until_ready(recvbuf)
+
+    def free(self) -> None:
+        self._compiled = None
+        self.window.buffer = None
+
+    # -- reporting ----------------------------------------------------------
+    def metadata_summary(self) -> dict:
+        row_bytes = (int(np.prod(self.spec.feature_shape)) if self.spec.feature_shape
+                     else 1) * jnp.dtype(self.spec.dtype).itemsize
+        return {
+            "variant": self.spec.variant,
+            "p": self.p,
+            "capacity_rows": self.capacity,
+            "send_rows": self.send_rows,
+            "recv_rows": self.recv_rows,
+            "payload_bytes_per_rank": int(self.send_counts.sum(axis=1).max()) * row_bytes,
+            "padded_bytes_per_rank": self.p * self.capacity * row_bytes,
+            "total_recv_bytes": self.signature.total_recv_bytes,
+            "init_host_seconds": self.init_host_seconds,
+            "init_compile_seconds": self.init_compile_seconds,
+            "window_generation": self.window.generation,
+        }
+
+
+class PlanCache:
+    """Signature-keyed cache of plans (persistent requests) with statistics."""
+
+    def __init__(self, window_cache: WindowCache | None = None):
+        self._plans: dict[md.PatternSignature, AlltoallvPlan] = {}
+        self.window_cache = window_cache if window_cache is not None else WindowCache()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, spec: AlltoallvSpec, mesh: jax.sharding.Mesh) -> AlltoallvPlan:
+        row_elems = int(np.prod(spec.feature_shape)) if spec.feature_shape else 1
+        row_bytes = row_elems * jnp.dtype(spec.dtype).itemsize
+        sig = md.PatternSignature.build(
+            np.asarray(spec.send_counts), spec.feature_shape, spec.dtype,
+            spec.variant, spec.axis, row_bytes)
+        plan = self._plans.get(sig)
+        if plan is not None:
+            self.hits += 1
+            return plan
+        self.misses += 1
+        plan = AlltoallvPlan(spec, mesh, window_cache=self.window_cache)
+        self._plans[sig] = plan
+        return plan
+
+    @property
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses, "live": len(self._plans),
+                "window": self.window_cache.stats}

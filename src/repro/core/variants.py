@@ -1,0 +1,243 @@
+"""Per-shard collective backends for the persistent alltoallv engine.
+
+Each function runs *inside* ``jax.shard_map`` over the communication axis and
+implements one synchronization design from the paper, adapted to TPU:
+
+  fence            one fused ``lax.all_to_all`` over the capacity-bucketed
+                   layout — a single collective epoch, the analogue of the
+                   ``MPI_Win_fence`` pair bracketing all puts.
+  lock             (P-1) pairwise ``lax.ppermute`` rounds (ring or XOR
+                   pairwise schedule) — per-target epochs; each round's shape
+                   is gated by the hottest pair, reproducing the lock-queue
+                   serialization the paper measures under skew.
+  fence_hierarchy  two-stage exchange: the *remote* stage crosses the outer
+                   (pod / node) axis first with aggregated blocks, the *local*
+                   stage delivers within the group, and purely-local data
+                   bypasses the remote stage entirely so XLA overlaps it with
+                   the outer collective — the paper's remote-first put
+                   ordering.
+  ragged           ``lax.ragged_all_to_all`` — true variable-size exchange.
+                   XLA:TPU only (XLA:CPU has no ragged-all-to-all emitter);
+                   kept behind a flag for real-pod deployment and covered by
+                   lowering tests.
+
+All backends exchange a *bucketed* send layout ``[P * C, F]`` (or the ragged
+layout for ``ragged``) produced by ``pack``; ``unpack`` restores the ragged
+recv buffer.  Pack/unpack are the local data-movement hot spots and have
+Pallas kernel implementations (``repro.kernels``) selected via ``impl=``.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import metadata as md
+
+
+# ---------------------------------------------------------------------------
+# Local pack / unpack (jnp reference path; Pallas path lives in repro.kernels)
+# ---------------------------------------------------------------------------
+
+
+def pack_rows(x: jax.Array, src_idx: jax.Array, valid: jax.Array) -> jax.Array:
+    """Gather ragged send rows into the bucketed layout.
+
+    x:       [S, F...]   ragged send buffer (padded to the SPMD max)
+    src_idx: [P * C]     gather map (constant under a persistent plan)
+    valid:   [P * C]     padding mask
+    """
+    out = jnp.take(x, src_idx, axis=0)
+    mask = valid.reshape(valid.shape + (1,) * (out.ndim - 1))
+    return jnp.where(mask, out, jnp.zeros((), out.dtype))
+
+
+def unpack_rows(buckets: jax.Array, src_idx: jax.Array, valid: jax.Array) -> jax.Array:
+    """Gather bucketed recv layout back into the contiguous ragged buffer."""
+    out = jnp.take(buckets, src_idx, axis=0)
+    mask = valid.reshape(valid.shape + (1,) * (out.ndim - 1))
+    return jnp.where(mask, out, jnp.zeros((), out.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Fence: one fused collective epoch
+# ---------------------------------------------------------------------------
+
+
+def fence_exchange(packed: jax.Array, axis: str) -> jax.Array:
+    """[P * C, F] -> [P * C, F]; output bucket j holds rank j's data for us."""
+    return jax.lax.all_to_all(packed, axis, split_axis=0, concat_axis=0, tiled=True)
+
+
+# ---------------------------------------------------------------------------
+# Lock: per-target pairwise epochs
+# ---------------------------------------------------------------------------
+
+
+def lock_exchange(
+    packed: jax.Array,
+    axis: str,
+    p: int,
+    capacity: int,
+    round_capacities: Sequence[int],
+    schedule: str = "ring",
+) -> jax.Array:
+    """(P-1) serialized pairwise rounds; round r moves bucket (i -> i+r).
+
+    ``round_capacities[r]`` lets a *persistent* plan shrink each round to the
+    largest message actually exchanged in it — metadata a non-persistent call
+    cannot exploit (it must assume the global capacity every round).  The
+    Python loop is intentional: each round is its own collective with its own
+    static permutation, mirroring per-target lock epochs.
+    """
+    i = jax.lax.axis_index(axis)
+
+    # Local bucket: rank i's data for itself never leaves the chip.
+    local_blk = jax.lax.dynamic_slice_in_dim(packed, i * capacity, capacity, axis=0)
+    result = jnp.zeros_like(packed)
+    result = jax.lax.dynamic_update_slice_in_dim(result, local_blk, i * capacity, axis=0)
+    for r in range(1, p):
+        cap_r = int(round_capacities[r]) if round_capacities is not None else capacity
+        cap_r = min(cap_r, capacity)
+        if schedule == "ring":
+            perm = [(s, (s + r) % p) for s in range(p)]
+            tgt_of_src = (i + r) % p          # whom I send to this round
+            src_of_tgt = (i - r) % p          # who sends to me this round
+        elif schedule == "pairwise":
+            if p & (p - 1):
+                raise ValueError("pairwise schedule requires power-of-two P")
+            perm = [(s, s ^ r) for s in range(p)]
+            tgt_of_src = i ^ r
+            src_of_tgt = i ^ r
+        else:
+            raise ValueError(f"unknown lock schedule {schedule!r}")
+        # Slice my bucket for this round's target down to the round capacity.
+        send = jax.lax.dynamic_slice_in_dim(packed, tgt_of_src * capacity, capacity, 0)
+        send = jax.lax.slice_in_dim(send, 0, cap_r, axis=0)
+        recv = jax.lax.ppermute(send, axis, perm=perm)
+        pad = capacity - cap_r
+        if pad:
+            recv = jnp.pad(recv, [(0, pad)] + [(0, 0)] * (recv.ndim - 1))
+        result = jax.lax.dynamic_update_slice_in_dim(
+            result, recv, src_of_tgt * capacity, axis=0
+        )
+    return result
+
+
+# ---------------------------------------------------------------------------
+# Fence-hierarchy: remote stage first, local data bypasses it
+# ---------------------------------------------------------------------------
+
+
+def hierarchy_exchange(
+    packed: jax.Array,
+    outer_axis: str,
+    inner_axis: str,
+    p_outer: int,
+    p_inner: int,
+    capacity: int,
+) -> jax.Array:
+    """Two-stage alltoallv over a (P_outer, P_inner) factorization.
+
+    Global rank g = o * P_inner + q (outer-major).  Buckets arrive in global
+    target order [g, C, F].  Stage 1 (remote): exchange whole per-outer-group
+    slabs across ``outer_axis`` — P_outer messages of P_inner * C rows replace
+    P_outer * P_inner small ones (message aggregation, the hierarchy win).
+    Purely local slabs skip stage 1, so their stage-2 prep overlaps the outer
+    collective.  Stage 2 (local): deliver within the group across
+    ``inner_axis``.
+    """
+    f = packed.shape[1:]
+    # [target_outer, target_inner, C, F]
+    blocks = packed.reshape(p_outer, p_inner, capacity, *f)
+
+    # Stage 1 — remote puts first: slab for outer group `to` moves across the
+    # outer axis.  After the exchange, slab index = source outer rank.
+    remote = jax.lax.all_to_all(blocks, outer_axis, split_axis=0, concat_axis=0, tiled=True)
+    # remote[so, ti, C, F] = data from outer group `so` (same inner rank as
+    # ours) destined to inner rank ti within our outer group.
+
+    # Stage 2 — local delivery: exchange over the inner axis.  Axis 1 is the
+    # target-inner dimension of every slab.
+    out = jax.lax.all_to_all(remote, inner_axis, split_axis=1, concat_axis=1, tiled=True)
+    # out[so, si, C, F] = data from global rank (so, si) destined to us... but
+    # stage 2 moved axis-1 slices, so position si now indexes source inner rank.
+    return out.reshape(p_outer * p_inner, capacity, *f).reshape(
+        p_outer * p_inner * capacity, *f
+    )
+
+
+# ---------------------------------------------------------------------------
+# Ragged: true variable-size exchange (TPU execution only)
+# ---------------------------------------------------------------------------
+
+
+def ragged_exchange(
+    x: jax.Array,
+    window: jax.Array,
+    input_offsets: jax.Array,
+    send_sizes: jax.Array,
+    output_offsets: jax.Array,
+    recv_sizes: jax.Array,
+    axis: str,
+) -> jax.Array:
+    """Direct ``ragged_all_to_all`` into the persistent window buffer.
+
+    ``output_offsets`` are the paper's ``put_displs``: where my block lands in
+    each target's window.  The window operand is donated by the plan, so the
+    same device buffer is reused epoch over epoch (window reuse).
+    """
+    return jax.lax.ragged_all_to_all(
+        x, window, input_offsets, send_sizes, output_offsets, recv_sizes, axis_name=axis
+    )
+
+
+# ---------------------------------------------------------------------------
+# In-graph metadata exchange (the *non-persistent* path pays this per call)
+# ---------------------------------------------------------------------------
+
+
+def exchange_counts_in_graph(counts_row: jax.Array, axis: str) -> jax.Array:
+    """One int32 all_to_all: my send-count row -> my recv-count row.
+
+    The INIT-time ``MPI_Alltoall(sendcounts)``.  Persistent plans run this
+    once on host; the baseline re-runs it (plus all derived offset math) every
+    iteration.
+    """
+    return jax.lax.all_to_all(counts_row, axis, split_axis=0, concat_axis=0, tiled=True)
+
+
+def pack_index_map_in_graph(
+    counts_row: jax.Array, displs_row: jax.Array, p: int, capacity: int
+) -> tuple[jax.Array, jax.Array]:
+    """Traced twin of ``metadata.pack_index_map`` (per-call metadata work)."""
+    t = jnp.arange(p * capacity, dtype=jnp.int32)
+    peer = t // capacity
+    k = t % capacity
+    cnt = counts_row[peer]
+    valid = k < cnt
+    src = displs_row[peer] + jnp.minimum(k, jnp.maximum(cnt - 1, 0))
+    return jnp.where(valid, src, 0).astype(jnp.int32), valid
+
+
+def unpack_index_map_in_graph(
+    recv_counts_row: jax.Array, rdispls_row: jax.Array, p: int, capacity: int, out_rows: int
+) -> tuple[jax.Array, jax.Array]:
+    """Traced twin of ``metadata.unpack_index_map``."""
+    m = jnp.arange(out_rows, dtype=jnp.int32)
+    edges = jnp.concatenate(
+        [rdispls_row, (rdispls_row[-1] + recv_counts_row[-1])[None]]
+    )
+    peer = jnp.clip(jnp.searchsorted(edges, m, side="right") - 1, 0, p - 1)
+    within = m - rdispls_row[peer]
+    valid = within < recv_counts_row[peer]
+    src = peer * capacity + jnp.minimum(within, capacity - 1)
+    return jnp.where(valid, src, 0).astype(jnp.int32), valid
+
+
+def displacements_in_graph(counts_row: jax.Array) -> jax.Array:
+    z = jnp.zeros((1,), counts_row.dtype)
+    return jnp.concatenate([z, jnp.cumsum(counts_row)[:-1]])

@@ -1,0 +1,83 @@
+"""RMA window analogue: persistent, reusable device output buffers.
+
+The paper caches the ``MPI_Win`` between iterations and only recreates it
+when ``total_recv_bytes`` changes.  The JAX analogue is a long-lived device
+buffer that the START executable receives as a *donated* argument and whose
+storage XLA aliases for the new epoch's output: same bytes, same address
+lifecycle, zero per-iteration allocation.  Stale padding bytes persist across
+epochs exactly like uninitialized window memory does in real RMA.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class Window:
+    """One exposed receive buffer (per-rank rows x feature)."""
+
+    rows: int
+    feature_shape: tuple[int, ...]
+    dtype: Any
+    nbytes_per_rank: int
+    buffer: jax.Array | None = None  # global (sharded) array once materialized
+    generation: int = 0              # bumped every (re)create
+
+    @property
+    def shape_per_rank(self) -> tuple[int, ...]:
+        return (self.rows,) + self.feature_shape
+
+    def materialize(self, global_shape: tuple[int, ...], sharding) -> jax.Array:
+        if self.buffer is None or self.buffer.shape != global_shape:
+            self.buffer = jax.device_put(
+                jnp.zeros(global_shape, self.dtype), sharding
+            )
+            self.generation += 1
+        return self.buffer
+
+    def adopt(self, new_buffer: jax.Array) -> None:
+        """Adopt the epoch's output as the live window (post-donation)."""
+        self.buffer = new_buffer
+
+
+class WindowCache:
+    """Cache of windows keyed by (rows, feature, dtype) — the paper's
+    total_recv_bytes reuse rule, with hit/recreate statistics."""
+
+    def __init__(self) -> None:
+        self._windows: dict[tuple, Window] = {}
+        self.hits = 0
+        self.recreates = 0
+
+    def get(self, rows: int, feature_shape: tuple[int, ...], dtype) -> Window:
+        key = (rows, tuple(feature_shape), str(jnp.dtype(dtype)))
+        win = self._windows.get(key)
+        if win is not None:
+            self.hits += 1
+            return win
+        self.recreates += 1
+        row_elems = 1
+        for s in feature_shape:
+            row_elems *= s
+        win = Window(
+            rows=rows,
+            feature_shape=tuple(feature_shape),
+            dtype=dtype,
+            nbytes_per_rank=rows * row_elems * jnp.dtype(dtype).itemsize,
+        )
+        self._windows[key] = win
+        return win
+
+    def free(self) -> None:
+        for w in self._windows.values():
+            w.buffer = None
+        self._windows.clear()
+
+    @property
+    def stats(self) -> dict:
+        return {"hits": self.hits, "recreates": self.recreates, "live": len(self._windows)}

@@ -1,0 +1,8 @@
+"""Synthetic data + sharded host->device pipeline."""
+
+from . import pipeline, synthetic
+from .pipeline import DataPipeline
+from .synthetic import DataConfig, SyntheticTokens, stub_frontend_batch
+
+__all__ = ["pipeline", "synthetic", "DataPipeline", "DataConfig",
+           "SyntheticTokens", "stub_frontend_batch"]

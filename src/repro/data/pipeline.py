@@ -1,0 +1,81 @@
+"""Host -> device data feed with checkpointable position.
+
+Single-process here; on a real multi-host pod each host generates its own
+batch shard (the synthetic generator is seeded by (seed, step), and each
+host slices its local rows) and assembles the global array with
+``jax.make_array_from_process_local_data`` — the same interface this class
+exposes."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import resolve
+from .synthetic import DataConfig, SyntheticTokens, stub_frontend_batch
+
+
+class DataPipeline:
+    """Yields sharded device batches; ``state`` is just the step index."""
+
+    def __init__(self, cfg: ModelConfig, seq_len: int, global_batch: int,
+                 mesh: Optional[Mesh] = None, seed: int = 1234):
+        self.model_cfg = cfg
+        self.mesh = mesh
+        self.seq_len = seq_len
+        self.global_batch = global_batch
+        self.tokens = SyntheticTokens(DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=self._token_len(),
+            global_batch=global_batch, seed=seed))
+        self.step = 0
+
+    def _token_len(self) -> int:
+        cfg = self.model_cfg
+        if cfg.family == "audio":
+            return min(cfg.max_seq, 448)
+        if cfg.family == "vlm":
+            return self.seq_len - cfg.frontend_len
+        return self.seq_len
+
+    def _shard(self, arr: np.ndarray, axes: tuple) -> jax.Array:
+        if self.mesh is None:
+            return jnp.asarray(arr)
+        # resolve under THIS mesh (callers may be outside the trace context)
+        from repro.parallel.sharding import use_mesh
+        with use_mesh(self.mesh):
+            spec = resolve(axes, arr.shape)
+        return jax.device_put(arr, NamedSharding(self.mesh, spec))
+
+    def batch_at(self, step: int) -> dict:
+        cfg = self.model_cfg
+        out = {"tokens": self._shard(self.tokens.batch_at(step),
+                                     ("batch", "seq"))}
+        if cfg.family == "audio":
+            frames = stub_frontend_batch(step, self.global_batch, self.seq_len,
+                                         cfg.d_model)
+            out["frames"] = self._shard(frames.astype(np.float32),
+                                        ("batch", "seq", "embed"))
+        elif cfg.family == "vlm":
+            patches = stub_frontend_batch(step, self.global_batch,
+                                          cfg.frontend_len, cfg.frontend_dim)
+            out["patches"] = self._shard(patches.astype(np.float32),
+                                         ("batch", "seq", None))
+        return out
+
+    def __next__(self) -> dict:
+        b = self.batch_at(self.step)
+        self.step += 1
+        return b
+
+    # -- checkpointable state --
+    def state_dict(self) -> dict:
+        return {"step": self.step}
+
+    def load_state_dict(self, state: dict) -> None:
+        self.step = int(state["step"])

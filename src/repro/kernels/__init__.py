@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the alltoallv hot spots.
+
+gather_rows  masked row gather — the local pack/unpack data movement
+a2a_fence    one-sided bucketed alltoallv, fence (barrier) synchronization
+a2a_lock     one-sided bucketed alltoallv, passive-target synchronization
+ops          jitted wrappers (lane padding, interpret-mode selection)
+ref          pure-jnp oracles for all of the above
+"""
+
+from . import a2a_fence, a2a_lock, gather_rows, ops, ref
+
+__all__ = ["a2a_fence", "a2a_lock", "gather_rows", "ops", "ref"]

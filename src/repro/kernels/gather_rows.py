@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: masked row gather (the pack/unpack hot spot).
+
+Once metadata is amortized by persistence, per-epoch runtime is dominated by
+data movement (paper §5).  On TPU the local half of that movement is the
+ragged→bucketed pack and bucketed→ragged unpack: a gather of rows from HBM by
+a per-row index map.  This kernel streams the gather through VMEM:
+
+  grid step g handles TILE_R output rows; for each row it posts an async
+  HBM→VMEM copy of source row ``idx[g*TILE_R + r]`` into a VMEM scratch
+  tile, overlapping the TILE_R row DMAs, then masks padding rows and writes
+  the tile out.
+
+BlockSpec geometry: the feature width is padded to the 128-lane quantum by
+``ops.py``; tiles are (TILE_R, F_pad) so the VMEM working set is
+2 * TILE_R * F_pad * itemsize (scratch + out block), kept well under VMEM
+(e.g. TILE_R=64, F_pad=8192, fp32 → 4 MiB).
+
+The index map arrives via scalar prefetch (SMEM) so the DMA addresses are
+known ahead of the tile's execution; the validity mask arrives as a
+(TILE_R, 1) VMEM block and multiplies the tile (invalid rows gather row 0 and
+are zeroed).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_TILE_ROWS = 64
+
+
+def _gather_kernel(idx_ref, x_ref, valid_ref, out_ref, scratch, sems, *, tile_rows):
+    g = pl.program_id(0)
+
+    def start_row(r, _):
+        s = idx_ref[g * tile_rows + r]
+        pltpu.make_async_copy(x_ref.at[s], scratch.at[r], sems.at[r]).start()
+        return _
+
+    jax.lax.fori_loop(0, tile_rows, start_row, 0)
+
+    def wait_row(r, _):
+        s = idx_ref[g * tile_rows + r]
+        pltpu.make_async_copy(x_ref.at[s], scratch.at[r], sems.at[r]).wait()
+        return _
+
+    jax.lax.fori_loop(0, tile_rows, wait_row, 0)
+    out_ref[...] = scratch[...] * valid_ref[...].astype(scratch.dtype)
+
+
+def gather_rows(
+    x: jax.Array,          # [S, F_pad] source rows (HBM-resident)
+    idx: jax.Array,        # [N] int32 source row per output row
+    valid: jax.Array,      # [N] int32/bool padding mask
+    *,
+    tile_rows: int = DEFAULT_TILE_ROWS,
+    interpret: bool | object = False,
+) -> jax.Array:
+    n = idx.shape[0]
+    if n % tile_rows:
+        raise ValueError(f"N={n} must be a multiple of tile_rows={tile_rows}")
+    f = x.shape[1]
+    valid2d = valid.astype(jnp.int32).reshape(n, 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n // tile_rows,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),                       # x stays in HBM
+            pl.BlockSpec((tile_rows, 1), lambda g, idx: (g, 0)),     # valid tile
+        ],
+        out_specs=pl.BlockSpec((tile_rows, f), lambda g, idx: (g, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((tile_rows, f), x.dtype),
+            pltpu.SemaphoreType.DMA((tile_rows,)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_gather_kernel, tile_rows=tile_rows),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, f), x.dtype),
+        interpret=interpret,
+    )(idx, x, valid2d)

@@ -1,0 +1,96 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Handles TPU tiling constraints (128-lane feature padding, tile-divisible row
+counts), feature-shape flattening, and backend selection: on a real TPU the
+kernels compile natively; on CPU (this container, and unit tests) they run
+under the TPU interpreter (``interpret=True`` executes the kernel body,
+including inter-chip remote DMAs via shard_map, on host).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import gather_rows as _gather
+from . import a2a_fence as _fence
+from . import a2a_lock as _lock
+
+LANE = 128
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _interpret_default_rma():
+    """Remote DMAs/semaphores need the TPU interpreter, not the HLO one."""
+    if jax.default_backend() != "cpu":
+        return False
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.InterpretParams()
+
+
+def _pick_tile(n: int) -> int:
+    for t in (64, 32, 16, 8):
+        if n % t == 0:
+            return t
+    return 1
+
+
+def _flatten_features(x: jax.Array) -> tuple[jax.Array, tuple[int, ...]]:
+    feat = x.shape[1:]
+    return x.reshape(x.shape[0], -1) if len(feat) != 1 else x, feat
+
+
+def _pad_lanes(x2d: jax.Array) -> tuple[jax.Array, int]:
+    f = x2d.shape[1]
+    pad = (-f) % LANE
+    if pad:
+        x2d = jnp.pad(x2d, ((0, 0), (0, pad)))
+    return x2d, f
+
+
+def _masked_gather(x: jax.Array, idx: jax.Array, valid: jax.Array,
+                   interpret=None) -> jax.Array:
+    interpret = _interpret_default() if interpret is None else interpret
+    x2d, feat = _flatten_features(x)
+    x2d, f0 = _pad_lanes(x2d)
+    out = _gather.gather_rows(
+        x2d, idx.astype(jnp.int32), valid,
+        tile_rows=_pick_tile(idx.shape[0]), interpret=interpret)
+    out = out[:, :f0]
+    return out.reshape((idx.shape[0],) + feat)
+
+
+def pack(x: jax.Array, src_idx: jax.Array, valid: jax.Array,
+         interpret=None) -> jax.Array:
+    """Ragged send buffer -> capacity-bucketed layout (Pallas gather)."""
+    return _masked_gather(x, src_idx, valid, interpret)
+
+
+def unpack(buckets: jax.Array, src_idx: jax.Array, valid: jax.Array,
+           interpret=None) -> jax.Array:
+    """Bucketed recv layout -> contiguous ragged recv buffer (Pallas gather)."""
+    return _masked_gather(buckets, src_idx, valid, interpret)
+
+
+def rma_alltoallv(packed: jax.Array, *, variant: str, p: int, capacity: int,
+                  axis: str, mesh_axes: tuple[str, ...],
+                  interpret=None) -> jax.Array:
+    """One-sided bucketed alltoallv (call inside shard_map).
+
+    variant="fence": barrier-bracketed epoch, all puts overlapped.
+    variant="lock":  passive-target, serialized pairwise epochs.
+    """
+    interpret = _interpret_default_rma() if interpret is None else interpret
+    x2d, feat = _flatten_features(packed)
+    x2d, f0 = _pad_lanes(x2d)
+    kern = {"fence": _fence.rma_alltoallv_fence,
+            "lock": _lock.rma_alltoallv_lock}[variant]
+    out = kern(x2d, p=p, capacity=capacity, axis=axis, mesh_axes=mesh_axes,
+               interpret=interpret)
+    out = out[:, :f0]
+    return out.reshape((packed.shape[0],) + feat)

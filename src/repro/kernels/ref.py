@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's tests sweep shapes/dtypes and assert allclose against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def gather_rows_ref(x: jax.Array, idx: jax.Array, valid: jax.Array) -> jax.Array:
+    """Masked row gather: out[t] = valid[t] ? x[idx[t]] : 0."""
+    out = jnp.take(x, idx, axis=0)
+    mask = valid.astype(bool).reshape(valid.shape + (1,) * (out.ndim - 1))
+    return jnp.where(mask, out, jnp.zeros((), out.dtype))
+
+
+def a2a_bucketed_ref(packed_all: np.ndarray, p: int, capacity: int) -> np.ndarray:
+    """Global oracle for the bucketed exchange (fence and lock kernels share
+    identical functional semantics — only synchronization differs).
+
+    packed_all: [P, P*C, F...] every rank's bucketed send buffer.
+    returns:    [P, P*C, F...] where out[i, j*C:(j+1)*C] = packed[j, i*C:(i+1)*C].
+    """
+    out = np.zeros_like(packed_all)
+    for i in range(p):
+        for j in range(p):
+            out[i, j * capacity:(j + 1) * capacity] = \
+                packed_all[j, i * capacity:(i + 1) * capacity]
+    return out
+
+
+def pack_ref(x: jax.Array, src_idx: jax.Array, valid: jax.Array) -> jax.Array:
+    return gather_rows_ref(x, src_idx, valid)
+
+
+def unpack_ref(buckets: jax.Array, src_idx: jax.Array, valid: jax.Array) -> jax.Array:
+    return gather_rows_ref(buckets, src_idx, valid)

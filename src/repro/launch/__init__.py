@@ -1,0 +1,5 @@
+"""Launchers: mesh construction, step bundles, dry-run, train/serve CLIs."""
+
+from . import mesh, steps
+
+__all__ = ["mesh", "steps"]

@@ -1,0 +1,89 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmoe-1b-7b \
+        --reduced --steps 20 --mesh 1,1 --ckpt-dir /tmp/ckpt
+
+Full-size configs on the production mesh are exercised through the dry-run
+(this container has one real device); ``--reduced`` runs the same code path
+end-to-end with the smoke-scale config.
+"""
+
+from __future__ import annotations
+
+import argparse
+import logging
+
+import jax
+
+
+def main(argv=None) -> dict:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--shape", default="train_4k")
+    p.add_argument("--reduced", action="store_true",
+                   help="smoke-scale config (CPU-runnable)")
+    p.add_argument("--steps", type=int, default=20)
+    p.add_argument("--global-batch", type=int, default=None)
+    p.add_argument("--seq-len", type=int, default=None)
+    p.add_argument("--mesh", default="1,1",
+                   help="data,model (2 dims) or pod,data,model (3)")
+    p.add_argument("--dispatch", default=None,
+                   choices=["persistent_a2a", "nonpersistent_a2a", "gspmd"])
+    p.add_argument("--a2a-variant", default=None,
+                   choices=["fence", "lock", "fence_hierarchy"])
+    p.add_argument("--schedule", default=None,
+                   choices=["cosine", "linear", "wsd", "constant"])
+    p.add_argument("--lr", type=float, default=3e-4)
+    p.add_argument("--ckpt-dir", default=None)
+    p.add_argument("--ckpt-every", type=int, default=50)
+    p.add_argument("--log-every", type=int, default=10)
+    p.add_argument("--no-zero1", action="store_true")
+    p.add_argument("--micro", type=int, default=1)
+    args = p.parse_args(argv)
+
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+
+    import dataclasses
+
+    from repro.configs import SHAPES, ShapeConfig, get, get_reduced
+    from repro.launch import steps as steps_mod
+    from repro.launch.mesh import make_mesh
+    from repro.train import ScheduleConfig, Trainer, TrainerConfig
+
+    cfg = get_reduced(args.arch) if args.reduced else get(args.arch)
+    if args.dispatch or args.a2a_variant:
+        assert cfg.moe is not None, f"{cfg.name} has no MoE layers"
+        moe = dataclasses.replace(
+            cfg.moe,
+            dispatch=args.dispatch or cfg.moe.dispatch,
+            a2a_variant=args.a2a_variant or cfg.moe.a2a_variant)
+        cfg = dataclasses.replace(cfg, moe=moe)
+
+    base_shape = SHAPES[args.shape]
+    seq = args.seq_len or (256 if args.reduced else base_shape.seq_len)
+    gb = args.global_batch or (8 if args.reduced else base_shape.global_batch)
+    shape = ShapeConfig(args.shape, base_shape.kind, seq, gb)
+
+    dims = tuple(int(d) for d in args.mesh.split(","))
+    axes = ("pod", "data", "model")[-len(dims):]
+    mesh = make_mesh(dims, axes)
+
+    sched_kind = args.schedule or ("wsd" if cfg.name.startswith("minicpm") else "cosine")
+    sched = ScheduleConfig(kind=sched_kind, peak_lr=args.lr,
+                           warmup_steps=max(args.steps // 10, 1),
+                           total_steps=args.steps,
+                           decay_steps=max(args.steps // 5, 1))
+    bundle = steps_mod.make_train_bundle(
+        cfg, shape, mesh, sched=sched, zero1=not args.no_zero1,
+        n_micro=args.micro)
+    trainer = Trainer(bundle, TrainerConfig(
+        n_steps=args.steps, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every, log_every=args.log_every))
+    result = trainer.run()
+    print("train finished:", result)
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Composable model blocks covering the assigned architecture pool."""
+
+from . import (api, attention, embedding, mamba, mlp, moe, norms, scan_utils,
+               transformer, ulysses, vlm, whisper, xlstm)
+from .api import batch_spec, build_moe_plan, init_model, model_loss
+
+__all__ = [
+    "api", "attention", "embedding", "mamba", "mlp", "moe", "norms",
+    "scan_utils", "transformer", "ulysses", "vlm", "whisper", "xlstm",
+    "batch_spec", "build_moe_plan", "init_model", "model_loss",
+]

@@ -1,0 +1,56 @@
+"""Token embedding (vocab-parallel) and the LM head.
+
+The table is sharded over the model axis along vocab — GSPMD turns the
+gather into a masked local lookup + psum, and the (tied or separate) logits
+matmul into a local matmul with vocab-sharded output (Megatron vocab
+parallelism)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import ScopedFactory, cs, normal_init
+
+
+def init_embedding(f: ScopedFactory, vocab: int, d_model: int) -> None:
+    """vocab here is the PADDED vocab (cfg.padded_vocab)."""
+    f.param("table", (vocab, d_model), ("vocab", "embed"), normal_init(0.02))
+
+
+def embed_tokens(params: dict, tokens: jax.Array, scale: float = 1.0) -> jax.Array:
+    y = jnp.take(params["table"], tokens, axis=0)
+    if scale != 1.0:
+        y = y * scale
+    return cs(y, "batch", "seq", "embed")
+
+
+def init_lm_head(f: ScopedFactory, vocab: int, d_model: int, tied: bool) -> None:
+    if not tied:
+        f.param("w_out", (d_model, vocab), ("embed", "vocab"),
+                normal_init(d_model ** -0.5))
+
+
+def lm_logits(head_params: dict | None, embed_params: dict, x: jax.Array,
+              tied: bool, logit_scale: float = 1.0,
+              valid_vocab: int | None = None) -> jax.Array:
+    if tied:
+        logits = x @ embed_params["table"].T.astype(x.dtype)
+    else:
+        logits = x @ head_params["w_out"].astype(x.dtype)
+    if logit_scale != 1.0:
+        logits = logits * logit_scale
+    if valid_vocab is not None and valid_vocab < logits.shape[-1]:
+        # vocab-padding mask: pad ids can never win argmax / leak into CE
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        logits = jnp.where(iota < valid_vocab, logits,
+                           jnp.asarray(-1e9, logits.dtype))
+    return cs(logits, "batch", "seq", "vocab")
+
+
+def sinusoidal_positions(length: int, dim: int, dtype=jnp.float32) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings."""
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    idx = jnp.arange(dim // 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, 2 * idx / dim)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1).astype(dtype)

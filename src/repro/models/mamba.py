@@ -1,0 +1,116 @@
+"""Mamba-1 selective-SSM block (Jamba's sequence mixer).
+
+in_proj -> (x, z); causal depthwise conv on x; data-dependent (delta, B, C);
+chunked selective scan (scan_utils); gate by silu(z); out_proj.  The inner
+dim is TP-sharded over the model axis (every per-channel tensor shards with
+it).  Decode carries (conv_state, ssm_state) per layer.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import ScopedFactory, cs, normal_init, ones_init, zeros_init
+from . import scan_utils
+
+
+def d_inner(d_model: int, expand: int) -> int:
+    return d_model * expand
+
+
+def init_mamba(f: ScopedFactory, d_model: int, d_state: int, d_conv: int,
+               expand: int, dt_rank: int | None) -> None:
+    di = d_inner(d_model, expand)
+    dtr = dt_rank if dt_rank is not None else max(1, math.ceil(d_model / 16))
+    std = d_model ** -0.5
+    f.param("w_in", (d_model, 2 * di), ("embed", "d_inner"), normal_init(std))
+    f.param("conv_w", (d_conv, di), ("conv", "d_inner"), normal_init(d_conv ** -0.5))
+    f.param("conv_b", (di,), ("d_inner",), zeros_init())
+    f.param("w_x", (di, dtr + 2 * d_state), ("d_inner", None), normal_init(di ** -0.5))
+    f.param("w_dt", (dtr, di), (None, "d_inner"), normal_init(dtr ** -0.5))
+    f.param("dt_bias", (di,), ("d_inner",),
+            lambda k, s, d: jnp.log(jnp.expm1(
+                jnp.exp(jax.random.uniform(k, s, jnp.float32) *
+                        (math.log(0.1) - math.log(0.001)) + math.log(0.001)))).astype(d))
+    f.param("a_log", (di, d_state), ("d_inner", "state"),
+            lambda k, s, d: jnp.log(jnp.broadcast_to(
+                jnp.arange(1, s[1] + 1, dtype=jnp.float32), s)).astype(d))
+    f.param("d_skip", (di,), ("d_inner",), ones_init())
+    f.param("w_out", (di, d_model), ("d_inner", "embed"), normal_init(di ** -0.5))
+
+
+def _split_xproj(params, xbc):
+    dtr = params["w_dt"].shape[0]
+    n = params["a_log"].shape[1]
+    dt, b, c = jnp.split(xbc, [dtr, dtr + n], axis=-1)
+    return dt, b, c
+
+
+def apply_mamba(params: dict, x: jax.Array, *, d_state: int, d_conv: int,
+                chunk: int = 64, return_cache: bool = False):
+    """x: [B, S, D] -> [B, S, D] (training / prefill path).
+
+    return_cache=True additionally returns the decode cache primed with the
+    final SSM state and conv tail (serve prefill).
+    """
+    b, s, _ = x.shape
+    xz = x @ params["w_in"].astype(x.dtype)
+    xi_raw, z = jnp.split(xz, 2, axis=-1)      # [B, S, di]
+    xi_raw = cs(xi_raw, "batch", "seq", "d_inner")
+
+    # causal depthwise conv along seq
+    pad = jnp.pad(xi_raw, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    conv = sum(pad[:, i: i + s] * params["conv_w"][i].astype(x.dtype)
+               for i in range(d_conv))
+    xi = jax.nn.silu(conv + params["conv_b"].astype(x.dtype))
+
+    xbc = xi @ params["w_x"].astype(x.dtype)
+    dt_r, b_mat, c_mat = _split_xproj(params, xbc)
+    delta = jax.nn.softplus(dt_r @ params["w_dt"].astype(x.dtype)
+                            + params["dt_bias"].astype(x.dtype))
+    scan_out = scan_utils.chunked_mamba_scan(
+        delta, params["a_log"], b_mat, c_mat, xi, chunk=chunk,
+        return_final_state=return_cache)
+    y, h_end = scan_out if return_cache else (scan_out, None)
+    y = y + xi * params["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = cs(y, "batch", "seq", "d_inner")
+    out = cs(y @ params["w_out"].astype(x.dtype), "batch", "seq_sp", "embed")
+    if return_cache:
+        # last d_conv-1 raw conv inputs (zero-padded when s < d_conv-1)
+        tail = jnp.pad(xi_raw, ((0, 0), (d_conv - 1, 0), (0, 0)))[:, s: s + d_conv - 1]
+        return out, {"conv": tail, "ssm": h_end}
+    return out
+
+
+def init_mamba_cache(b: int, di: int, d_state: int, d_conv: int, dtype) -> dict:
+    return {
+        "conv": jnp.zeros((b, d_conv - 1, di), dtype),   # last d_conv-1 inputs
+        "ssm": jnp.zeros((b, di, d_state), jnp.float32),
+    }
+
+
+def mamba_decode_step(params: dict, cache: dict, x: jax.Array, *,
+                      d_state: int, d_conv: int) -> tuple[jax.Array, dict]:
+    """x: [B, 1, D] single token; returns (y [B,1,D], new cache)."""
+    bsz = x.shape[0]
+    xz = x[:, 0] @ params["w_in"].astype(x.dtype)
+    xi, z = jnp.split(xz, 2, axis=-1)          # [B, di]
+
+    hist = jnp.concatenate([cache["conv"], xi[:, None]], axis=1)  # [B, d_conv, di]
+    conv = jnp.einsum("bkc,kc->bc", hist, params["conv_w"].astype(x.dtype))
+    xi_c = jax.nn.silu(conv + params["conv_b"].astype(x.dtype))
+
+    xbc = xi_c @ params["w_x"].astype(x.dtype)
+    dt_r, b_vec, c_vec = _split_xproj(params, xbc)
+    delta = jax.nn.softplus(dt_r @ params["w_dt"].astype(x.dtype)
+                            + params["dt_bias"].astype(x.dtype))
+    h_new, y = scan_utils.mamba_decode_step(
+        cache["ssm"], delta, params["a_log"], b_vec, c_vec, xi_c)
+    y = y + xi_c * params["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = (y @ params["w_out"].astype(x.dtype))[:, None]
+    return out, {"conv": hist[:, 1:], "ssm": h_new}

@@ -1,0 +1,35 @@
+"""Feed-forward blocks: SwiGLU (llama family), squared-ReLU (nemotron-4),
+GELU (whisper).  All shard the hidden dim over the model axis (TP)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import ScopedFactory, cs, normal_init
+
+
+def init_mlp(f: ScopedFactory, activation: str, d_model: int, d_ff: int) -> None:
+    std_in = d_model ** -0.5
+    std_out = d_ff ** -0.5
+    if activation == "swiglu":
+        f.param("w_gate", (d_model, d_ff), ("embed", "ff"), normal_init(std_in))
+        f.param("w_up", (d_model, d_ff), ("embed", "ff"), normal_init(std_in))
+    else:
+        f.param("w_in", (d_model, d_ff), ("embed", "ff"), normal_init(std_in))
+    f.param("w_down", (d_ff, d_model), ("ff", "embed"), normal_init(std_out))
+
+
+def apply_mlp(params: dict, activation: str, x: jax.Array) -> jax.Array:
+    if activation == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    elif activation == "squared_relu":
+        h = jnp.square(jax.nn.relu(x @ params["w_in"]))
+    elif activation == "gelu":
+        h = jax.nn.gelu(x @ params["w_in"])
+    else:
+        raise ValueError(f"unknown activation {activation!r}")
+    h = cs(h, "batch", "seq", "ff")
+    # reduce-scatter (bf16) into the sequence-sharded residual, not a full
+    # fp32 all-reduce (Megatron sequence parallelism)
+    return cs(h @ params["w_down"], "batch", "seq_sp", "embed")

@@ -1,0 +1,37 @@
+"""Normalization layers: RMSNorm (llama family), LayerNorm (whisper/vlm),
+and OLMo's non-parametric LayerNorm (no scale/bias)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import ParamFactory, ScopedFactory, ones_init, zeros_init
+
+
+def init_norm(f: ScopedFactory, kind: str, dim: int) -> None:
+    if kind == "rmsnorm":
+        f.param("scale", (dim,), ("embed",), ones_init())
+    elif kind == "layernorm":
+        f.param("scale", (dim,), ("embed",), ones_init())
+        f.param("bias", (dim,), ("embed",), zeros_init())
+    elif kind == "nonparametric_ln":
+        pass  # OLMo: no learnable affine
+    else:
+        raise ValueError(f"unknown norm {kind!r}")
+
+
+def apply_norm(params: dict | None, kind: str, x: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(var + eps)
+        return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    if kind == "layernorm":
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dtype)

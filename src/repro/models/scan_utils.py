@@ -1,0 +1,186 @@
+"""Chunked linear-recurrence engines for the SSM/hybrid architectures.
+
+Both Mamba's selective SSM and xLSTM's mLSTM are diagonal-decay linear
+recurrences.  Materializing per-timestep states for a 4k-524k sequence is
+infeasible, so both use the standard chunked factorization: O(S/Q) sequential
+chunk steps (lax.scan carrying only the boundary state) with parallel work
+inside each chunk — associative scan for Mamba's per-(channel, state) decay,
+a Q x Q decayed attention matrix for mLSTM's outer-product state.  Peak
+memory is one chunk's working set instead of the full sequence's.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_mamba_scan(
+    delta: jax.Array,   # [B, S, C]  softplus'd step sizes
+    a_log: jax.Array,   # [C, N]     log(-A) parameterization (A = -exp(a_log))
+    b_mat: jax.Array,   # [B, S, N]
+    c_mat: jax.Array,   # [B, S, N]
+    x: jax.Array,       # [B, S, C]
+    chunk: int = 64,
+    return_final_state: bool = False,
+):
+    """Selective-scan y[b,s,c] = sum_n C[b,s,n] * h[b,s,c,n], chunked.
+
+    h[t] = exp(delta[t] * A) * h[t-1] + delta[t] * B[t] * x[t]
+    """
+    bsz, s, c = x.shape
+    n = b_mat.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+    neg_a = -jnp.exp(a_log.astype(jnp.float32))          # [C, N], < 0
+
+    def reshape_c(t):
+        return t.reshape(bsz, nc, q, *t.shape[2:]).transpose(1, 0, *range(2, t.ndim + 1))
+
+    dl, bm, cm, xm = map(reshape_c, (delta, b_mat, c_mat, x))  # [nc, B, q, ...]
+
+    @jax.checkpoint
+    def body(h, inputs):
+        # rematted: the [B,q,C,N] associative-scan intermediates are
+        # recomputed per chunk in the backward pass, never stashed.
+        d_c, b_c, c_c, x_c = inputs          # [B,q,C], [B,q,N], [B,q,N], [B,q,C]
+        d32 = d_c.astype(jnp.float32)
+        da = d32[..., None] * neg_a          # [B,q,C,N] log-decay (<0)
+        bx = (d32 * x_c.astype(jnp.float32))[..., None] * b_c.astype(jnp.float32)[:, :, None, :]
+        a = jnp.exp(da)
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        a_cum, h_intra = jax.lax.associative_scan(combine, (a, bx), axis=1)
+        h_all = h_intra + a_cum * h[:, None]             # [B,q,C,N]
+        y_c = jnp.einsum("bqcn,bqn->bqc", h_all, c_c.astype(jnp.float32))
+        return h_all[:, -1], y_c.astype(x.dtype)
+
+    h0 = jnp.zeros((bsz, c, n), jnp.float32)
+    h_end, ys = jax.lax.scan(body, h0, (dl, bm, cm, xm))
+    y = ys.transpose(1, 0, 2, 3).reshape(bsz, s, c)
+    return (y, h_end) if return_final_state else y
+
+
+def mamba_decode_step(
+    h: jax.Array,       # [B, C, N] carried SSM state
+    delta: jax.Array,   # [B, C]
+    a_log: jax.Array,   # [C, N]
+    b_vec: jax.Array,   # [B, N]
+    c_vec: jax.Array,   # [B, N]
+    x: jax.Array,       # [B, C]
+) -> tuple[jax.Array, jax.Array]:
+    neg_a = -jnp.exp(a_log.astype(jnp.float32))
+    d32 = delta.astype(jnp.float32)
+    a = jnp.exp(d32[..., None] * neg_a)                      # [B,C,N]
+    bx = (d32 * x.astype(jnp.float32))[..., None] * b_vec.astype(jnp.float32)[:, None, :]
+    h_new = a * h + bx
+    y = jnp.einsum("bcn,bn->bc", h_new, c_vec.astype(jnp.float32))
+    return h_new, y.astype(x.dtype)
+
+
+def chunkwise_mlstm(
+    q: jax.Array,       # [B, S, H, dk]
+    k: jax.Array,       # [B, S, H, dk]
+    v: jax.Array,       # [B, S, H, dv]
+    log_i: jax.Array,   # [B, S, H] input-gate pre-activation (exp gating)
+    log_f: jax.Array,   # [B, S, H] log forget gate (<= 0, e.g. logsigmoid)
+    chunk: int = 128,
+    return_final_state: bool = False,
+):
+    """Stabilized chunkwise mLSTM (xLSTM matrix memory).
+
+        C_t = f_t C_{t-1} + i_t k_t v_t^T      n_t = f_t n_{t-1} + i_t k_t
+        h_t = (q_t^T C_t) / max(|q_t^T n_t|, exp(-m_t))
+
+    Carries (C~, n~, m) with C = C~ exp(m) so all exponents stay <= 0.
+    Intra-chunk terms form a QxQ decayed score matrix per head.
+    """
+    bsz, s, h, dk = q.shape
+    dv = v.shape[-1]
+    qq = min(chunk, s)
+    assert s % qq == 0
+    nc = s // qq
+    scale = dk ** -0.5
+
+    def rs(t):
+        return t.reshape(bsz, nc, qq, *t.shape[2:]).transpose(1, 0, *range(2, t.ndim + 1))
+
+    qs, ks, vs, lis, lfs = map(rs, (q, k, v, log_i, log_f))
+
+    @jax.checkpoint
+    def body(carry, inputs):
+        c_state, n_state, m = carry          # [B,H,dk,dv], [B,H,dk], [B,H]
+        qc, kc, vc, li, lf = inputs          # [B,q,H,*]
+        lf32 = lf.astype(jnp.float32)
+        li32 = li.astype(jnp.float32)
+        fcum = jnp.cumsum(lf32, axis=1)                       # [B,q,H]
+        # intra logits L[t,j] = F_t - F_j + log_i_j  (j <= t)
+        l_mat = fcum[:, :, None, :] - fcum[:, None, :, :] + li32[:, None, :, :]
+        t_idx = jnp.arange(qq)
+        causal = (t_idx[:, None] >= t_idx[None, :])[None, :, :, None]
+        l_mat = jnp.where(causal, l_mat, -jnp.inf)
+        # per-step stabilizer: d_t = max(m + F_t, max_j L[t,j])
+        carry_scale = m[:, None, :] + fcum                    # [B,q,H]
+        d = jnp.maximum(carry_scale, l_mat.max(axis=2))       # [B,q,H]
+        # scores
+        s_mat = jnp.einsum("bqhd,bjhd->bqjh", qc.astype(jnp.float32),
+                           kc.astype(jnp.float32)) * scale
+        w = s_mat * jnp.exp(l_mat - d[:, :, None, :])
+        w = jnp.where(causal, w, 0.0)
+        num = jnp.einsum("bqjh,bjhe->bqhe", w, vc.astype(jnp.float32))
+        den = w.sum(axis=2)                                   # [B,q,H] ~ q^T n intra
+        # inter-chunk contribution
+        qc32 = qc.astype(jnp.float32) * scale
+        carry_w = jnp.exp(carry_scale - d)                    # [B,q,H]
+        num = num + carry_w[..., None] * jnp.einsum("bqhd,bhde->bqhe", qc32, c_state)
+        den = den + carry_w * jnp.einsum("bqhd,bhd->bqh", qc32, n_state)
+        y = num / jnp.maximum(jnp.abs(den), jnp.exp(-d))[..., None]
+        # update carried state (scale m_new)
+        f_tot = fcum[:, -1, :]                                # [B,H]
+        state_logits = f_tot[:, None, :] - fcum + li32        # scale of each j at chunk end
+        m_new = jnp.maximum(m + f_tot, state_logits.max(axis=1))
+        decay_old = jnp.exp(m + f_tot - m_new)
+        wk = jnp.exp(state_logits - m_new[:, None, :])        # [B,q,H]
+        c_new = decay_old[:, :, None, None] * c_state + jnp.einsum(
+            "bjh,bjhd,bjhe->bhde", wk, kc.astype(jnp.float32), vc.astype(jnp.float32))
+        n_new = decay_old[:, :, None] * n_state + jnp.einsum(
+            "bjh,bjhd->bhd", wk, kc.astype(jnp.float32))
+        return (c_new, n_new, m_new), y.astype(q.dtype)
+
+    c0 = jnp.zeros((bsz, h, dk, dv), jnp.float32)
+    n0 = jnp.zeros((bsz, h, dk), jnp.float32)
+    m0 = jnp.full((bsz, h), -1e30, jnp.float32)
+    final, ys = jax.lax.scan(body, (c0, n0, m0), (qs, ks, vs, lis, lfs))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, s, h, dv)
+    return (y, final) if return_final_state else y
+
+
+def mlstm_decode_step(
+    state: tuple[jax.Array, jax.Array, jax.Array],   # (C~, n~, m)
+    q: jax.Array, k: jax.Array, v: jax.Array,        # [B, H, dk/dv]
+    log_i: jax.Array, log_f: jax.Array,              # [B, H]
+) -> tuple[tuple, jax.Array]:
+    c_state, n_state, m = state
+    dk = q.shape[-1]
+    scale = dk ** -0.5
+    lf = log_f.astype(jnp.float32)
+    li = log_i.astype(jnp.float32)
+    m_new = jnp.maximum(lf + m, li)
+    f_w = jnp.exp(lf + m - m_new)
+    i_w = jnp.exp(li - m_new)
+    k32, v32 = k.astype(jnp.float32), v.astype(jnp.float32)
+    c_new = f_w[..., None, None] * c_state + i_w[..., None, None] * (
+        k32[..., :, None] * v32[..., None, :])
+    n_new = f_w[..., None] * n_state + i_w[..., None] * k32
+    q32 = q.astype(jnp.float32) * scale
+    num = jnp.einsum("bhd,bhde->bhe", q32, c_new)
+    den = jnp.einsum("bhd,bhd->bh", q32, n_new)
+    y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return (c_new, n_new, m_new), y.astype(q.dtype)

@@ -1,0 +1,119 @@
+"""Ulysses-style sequence-parallel attention via the alltoallv engine.
+
+DeepSpeed-Ulysses (arXiv:2309.14509) computes attention with
+sequence-sharded activations by exchanging shards twice per layer:
+
+    [B, S/P, H, d]  --all-to-all-->  [B, S, H/P, d]     (heads out, seq in)
+    ... attention over the full sequence on local heads ...
+    [B, S, H/P, d]  --all-to-all-->  [B, S/P, H, d]
+
+Both exchanges are *uniform* alltoallvs — the degenerate case of the
+paper's engine (every pair moves the same S/P x H/P block), so they route
+through ``core.variants.fence_exchange`` with a persistent head-exchange
+plan: the bucket geometry is frozen at layer build, per-step work is pure
+data movement.  This is the second production consumer of the technique
+(DESIGN.md §3); MoE dispatch is the first.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import variants as core_variants
+from repro.parallel.sharding import current_mesh, resolve
+
+
+@dataclasses.dataclass(frozen=True)
+class UlyssesPlan:
+    """Persistent head-exchange geometry (INIT-time metadata)."""
+
+    axis: str          # mesh axis carrying the sequence shards
+    p: int             # shards
+    n_heads: int
+    head_dim: int
+
+    @staticmethod
+    def build(n_heads: int, head_dim: int, mesh=None, axis: str = "model"):
+        mesh = mesh if mesh is not None else current_mesh()
+        p = int(mesh.shape[axis]) if (mesh is not None
+                                      and axis in mesh.axis_names) else 1
+        if n_heads % max(p, 1):
+            raise ValueError(f"{n_heads} heads not divisible by {p} shards")
+        return UlyssesPlan(axis=axis, p=p, n_heads=n_heads, head_dim=head_dim)
+
+
+def _seq_to_heads(x: jax.Array, plan: UlyssesPlan) -> jax.Array:
+    """[B, S_loc, H, d] -> [B, S_loc*P, H/P, d] (inside shard_map)."""
+    b, s_loc, h, d = x.shape
+    p = plan.p
+    # bucket j = my sequence shard's slice of head-group j
+    packed = x.reshape(b, s_loc, p, h // p, d).transpose(2, 0, 1, 3, 4)
+    packed = packed.reshape(p * b, s_loc, h // p, d)
+    out = core_variants.fence_exchange(packed, plan.axis)
+    out = out.reshape(p, b, s_loc, h // p, d).transpose(1, 0, 2, 3, 4)
+    return out.reshape(b, p * s_loc, h // p, d)
+
+
+def _heads_to_seq(x: jax.Array, plan: UlyssesPlan) -> jax.Array:
+    """[B, S, H/P, d] -> [B, S/P, H, d] (inverse exchange)."""
+    b, s, hp, d = x.shape
+    p = plan.p
+    packed = x.reshape(b, p, s // p, hp, d).transpose(1, 0, 2, 3, 4)
+    packed = packed.reshape(p * b, s // p, hp, d)
+    out = core_variants.fence_exchange(packed, plan.axis)
+    # recv bucket i = my position block computed with head-group i:
+    # [p, b, s_loc, hp, d] -> [b, s_loc, (p, hp)=H, d]
+    out = out.reshape(p, b, s // p, hp, d).transpose(1, 2, 0, 3, 4)
+    return out.reshape(b, s // p, p * hp, d)
+
+
+def ulysses_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,   # [B, S, H, d] seq-sharded via mesh
+    positions: jax.Array,                        # [B, S]
+    plan: UlyssesPlan,
+    causal: bool = True,
+) -> jax.Array:
+    """Attention over sequence-sharded q/k/v (MHA: n_kv == n_heads).
+
+    Outside shard_map: q/k/v arrive sharded on dim 1 over ``plan.axis``;
+    inside, each shard holds S/P positions of all H heads, exchanges into
+    all S positions of H/P heads, attends, and exchanges back.
+    """
+    mesh = current_mesh()
+    if plan.p == 1 or mesh is None:
+        return _attend(q, k, v, positions, causal)
+
+    seq_spec = P(None, plan.axis, None, None)
+    pos_spec = P(None, plan.axis)
+
+    def body(q_l, k_l, v_l, pos_l):
+        qh = _seq_to_heads(q_l, plan)
+        kh = _seq_to_heads(k_l, plan)
+        vh = _seq_to_heads(v_l, plan)
+        pos_full = jax.lax.all_gather(pos_l, plan.axis, axis=1, tiled=True)
+        o = _attend(qh, kh, vh, pos_full, causal)
+        return _heads_to_seq(o, plan)
+
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(seq_spec, seq_spec, seq_spec, pos_spec),
+        out_specs=seq_spec, check_vma=False,
+    )(q, k, v, positions)
+
+
+def _attend(q, k, v, positions, causal):
+    """Plain softmax attention [B, S, H, d] (fp32 softmax)."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = positions[:, None, :, None] >= positions[:, None, None, :]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)

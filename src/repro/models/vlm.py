@@ -1,0 +1,52 @@
+"""VLM (InternVL2-style) wrapper: stub vision frontend + LM backbone.
+
+Per the assignment the ViT is a STUB — ``input_specs`` supplies precomputed
+patch embeddings [B, N_patch, frontend_dim] (InternViT hidden size).  The
+model owns the MLP projector (frontend_dim -> d_model) and the InternLM2-like
+GQA decoder; image embeddings are prepended to the token embeddings and the
+loss covers text positions only.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import ScopedFactory, cs, normal_init
+from . import norms, transformer
+
+
+def init_projector(f: ScopedFactory, d_vit: int, d_model: int) -> None:
+    f.param("ln_scale", (d_vit,), ("embed",),
+            lambda k, s, d: jnp.ones(s, d))
+    f.param("w1", (d_vit, d_model), ("embed", "ff"), normal_init(d_vit ** -0.5))
+    f.param("w2", (d_model, d_model), ("ff", "embed"), normal_init(d_model ** -0.5))
+
+
+def project_patches(params: dict, patches: jax.Array) -> jax.Array:
+    x32 = patches.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    x = (x32 * jax.lax.rsqrt(var + 1e-5) *
+         params["ln_scale"].astype(jnp.float32)).astype(patches.dtype)
+    h = jax.nn.gelu(x @ params["w1"].astype(x.dtype))
+    return h @ params["w2"].astype(x.dtype)
+
+
+def vlm_loss(params: dict, cfg: ModelConfig, batch: dict, *,
+             moe_plan=None, remat: bool = True):
+    """batch: {"patches": [B, N_p, d_vit], "tokens": [B, S_text]}."""
+    patches = batch["patches"]
+    tokens = batch["tokens"]
+    img = project_patches(params["projector"], patches)
+    hidden, aux, _ = transformer.forward(
+        params, cfg, tokens, moe_plan=moe_plan,
+        extra_embeds=img, remat=remat, return_hidden=True)
+    total, denom = transformer.chunked_nll(params, cfg, hidden, tokens,
+                                           offset=img.shape[1])
+    loss = total / denom
+    metrics = {"nll": loss, "loss": loss}
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.aux_loss * aux[0] + cfg.moe.router_z_loss * aux[1]
+        metrics.update({"moe_lb": aux[0], "moe_z": aux[1], "loss": loss})
+    return loss, metrics

@@ -1,0 +1,178 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The conv frontend is a STUB per the assignment: ``input_specs`` supplies
+precomputed frame embeddings [B, T_frames, d_model] (what the two conv1d
+layers would produce), so the encoder here is the transformer stack +
+sinusoidal positions.  Decoder: learned positional embeddings, causal
+self-attention with KV cache, cross-attention over the encoder output
+(cross K/V cached at prefill), GELU MLPs, LayerNorm, tied embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import ParamFactory, cs, normal_init
+from . import attention, embedding, mlp, norms
+from .transformer import _StackFactory
+
+
+def _init_enc_block(f, cfg: ModelConfig) -> None:
+    norms.init_norm(f.scope("ln1"), cfg.norm, cfg.d_model)
+    attention.init_attention(f.scope("attn"), cfg.d_model, cfg.n_heads,
+                             cfg.n_kv_heads, cfg.head_dim)
+    norms.init_norm(f.scope("ln2"), cfg.norm, cfg.d_model)
+    mlp.init_mlp(f.scope("mlp"), cfg.activation, cfg.d_model, cfg.d_ff)
+
+
+def _init_dec_block(f, cfg: ModelConfig) -> None:
+    norms.init_norm(f.scope("ln1"), cfg.norm, cfg.d_model)
+    attention.init_attention(f.scope("self_attn"), cfg.d_model, cfg.n_heads,
+                             cfg.n_kv_heads, cfg.head_dim)
+    norms.init_norm(f.scope("ln_c"), cfg.norm, cfg.d_model)
+    attention.init_attention(f.scope("cross_attn"), cfg.d_model, cfg.n_heads,
+                             cfg.n_kv_heads, cfg.head_dim)
+    norms.init_norm(f.scope("ln2"), cfg.norm, cfg.d_model)
+    mlp.init_mlp(f.scope("mlp"), cfg.activation, cfg.d_model, cfg.d_ff)
+
+
+def init_whisper(key: Optional[jax.Array], cfg: ModelConfig,
+                 abstract: bool = False):
+    f = ParamFactory(key, jnp.dtype(cfg.param_dtype), abstract=abstract)
+    embedding.init_embedding(f.scope("embed"), cfg.padded_vocab, cfg.d_model)
+    f.param("pos_embed", (cfg.max_seq, cfg.d_model), ("seq", "embed"),
+            normal_init(0.02))
+    _init_enc_block(_StackFactory(f.scope("enc"), cfg.n_enc_layers), cfg)
+    _init_dec_block(_StackFactory(f.scope("dec"), cfg.n_layers), cfg)
+    norms.init_norm(f.scope("ln_enc_f"), cfg.norm, cfg.d_model)
+    norms.init_norm(f.scope("ln_f"), cfg.norm, cfg.d_model)
+    return f.params, f.logical_specs
+
+
+def encode(params: dict, cfg: ModelConfig, frames: jax.Array,
+           remat: bool = True) -> jax.Array:
+    """frames: [B, T, d_model] stub embeddings -> encoder states [B, T, D]."""
+    b, t, _ = frames.shape
+    x = frames + embedding.sinusoidal_positions(t, cfg.d_model, frames.dtype)[None]
+    x = cs(x, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+
+    def body(h, blk):
+        z = norms.apply_norm(blk.get("ln1"), cfg.norm, h)
+        y, _ = attention.apply_attention(
+            blk["attn"], z, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, positions=positions, causal=False,
+            rope_theta=None)
+        h = h + y
+        z = norms.apply_norm(blk.get("ln2"), cfg.norm, h)
+        h = h + mlp.apply_mlp(blk["mlp"], cfg.activation, z)
+        return cs(h, "batch", "seq_sp", "embed"), 0
+
+    from .transformer import scan_blocks
+    x, _ = scan_blocks(body, x, params["enc"], cfg.n_enc_layers, remat=remat)
+    return norms.apply_norm(params.get("ln_enc_f"), cfg.norm, x)
+
+
+def decode(params: dict, cfg: ModelConfig, tokens: jax.Array,
+           enc_out: Optional[jax.Array] = None, *,
+           caches: Optional[dict] = None,
+           cache_index: Optional[jax.Array] = None,
+           remat: bool = True):
+    """tokens: [B, S]. Training/prefill: pass enc_out. Decode steps: pass
+    caches primed by prefill (cross K/V inside) and cache_index."""
+    b, s = tokens.shape
+    x = embedding.embed_tokens(params["embed"], tokens)
+    if cache_index is not None:
+        base = cache_index if jnp.ndim(cache_index) == 0 else cache_index.reshape(())
+        positions = jnp.broadcast_to((base + jnp.arange(s))[None], (b, s))
+        pos_vec = jnp.take(params["pos_embed"], positions[0], axis=0)[None]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        pos_vec = params["pos_embed"][None, :s]
+    x = x + pos_vec.astype(x.dtype)
+    x = cs(x, "batch", "seq", "embed")
+
+    def body(h, xs):
+        blk, cache = xs
+        z = norms.apply_norm(blk.get("ln1"), cfg.norm, h)
+        y, kvc = attention.apply_attention(
+            blk["self_attn"], z, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, positions=positions, causal=True,
+            rope_theta=None,
+            kv_cache=None if cache is None else {"k": cache["k"], "v": cache["v"]},
+            cache_index=cache_index if cache is not None else None)
+        h = h + y
+        z = norms.apply_norm(blk.get("ln_c"), cfg.norm, h)
+        if cache is not None and enc_out is None:
+            cross_cache = {"k": cache["ck"], "v": cache["cv"]}
+            y, _ = attention.apply_attention(
+                blk["cross_attn"], z, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                head_dim=cfg.head_dim, positions=positions, causal=False,
+                rope_theta=None, kv_cache=cross_cache, cache_index=None)
+        else:
+            y, _ = attention.apply_attention(
+                blk["cross_attn"], z, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                head_dim=cfg.head_dim, positions=positions, causal=False,
+                rope_theta=None, x_kv=enc_out)
+        h = h + y
+        z = norms.apply_norm(blk.get("ln2"), cfg.norm, h)
+        h = h + mlp.apply_mlp(blk["mlp"], cfg.activation, z)
+        new_cache = 0
+        if cache is not None:
+            new_cache = dict(cache)
+            if kvc is not None:
+                new_cache.update(kvc)
+        return cs(h, "batch", "seq_sp", "embed"), new_cache
+
+    from .transformer import scan_blocks
+    x, new_caches = scan_blocks(body, x, (params["dec"], caches),
+                                cfg.n_layers, remat=remat)
+    x = norms.apply_norm(params.get("ln_f"), cfg.norm, x)
+    logits = embedding.lm_logits(None, params["embed"], x, tied=True,
+                                 valid_vocab=cfg.vocab_size)
+    return logits, (new_caches if caches is not None else None)
+
+
+def dec_cache_logical_specs(cfg: ModelConfig) -> dict:
+    """Logical axes for init_dec_caches' structure."""
+    kv = ("stack", "batch", "seq", "kv_heads", "head_dim")
+    return {"k": kv, "v": kv, "ck": kv, "cv": kv}
+
+
+def init_dec_caches(cfg: ModelConfig, batch: int, max_seq: int, enc_len: int,
+                    dtype=jnp.bfloat16):
+    """Stacked decoder caches: self-attn KV (max_seq) + cross KV (enc_len)."""
+    def z(s):
+        return jnp.zeros((cfg.n_layers, batch, s, cfg.n_kv_heads, cfg.head_dim), dtype)
+    return {"k": z(max_seq), "v": z(max_seq), "ck": z(enc_len), "cv": z(enc_len)}
+
+
+def prime_cross_caches(params: dict, cfg: ModelConfig, enc_out: jax.Array,
+                       caches: dict) -> dict:
+    """Compute per-layer cross K/V from encoder output once (prefill)."""
+    def per_layer(blk):
+        k = jnp.einsum("btd,dnh->btnh", enc_out,
+                       blk["cross_attn"]["wk"].astype(enc_out.dtype))
+        v = jnp.einsum("btd,dnh->btnh", enc_out,
+                       blk["cross_attn"]["wv"].astype(enc_out.dtype))
+        return k, v
+
+    ks, vs = jax.vmap(per_layer)(params["dec"])
+    return dict(caches, ck=ks.astype(caches["ck"].dtype),
+                cv=vs.astype(caches["cv"].dtype))
+
+
+def whisper_loss(params: dict, cfg: ModelConfig, batch: dict, remat: bool = True):
+    """batch: {"frames": [B,T,D], "tokens": [B,S]}."""
+    from .transformer import cross_entropy
+
+    enc = encode(params, cfg, batch["frames"], remat=remat)
+    logits, _ = decode(params, cfg, batch["tokens"], enc, remat=remat)
+    targets = batch["tokens"][:, 1:]
+    nll = cross_entropy(logits[:, :-1], targets)
+    loss = nll.mean()
+    return loss, {"nll": loss, "loss": loss}

@@ -1,0 +1,170 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory with recurrent gate connections, sequential scan).
+
+Follows arXiv:2405.04517: mLSTM blocks are pre-norm residual blocks with an
+up-projection (pre-LN -> up-proj -> q/k/v + exponential gating -> matrix
+memory -> down-proj); sLSTM blocks keep the state dim at d_model with
+per-head recurrent weights and a gated FFN after.  Heads shard over the
+model axis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import ScopedFactory, cs, normal_init, zeros_init
+from . import scan_utils
+from .norms import apply_norm, init_norm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(f: ScopedFactory, d_model: int, n_heads: int,
+               proj_factor: float, qk_dim_factor: float) -> None:
+    d_up = int(d_model * proj_factor)
+    d_up -= d_up % n_heads
+    dk = int(d_up * qk_dim_factor) // n_heads
+    dv = d_up // n_heads
+    std = d_model ** -0.5
+    f.param("w_up", (d_model, 2 * d_up), ("embed", "d_inner"), normal_init(std))
+    su = d_up ** -0.5
+    f.param("wq", (d_up, n_heads, dk), ("d_inner", "heads", "head_dim"), normal_init(su))
+    f.param("wk", (d_up, n_heads, dk), ("d_inner", "heads", "head_dim"), normal_init(su))
+    f.param("wv", (d_up, n_heads, dv), ("d_inner", "heads", "head_dim"), normal_init(su))
+    f.param("w_if", (d_up, 2 * n_heads), ("d_inner", "heads"), normal_init(su))
+    f.param("b_if", (2 * n_heads,), ("heads",), zeros_init())
+    f.param("w_down", (d_up, d_model), ("d_inner", "embed"), normal_init(su))
+
+
+def apply_mlstm(params: dict, x: jax.Array, *, n_heads: int,
+                chunk: int = 128, return_cache: bool = False):
+    b, s, _ = x.shape
+    up = x @ params["w_up"].astype(x.dtype)
+    u, z = jnp.split(up, 2, axis=-1)                    # [B,S,d_up]
+    u = cs(u, "batch", "seq", "d_inner")
+    q = jnp.einsum("bsu,uhd->bshd", u, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsu,uhd->bshd", u, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsu,uhd->bshd", u, params["wv"].astype(x.dtype))
+    gates = u @ params["w_if"].astype(x.dtype) + params["b_if"].astype(x.dtype)
+    log_i, f_pre = jnp.split(gates, 2, axis=-1)         # [B,S,H]
+    log_f = jax.nn.log_sigmoid(f_pre.astype(jnp.float32)).astype(x.dtype)
+    scan_out = scan_utils.chunkwise_mlstm(q, k, v, log_i, log_f, chunk=chunk,
+                                          return_final_state=return_cache)
+    y, final = scan_out if return_cache else (scan_out, None)
+    y = y.reshape(b, s, -1)                             # [B,S,d_up]
+    y = y * jax.nn.silu(z)
+    y = cs(y, "batch", "seq", "d_inner")
+    out = cs(y @ params["w_down"].astype(x.dtype), "batch", "seq_sp", "embed")
+    if return_cache:
+        c, n, m = final
+        return out, {"c": c, "n": n, "m": m}
+    return out
+
+
+def init_mlstm_cache(b: int, d_model: int, n_heads: int, proj_factor: float,
+                     qk_dim_factor: float, dtype) -> dict:
+    d_up = int(d_model * proj_factor)
+    d_up -= d_up % n_heads
+    dk = int(d_up * qk_dim_factor) // n_heads
+    dv = d_up // n_heads
+    return {
+        "c": jnp.zeros((b, n_heads, dk, dv), jnp.float32),
+        "n": jnp.zeros((b, n_heads, dk), jnp.float32),
+        "m": jnp.full((b, n_heads), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode_step(params: dict, cache: dict, x: jax.Array, *,
+                      n_heads: int) -> tuple[jax.Array, dict]:
+    """x: [B, 1, D]."""
+    b = x.shape[0]
+    up = x[:, 0] @ params["w_up"].astype(x.dtype)
+    u, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bu,uhd->bhd", u, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bu,uhd->bhd", u, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bu,uhd->bhd", u, params["wv"].astype(x.dtype))
+    gates = u @ params["w_if"].astype(x.dtype) + params["b_if"].astype(x.dtype)
+    log_i, f_pre = jnp.split(gates, 2, axis=-1)
+    log_f = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    (c, n, m), y = scan_utils.mlstm_decode_step(
+        (cache["c"], cache["n"], cache["m"]), q, k, v, log_i, log_f)
+    y = y.reshape(b, -1) * jax.nn.silu(z)
+    out = (y @ params["w_down"].astype(x.dtype))[:, None]
+    return out, {"c": c, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(f: ScopedFactory, d_model: int, n_heads: int) -> None:
+    dh = d_model // n_heads
+    std = d_model ** -0.5
+    # gates: i, f, z, o
+    f.param("w_gates", (d_model, 4, n_heads, dh), ("embed", None, "heads", "head_dim"),
+            normal_init(std))
+    f.param("r_gates", (4, n_heads, dh, dh), (None, "heads", "head_dim", None),
+            normal_init(dh ** -0.5))
+    f.param("b_gates", (4, n_heads, dh), (None, "heads", "head_dim"), zeros_init())
+    f.param("w_out", (d_model, d_model), ("embed", "embed"), normal_init(std))
+
+
+def _slstm_cell(params, state, gx):
+    """One step. state: (c, n, h, m) each [B, H, dh]; gx: [B, 4, H, dh]."""
+    c, n, h, m = state
+    rec = jnp.einsum("bhd,ghde->bghe", h, params["r_gates"].astype(h.dtype))
+    g = gx + rec + params["b_gates"].astype(h.dtype)
+    gi, gf, gz, go = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+    log_i = gi.astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(gf.astype(jnp.float32))
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_w = jnp.exp(log_i - m_new)
+    f_w = jnp.exp(log_f + m - m_new)
+    z = jnp.tanh(gz.astype(jnp.float32))
+    o = jax.nn.sigmoid(go.astype(jnp.float32))
+    c_new = f_w * c + i_w * z
+    n_new = f_w * n + i_w
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def apply_slstm(params: dict, x: jax.Array, *, n_heads: int,
+                return_cache: bool = False):
+    b, s, d = x.shape
+    dh = d // n_heads
+    gx = jnp.einsum("bsd,dghe->bsghe", x, params["w_gates"].astype(x.dtype))
+
+    def step(state, gx_t):
+        new_state, h = _slstm_cell(params, state, gx_t)
+        return new_state, h
+
+    zeros = jnp.zeros((b, n_heads, dh), jnp.float32)
+    state0 = (zeros, zeros, zeros, jnp.full_like(zeros, -1e30))
+    final, hs = jax.lax.scan(step, state0, gx.transpose(1, 0, 2, 3, 4))
+    y = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    out = y @ params["w_out"].astype(x.dtype)
+    if return_cache:
+        c, n, h, m = final
+        return out, {"c": c, "n": n, "h": h, "m": m}
+    return out
+
+
+def init_slstm_cache(b: int, d_model: int, n_heads: int) -> dict:
+    dh = d_model // n_heads
+    z = jnp.zeros((b, n_heads, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full_like(z, -1e30)}
+
+
+def slstm_decode_step(params: dict, cache: dict, x: jax.Array, *,
+                      n_heads: int) -> tuple[jax.Array, dict]:
+    b, _, d = x.shape
+    gx = jnp.einsum("bd,dghe->bghe", x[:, 0], params["w_gates"].astype(x.dtype))
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    (c, n, h, m), h_out = _slstm_cell(params, state, gx)
+    y = h_out.reshape(b, d).astype(x.dtype) @ params["w_out"].astype(x.dtype)
+    return y[:, None], {"c": c, "n": n, "h": h, "m": m}

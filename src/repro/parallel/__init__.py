@@ -1,0 +1,12 @@
+"""Sharding rules, collectives helpers, gradient compression."""
+
+from . import collectives, compression, sharding
+from .sharding import (LONG_CONTEXT_RULES, DEFAULT_RULES, ParamFactory,
+                       axis_rules, cs, current_mesh, resolve,
+                       specs_to_pspecs, specs_to_shardings, use_mesh)
+
+__all__ = [
+    "sharding", "LONG_CONTEXT_RULES", "DEFAULT_RULES", "ParamFactory",
+    "axis_rules", "cs", "current_mesh", "resolve",
+    "specs_to_pspecs", "specs_to_shardings", "use_mesh",
+]

@@ -1,0 +1,122 @@
+"""Optimized-HLO text parsing: per-collective wire bytes.
+
+``compiled.as_text()`` is the post-SPMD-partitioning module, so tensor
+shapes are per-device.  For every collective op we parse the inline result
+shape + replica groups and convert to *wire bytes per device* with the
+standard ring models:
+
+    all-reduce       2 * size * (n-1)/n      (reduce-scatter + all-gather)
+    all-gather       size * (n-1)/n          (size = gathered result)
+    reduce-scatter   n * size * (n-1)/n      (size = scattered result)
+    all-to-all       size * (n-1)/n
+    collective-permute  size                 (one hop)
+
+cost_analysis() doesn't cover collectives — this parse is where the
+roofline's third term comes from.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+# e.g.  %all-gather.3 = bf16[16,1024]{1,0} all-gather(...)  incl. tuple shapes
+_OP_RE = re.compile(
+    r"=\s*(\(?[a-z0-9]+\[[^=]*?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute|"
+    r"ragged-all-to-all)(-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}")
+_GROUPS_ALT_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_ALT_RE.search(line)     # replica_groups=[8,64] form
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].strip("{} ")
+        ids = [t for t in first.split(",") if t.strip() != ""]
+        return max(len(ids), 1)
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict          # op -> count
+    result_bytes: dict    # op -> sum of per-device result bytes
+    wire_bytes: dict      # op -> ring-model wire bytes per device
+    total_wire_bytes: int
+    total_result_bytes: int
+
+    def to_json(self) -> dict:
+        return {
+            "counts": dict(self.counts),
+            "result_bytes": {k: int(v) for k, v in self.result_bytes.items()},
+            "wire_bytes": {k: int(v) for k, v in self.wire_bytes.items()},
+            "total_wire_bytes": int(self.total_wire_bytes),
+            "total_result_bytes": int(self.total_result_bytes),
+        }
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: dict = defaultdict(int)
+    rbytes: dict = defaultdict(int)
+    wbytes: dict = defaultdict(float)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if m.group(3) == "-done":       # count start/done pairs once
+            continue
+        type_str, op = m.group(1), m.group(2)
+        size = _shape_bytes(type_str)
+        if size == 0:
+            continue
+        n = _group_size(line)
+        counts[op] += 1
+        rbytes[op] += size
+        frac = (n - 1) / n if n > 1 else 0.0
+        if op == "all-reduce":
+            w = 2 * size * frac
+        elif op == "all-gather":
+            w = size * frac
+        elif op == "reduce-scatter":
+            w = n * size * frac
+        elif op in ("all-to-all", "ragged-all-to-all"):
+            w = size * frac
+        else:  # collective-permute: one hop
+            w = float(size)
+        wbytes[op] += w
+    return CollectiveStats(
+        counts=dict(counts), result_bytes=dict(rbytes),
+        wire_bytes={k: int(v) for k, v in wbytes.items()},
+        total_wire_bytes=int(sum(wbytes.values())),
+        total_result_bytes=int(sum(rbytes.values())),
+    )

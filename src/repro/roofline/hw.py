@@ -1,0 +1,6 @@
+"""Target hardware constants (TPU v5e) for the roofline model."""
+
+PEAK_FLOPS_BF16 = 197e12       # per chip, bf16
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_LINK_BW = 50e9             # bytes/s per link (~50 GB/s/link)
+HBM_BYTES = 16 * 1024 ** 3     # 16 GiB per chip

@@ -1,0 +1,8 @@
+"""Runtime: fault recovery + straggler detection."""
+
+from . import fault, straggler
+from .fault import FaultError, RetryPolicy, run_with_recovery
+from .straggler import StragglerDetector
+
+__all__ = ["fault", "straggler", "FaultError", "RetryPolicy",
+           "run_with_recovery", "StragglerDetector"]

@@ -1,0 +1,71 @@
+"""Fault tolerance: retrying step execution with checkpoint-restart.
+
+On a real fleet, device failures surface as XlaRuntimeError /
+SystemError from the step call; the recovery discipline is: reload the last
+complete checkpoint, rebuild device state, and replay from there (the data
+pipeline is (seed, step)-deterministic so replay is exact).  This module
+implements that discipline; the injectable ``failure_hook`` lets tests
+simulate faults at chosen steps.
+"""
+
+from __future__ import annotations
+
+import logging
+import time
+from typing import Callable, Optional
+
+log = logging.getLogger("repro.fault")
+
+
+class FaultError(RuntimeError):
+    pass
+
+
+class RetryPolicy:
+    def __init__(self, max_restarts: int = 3, backoff_seconds: float = 0.5):
+        self.max_restarts = max_restarts
+        self.backoff_seconds = backoff_seconds
+        self.restarts = 0
+
+    def record_failure(self, step: int, err: Exception) -> None:
+        self.restarts += 1
+        log.warning("step %d failed (%s); restart %d/%d",
+                    step, err, self.restarts, self.max_restarts)
+        if self.restarts > self.max_restarts:
+            raise FaultError(
+                f"exceeded {self.max_restarts} restarts; last error: {err}"
+            ) from err
+        time.sleep(self.backoff_seconds)
+
+
+def run_with_recovery(
+    run_step: Callable[[int], dict],
+    restore: Callable[[], int],
+    start_step: int,
+    n_steps: int,
+    policy: Optional[RetryPolicy] = None,
+    failure_hook: Optional[Callable[[int], None]] = None,
+    on_metrics: Optional[Callable[[int, dict], None]] = None,
+) -> int:
+    """Drive steps [start, start+n) with restart-on-failure.
+
+    run_step(step) executes one step (raising on device failure);
+    restore() reloads the last checkpoint and returns the step to resume at.
+    """
+    policy = policy or RetryPolicy()
+    step = start_step
+    end = start_step + n_steps
+    while step < end:
+        try:
+            if failure_hook is not None:
+                failure_hook(step)
+            metrics = run_step(step)
+            if on_metrics is not None:
+                on_metrics(step, metrics)
+            step += 1
+        except FaultError:
+            raise
+        except Exception as err:  # noqa: BLE001 — any step failure triggers recovery
+            policy.record_failure(step, err)
+            step = restore()
+    return step

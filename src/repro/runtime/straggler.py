@@ -1,0 +1,57 @@
+"""Straggler mitigation: per-step deadline tracking.
+
+On a single controller we cannot preempt a slow chip, but we can do what
+fleet schedulers do with the signal: keep an EMA of step latency, flag steps
+beyond ``threshold x EMA`` (log + counter), and surface a recommendation
+(on a real pod: report the slow host to the job scheduler for replacement,
+or trigger an elastic re-mesh via ckpt.reshard).  The train loop consults
+``should_checkpoint_early`` so a degrading fleet checkpoints more often —
+shrinking the replay window a straggler-turned-failure would cost.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+
+@dataclasses.dataclass
+class StragglerReport:
+    step: int
+    seconds: float
+    ema_seconds: float
+    ratio: float
+
+
+class StragglerDetector:
+    def __init__(self, threshold: float = 2.0, ema_alpha: float = 0.1,
+                 warmup_steps: int = 3):
+        self.threshold = threshold
+        self.ema_alpha = ema_alpha
+        self.warmup_steps = warmup_steps
+        self.ema: Optional[float] = None
+        self.count = 0
+        self.flagged: list[StragglerReport] = []
+        self._t0: Optional[float] = None
+
+    def start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def stop(self, step: int) -> Optional[StragglerReport]:
+        dt = time.perf_counter() - self._t0
+        self.count += 1
+        report = None
+        if self.ema is not None and self.count > self.warmup_steps \
+                and dt > self.threshold * self.ema:
+            report = StragglerReport(step, dt, self.ema, dt / self.ema)
+            self.flagged.append(report)
+        # slow steps shouldn't drag the EMA up instantly
+        alpha = self.ema_alpha if report is None else self.ema_alpha / 4
+        self.ema = dt if self.ema is None else (1 - alpha) * self.ema + alpha * dt
+        return report
+
+    def should_checkpoint_early(self) -> bool:
+        """Two flags in the last five steps => degrading fleet."""
+        recent = [r for r in self.flagged[-5:]]
+        return len(recent) >= 2

@@ -1,0 +1,6 @@
+"""Serving: KV-cache engine, prefill/decode steps, sampling."""
+
+from . import engine, sampler
+from .engine import ServeEngine, ServeStats
+
+__all__ = ["engine", "sampler", "ServeEngine", "ServeStats"]

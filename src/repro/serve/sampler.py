@@ -1,0 +1,23 @@
+"""Token sampling for the serving path."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jax.Array) -> jax.Array:
+    """logits [B, V] -> tokens [B]."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample(logits: jax.Array, key: jax.Array, temperature: float = 1.0,
+           top_k: int = 0) -> jax.Array:
+    """Temperature + optional top-k sampling; temperature 0 = greedy."""
+    if temperature <= 0.0:
+        return greedy(logits)
+    l32 = logits.astype(jnp.float32) / temperature
+    if top_k > 0:
+        kth = jax.lax.top_k(l32, top_k)[0][..., -1:]
+        l32 = jnp.where(l32 < kth, -jnp.inf, l32)
+    return jax.random.categorical(key, l32, axis=-1).astype(jnp.int32)

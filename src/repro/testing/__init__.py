@@ -1,0 +1,1 @@
+"""Multi-device test cases (run as subprocesses with fake host devices)."""

@@ -1,0 +1,402 @@
+"""Multi-device correctness cases, executed via subprocess:
+
+    python -m repro.testing.dist_cases <case> [--devices N]
+
+The device count must be fixed before jax initializes, so pytest never sets
+it in-process (smoke tests keep seeing 1 device); tests spawn this module
+instead.  Each case asserts internally and prints ``CASE_OK <name>``.
+"""
+
+import os
+import sys
+
+# --- device count BEFORE any jax import -----------------------------------
+_n = 8
+for i, a in enumerate(sys.argv):
+    if a == "--devices" and i + 1 < len(sys.argv):
+        _n = int(sys.argv[i + 1])
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + f" --xla_force_host_platform_device_count={_n}")
+
+import jax                    # noqa: E402
+import jax.numpy as jnp       # noqa: E402
+import numpy as np            # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+CASES = {}
+
+
+def case(fn):
+    CASES[fn.__name__] = fn
+    return fn
+
+
+def _setup_pattern(p, seed=0, max_count=13, feature=(4,)):
+    from repro.core import metadata as md, reference
+    rng = np.random.default_rng(seed)
+    counts = rng.integers(0, max_count, size=(p, p))
+    send_rows = max(md.round_up(md.max_total_send(counts), 8), 8)
+    recv_rows = max(md.round_up(md.max_total_recv(counts), 8), 8)
+    bufs = reference.make_testbufs(counts, feature, np.float32, send_rows)
+    expect = reference.alltoallv_global(bufs, counts, recv_rows)
+    rc = md.recv_counts(counts)
+    return counts, bufs, expect, rc, send_rows, recv_rows
+
+
+def _check(got, expect, rc, p):
+    for r in range(p):
+        n = int(rc[r].sum())
+        np.testing.assert_allclose(got[r, :n], expect[r, :n], rtol=1e-6)
+
+
+@case
+def alltoallv_variants():
+    """fence / lock(ring+pairwise) / hierarchy / baseline vs numpy oracle."""
+    from repro.core import alltoallv_init, metadata as md
+    from repro.core.baseline import make_nonpersistent
+    from repro.launch.mesh import make_host_mesh, make_mesh
+
+    p = len(jax.devices())
+    counts, bufs, expect, rc, send_rows, recv_rows = _setup_pattern(p)
+    mesh = make_host_mesh(p)
+    x = jax.device_put(jnp.asarray(bufs.reshape(p * send_rows, 4)),
+                       NamedSharding(mesh, P("x")))
+
+    for variant, kw in [("fence", {}), ("lock", {}),
+                        ("lock", {"lock_schedule": "pairwise"})]:
+        plan = alltoallv_init(counts, (4,), jnp.float32, mesh, axis="x",
+                              variant=variant, **kw)
+        got = np.asarray(plan.wait(plan.start(x))).reshape(p, recv_rows, 4)
+        _check(got, expect, rc, p)
+
+    plan0 = alltoallv_init(counts, (4,), jnp.float32, mesh, axis="x")
+    exe = make_nonpersistent(mesh, axis="x", p=p, capacity=plan0.capacity,
+                             send_rows=send_rows, recv_rows=recv_rows,
+                             feature_shape=(4,), dtype=jnp.float32)
+    cnts = jax.device_put(jnp.asarray(counts.reshape(-1), jnp.int32),
+                          NamedSharding(mesh, P("x")))
+    got = np.asarray(jax.block_until_ready(exe(x, cnts))).reshape(p, recv_rows, 4)
+    _check(got, expect, rc, p)
+
+    if p % 2 == 0:
+        mesh2 = make_mesh((2, p // 2), ("o", "i"))
+        x2 = jax.device_put(jnp.asarray(bufs.reshape(p * send_rows, 4)),
+                            NamedSharding(mesh2, P(("o", "i"))))
+        plan = alltoallv_init(counts, (4,), jnp.float32, mesh2, axis=("o", "i"),
+                              variant="fence_hierarchy")
+        got = np.asarray(plan.wait(plan.start(x2))).reshape(p, recv_rows, 4)
+        _check(got, expect, rc, p)
+
+
+@case
+def alltoallv_dtypes_and_features():
+    """Shape/dtype sweep for the fence engine."""
+    from repro.core import alltoallv_init, metadata as md, reference
+    from repro.launch.mesh import make_host_mesh
+
+    p = len(jax.devices())
+    mesh = make_host_mesh(p)
+    for seed, feature, dtype in [(1, (8,), np.float32), (2, (3, 5), np.float32),
+                                 (3, (16,), np.float16), (4, (), np.float32)]:
+        rng = np.random.default_rng(seed)
+        counts = rng.integers(0, 9, size=(p, p))
+        send_rows = max(md.round_up(md.max_total_send(counts), 8), 8)
+        recv_rows = max(md.round_up(md.max_total_recv(counts), 8), 8)
+        bufs = reference.make_testbufs(counts, feature, dtype, send_rows)
+        expect = reference.alltoallv_global(bufs, counts, recv_rows)
+        rc = md.recv_counts(counts)
+        x = jax.device_put(jnp.asarray(bufs.reshape((p * send_rows,) + feature)),
+                           NamedSharding(mesh, P("x")))
+        plan = alltoallv_init(counts, feature, bufs.dtype, mesh, axis="x")
+        got = np.asarray(plan.wait(plan.start(x))).reshape((p, recv_rows) + feature)
+        for r in range(p):
+            n = int(rc[r].sum())
+            np.testing.assert_allclose(got[r, :n], expect[r, :n], rtol=1e-2)
+
+
+@case
+def plan_and_window_reuse():
+    """Plan cache hits, window reuse across epochs, re-INIT on size change."""
+    from repro.core import PlanCache, AlltoallvSpec
+    from repro.core.api import alltoallv_init
+    from repro.core.plan import AlltoallvPlan
+    from repro.launch.mesh import make_host_mesh
+
+    p = len(jax.devices())
+    mesh = make_host_mesh(p)
+    cache = PlanCache()
+    counts = np.arange(p * p, dtype=np.int64).reshape(p, p) % 7 + 1
+    plan1 = alltoallv_init(counts, (4,), jnp.float32, mesh, axis="x", cache=cache)
+    plan2 = alltoallv_init(counts, (4,), jnp.float32, mesh, axis="x", cache=cache)
+    assert plan1 is plan2 and cache.hits == 1 and cache.misses == 1
+
+    x = jax.device_put(jnp.zeros(plan1.global_send_shape, jnp.float32),
+                       NamedSharding(mesh, P("x")))
+    g0 = plan1.window.generation
+    for _ in range(3):
+        plan1.wait(plan1.start(x))
+    assert plan1.window.generation == max(g0, 1), "window must be reused"
+
+    # same total_recv_bytes, different pattern -> new plan, same window obj
+    counts2 = np.roll(counts, 1, axis=1)
+    plan3 = alltoallv_init(counts2, (4,), jnp.float32, mesh, axis="x", cache=cache)
+    assert plan3 is not plan1
+    assert plan3.window is plan1.window, "window cached by recv bytes"
+
+    # changed sizes -> new window
+    plan4 = alltoallv_init(counts * 2, (4,), jnp.float32, mesh, axis="x",
+                           cache=cache)
+    assert plan4.window is not plan1.window
+
+
+@case
+def ragged_backend_lowers():
+    """ragged_all_to_all traces + lowers (XLA:CPU cannot execute it)."""
+    from repro.core import AlltoallvPlan, AlltoallvSpec
+    from repro.launch.mesh import make_host_mesh
+
+    p = len(jax.devices())
+    mesh = make_host_mesh(p)
+    counts = np.random.default_rng(0).integers(0, 13, size=(p, p))
+    spec = AlltoallvSpec(send_counts=counts, feature_shape=(4,),
+                         dtype=jnp.float32, axis=("x",), variant="ragged")
+    plan = AlltoallvPlan(spec, mesh)
+    fn = jax.shard_map(plan.shard_fn, mesh=mesh, in_specs=(P("x"), P("x")),
+                       out_specs=P("x"), check_vma=False)
+    xs = jax.ShapeDtypeStruct(plan.global_send_shape, jnp.float32,
+                              sharding=NamedSharding(mesh, P("x")))
+    ws = jax.ShapeDtypeStruct(plan.global_recv_shape, jnp.float32,
+                              sharding=NamedSharding(mesh, P("x")))
+    txt = jax.jit(fn).lower(xs, ws).as_text()
+    assert "ragged_all_to_all" in txt
+
+
+@case
+def rma_kernels():
+    """Pallas remote-DMA fence/lock kernels vs oracle (TPU interpret mode)."""
+    from repro.kernels import ops, ref
+    from repro.launch.mesh import make_host_mesh
+
+    p = len(jax.devices())
+    mesh = make_host_mesh(p)
+    rng = np.random.default_rng(0)
+    for cap, feat in [(8, 100), (16, 128)]:
+        packed_all = rng.standard_normal((p, p * cap, feat)).astype(np.float32)
+        want = ref.a2a_bucketed_ref(packed_all, p, cap)
+        xg = jax.device_put(jnp.asarray(packed_all.reshape(p * p * cap, feat)),
+                            NamedSharding(mesh, P("x")))
+        for variant in ("fence", "lock"):
+            f = jax.shard_map(
+                lambda t: ops.rma_alltoallv(t, variant=variant, p=p,
+                                            capacity=cap, axis="x",
+                                            mesh_axes=("x",)),
+                mesh=mesh, in_specs=P("x"), out_specs=P("x"), check_vma=False)
+            got = np.asarray(f(xg)).reshape(p, p * cap, feat)
+            np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@case
+def pallas_pack_in_plan():
+    """Persistent plan with pack_impl='pallas' matches the oracle."""
+    from repro.core import alltoallv_init, metadata as md
+    from repro.launch.mesh import make_host_mesh
+
+    p = len(jax.devices())
+    counts, bufs, expect, rc, send_rows, recv_rows = _setup_pattern(p, seed=5,
+                                                                    max_count=9)
+    mesh = make_host_mesh(p)
+    x = jax.device_put(jnp.asarray(bufs.reshape(p * send_rows, 4)),
+                       NamedSharding(mesh, P("x")))
+    plan = alltoallv_init(counts, (4,), jnp.float32, mesh, axis="x",
+                          variant="fence", pack_impl="pallas")
+    got = np.asarray(plan.wait(plan.start(x))).reshape(p, recv_rows, 4)
+    _check(got, expect, rc, p)
+
+
+@case
+def moe_dispatch_distributed():
+    """persistent_a2a == nonpersistent_a2a == gspmd on a (data, model) mesh."""
+    import dataclasses
+
+    from repro.configs.base import MoEConfig
+    from repro.launch.mesh import make_mesh
+    from repro.models import moe as moe_mod
+    from repro.parallel.sharding import DEFAULT_RULES, ParamFactory, axis_rules
+
+    mesh = make_mesh((2, 4), ("data", "model"))
+    d_model, tokens = 64, 256
+    base = MoEConfig(n_experts=8, top_k=2, d_expert=32, capacity_factor=8.0)
+    with axis_rules(DEFAULT_RULES, mesh):
+        f = ParamFactory(jax.random.key(0), jnp.float32)
+        moe_mod.init_moe(f.scope("moe"), d_model, base)
+        params = f.params["moe"]
+        x = jax.device_put(
+            jnp.asarray(np.random.default_rng(0).standard_normal(
+                (2, tokens // 2, d_model)), jnp.float32),
+            NamedSharding(mesh, P("data", None, None)))
+        outs = {}
+        for dispatch in ("gspmd", "persistent_a2a", "nonpersistent_a2a"):
+            mcfg = dataclasses.replace(base, dispatch=dispatch)
+            plan = moe_mod.MoEDispatchPlan.build(mcfg, tokens // 2, mesh)
+            y, aux = jax.jit(lambda xx, m=mcfg, pl=plan:
+                             moe_mod.apply_moe(params, xx, m, pl))(x)
+            outs[dispatch] = np.asarray(y)
+        np.testing.assert_allclose(outs["persistent_a2a"], outs["gspmd"],
+                                   rtol=2e-4, atol=2e-5)
+        np.testing.assert_allclose(outs["persistent_a2a"],
+                                   outs["nonpersistent_a2a"],
+                                   rtol=2e-4, atol=2e-5)
+
+
+@case
+def compression_distributed():
+    """int8 EF psum ~= fp32 psum within quantization error bound."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.parallel import compression
+
+    p = len(jax.devices())
+    mesh = make_host_mesh(p)
+    rng = np.random.default_rng(0)
+    g = jax.device_put(jnp.asarray(rng.standard_normal((p, 4096)), jnp.float32),
+                       NamedSharding(mesh, P("x")))
+
+    def plain(x):
+        return jax.lax.psum(x, "x") / p
+
+    def comp(x):
+        out, err = compression.compressed_psum(x, "x")
+        return out, err
+
+    f0 = jax.jit(jax.shard_map(plain, mesh=mesh, in_specs=P("x"),
+                               out_specs=P("x"), check_vma=False))
+    f1 = jax.jit(jax.shard_map(comp, mesh=mesh, in_specs=P("x"),
+                               out_specs=(P("x"), P("x")), check_vma=False))
+    want = np.asarray(f0(g))
+    got, err = f1(g)
+    # per-rank quant step bounds the error of the mean
+    step = float(jnp.max(jnp.abs(g))) / 127.0
+    assert float(jnp.max(jnp.abs(np.asarray(got) - want))) <= step, \
+        "compressed mean outside quantization bound"
+    assert float(jnp.max(jnp.abs(err))) <= step / 2 + 1e-7
+
+
+@case
+def elastic_reshard():
+    """Checkpoint saved under one sharding restores under another."""
+    import tempfile
+
+    from repro.ckpt.manager import CheckpointManager
+    from repro.ckpt.reshard import put_tree
+    from repro.launch.mesh import make_host_mesh, make_mesh
+
+    p = len(jax.devices())
+    mesh_a = make_host_mesh(p)          # 1-D
+    mesh_b = make_mesh((2, p // 2), ("data", "model"))
+    tree = {"w": jnp.arange(64 * 8, dtype=jnp.float32).reshape(64, 8),
+            "b": jnp.ones((8,), jnp.float32)}
+    placed = put_tree(tree, {"w": NamedSharding(mesh_a, P("x")),
+                             "b": NamedSharding(mesh_a, P())})
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(7, {"params": placed}, extras={"note": "reshard"})
+        step, trees, extras = mgr.load()
+        assert step == 7 and extras["note"] == "reshard"
+        re = put_tree(trees["params"],
+                      {"w": NamedSharding(mesh_b, P("data", "model")),
+                       "b": NamedSharding(mesh_b, P("model"))})
+        np.testing.assert_array_equal(np.asarray(re["w"]), np.asarray(tree["w"]))
+        assert re["w"].sharding.spec == P("data", "model")
+
+
+@case
+def ulysses_attention_matches_local():
+    """Sequence-parallel (Ulysses) attention == single-device attention."""
+    from repro.launch.mesh import make_mesh
+    from repro.models import ulysses
+    from repro.parallel.sharding import use_mesh
+
+    mesh = make_mesh((4,), ("model",))
+    b, s, h, d = 2, 32, 4, 8
+    rng = np.random.default_rng(0)
+    mk = lambda: jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    q, k, v = mk(), mk(), mk()
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    want = np.asarray(ulysses._attend(q, k, v, pos, True))
+    with use_mesh(mesh):
+        plan = ulysses.UlyssesPlan.build(h, d, mesh, axis="model")
+        assert plan.p == 4
+        qs = jax.device_put(q, NamedSharding(mesh, P(None, "model")))
+        ks = jax.device_put(k, NamedSharding(mesh, P(None, "model")))
+        vs = jax.device_put(v, NamedSharding(mesh, P(None, "model")))
+        got = np.asarray(ulysses.ulysses_attention(qs, ks, vs, pos, plan))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@case
+def hierarchical_psum():
+    """Pod-aware reduce == flat psum mean."""
+    from repro.launch.mesh import make_mesh
+    from repro.parallel.collectives import flat_psum_mean, hierarchical_psum_mean
+
+    mesh = make_mesh((2, 4), ("pod", "data"))
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((8, 16, 32)),
+                    jnp.float32)
+    xs = jax.device_put(x, NamedSharding(mesh, P(("pod", "data"))))
+
+    def hier(t):
+        return hierarchical_psum_mean(t, inner_axis="data", outer_axis="pod",
+                                      scatter_dim=1)
+
+    def flat(t):
+        return flat_psum_mean(t, ("pod", "data"))
+
+    fh = jax.jit(jax.shard_map(hier, mesh=mesh, in_specs=P(("pod", "data")),
+                               out_specs=P(("pod", "data")), check_vma=False))
+    ff = jax.jit(jax.shard_map(flat, mesh=mesh, in_specs=P(("pod", "data")),
+                               out_specs=P(("pod", "data")), check_vma=False))
+    np.testing.assert_allclose(np.asarray(fh(xs)), np.asarray(ff(xs)),
+                               rtol=1e-5, atol=1e-6)
+    # the hierarchical schedule really reduce-scatters: check HLO
+    txt = jax.jit(jax.shard_map(hier, mesh=mesh, in_specs=P(("pod", "data")),
+                                out_specs=P(("pod", "data")),
+                                check_vma=False)).lower(xs).compile().as_text()
+    assert "reduce-scatter" in txt or "all-to-all" in txt
+
+
+@case
+def production_mesh_mini():
+    """Mini production dry-run: reduced configs lower+compile on a
+    (pod, data, model) mesh with every axis > 1."""
+    from repro.configs import SHAPES, ShapeConfig, get_reduced
+    from repro.launch import steps as steps_mod
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    for arch in ("olmoe-1b-7b", "jamba-v0.1-52b"):
+        cfg = get_reduced(arch)
+        shape = ShapeConfig("train_mini", "train", 256, 8)
+        c = steps_mod.make_train_bundle(cfg, shape, mesh).compile()
+        assert c.cost_analysis() is not None
+        d_shape = ShapeConfig("decode_mini", "decode", 256, 8)
+        c = steps_mod.make_decode_bundle(cfg, d_shape, mesh).compile()
+        assert c.cost_analysis() is not None
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("case")
+    ap.add_argument("--devices", type=int, default=8)
+    args = ap.parse_args()
+    if args.case == "all":
+        for name, fn in CASES.items():
+            fn()
+            print(f"CASE_OK {name}", flush=True)
+    else:
+        CASES[args.case]()
+        print(f"CASE_OK {args.case}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Gradient utilities: global-norm clipping and microbatch accumulation."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def accumulate_grads(loss_fn, params, batch, n_micro: int, constrain=None):
+    """Split the batch into n_micro slices along dim 0 and scan-accumulate.
+
+    loss_fn(params, microbatch) -> (loss, metrics).  Returns mean-reduced
+    (loss, metrics, grads).  ``constrain`` (tree -> tree) applies sharding
+    constraints to each microbatch's grads — passing the ZeRO shardings here
+    makes GSPMD reduce-scatter every micro-step instead of holding
+    model-sharded fp32 grads (ZeRO-2).
+    """
+    constrain = constrain or (lambda g: g)
+    if n_micro <= 1:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        return loss, metrics, constrain(grads)
+
+    def reshape(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, (b, n_micro)
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+    micro = jax.tree.map(reshape, batch)
+
+    def body(carry, mb):
+        acc_loss, acc_metrics, acc_grads = carry
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, mb)
+        acc = constrain(jax.tree.map(jnp.add, acc_grads, constrain(grads)))
+        return (acc_loss + loss,
+                jax.tree.map(jnp.add, acc_metrics, metrics), acc), None
+
+    (loss0, metrics0), grads0 = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, jax.tree.map(lambda x: x[0], micro))
+    carry0 = (loss0, metrics0,
+              constrain(jax.tree.map(lambda g: g.astype(jnp.float32), grads0)))
+    rest = jax.tree.map(lambda x: x[1:], micro)
+    (loss, metrics, grads), _ = jax.lax.scan(body, carry0, rest)
+    inv = 1.0 / n_micro
+    return (loss * inv,
+            jax.tree.map(lambda x: x * inv, metrics),
+            jax.tree.map(lambda g: g * inv, grads))

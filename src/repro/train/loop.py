@@ -1,0 +1,135 @@
+"""Training loop: checkpoint/restart fault tolerance, straggler detection,
+auto-resume, deterministic data replay."""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt.manager import CheckpointManager
+from repro.ckpt.reshard import put_tree
+from repro.data.pipeline import DataPipeline
+from repro.models import api as model_api
+from repro.runtime.fault import RetryPolicy, run_with_recovery
+from repro.runtime.straggler import StragglerDetector
+from repro.train import optimizer as opt_mod
+
+log = logging.getLogger("repro.train")
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    n_steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    ckpt_keep: int = 3
+    async_ckpt: bool = True
+    log_every: int = 10
+    max_restarts: int = 3
+    seed: int = 0
+
+
+class Trainer:
+    """Owns device state + the recovery discipline around a StepBundle."""
+
+    def __init__(self, bundle, tcfg: TrainerConfig):
+        self.bundle = bundle
+        self.tcfg = tcfg
+        self.cfg = bundle.meta["cfg"]
+        self.shape = bundle.meta["shape"]
+        self.mesh = bundle.mesh
+        self.pipe = DataPipeline(self.cfg, self.shape.seq_len,
+                                 self.shape.global_batch, self.mesh,
+                                 seed=1234 + tcfg.seed)
+        self.ckpt = (CheckpointManager(tcfg.ckpt_dir, keep=tcfg.ckpt_keep,
+                                       async_save=tcfg.async_ckpt)
+                     if tcfg.ckpt_dir else None)
+        self.straggler = StragglerDetector()
+        self.params = None
+        self.opt_state = None
+        self.start_step = 0
+        self.history: list[dict] = []
+
+    # -- state management ----------------------------------------------------
+    def init_state(self) -> None:
+        with self.bundle.trace_context():
+            self.params, _ = model_api.init_model(
+                jax.random.key(self.tcfg.seed), self.cfg)
+            self.params = put_tree(self.params, self.bundle.meta["param_shardings"])
+            self.opt_state = opt_mod.init_opt_state(
+                self.params, self.bundle.meta["adamw"])
+
+    def try_resume(self) -> bool:
+        if self.ckpt is None or self.ckpt.latest_step() is None:
+            return False
+        self._restore()
+        return True
+
+    def _restore(self) -> int:
+        step, trees, extras = self.ckpt.load()
+        with self.bundle.trace_context():
+            self.params = put_tree(trees["params"],
+                                   self.bundle.meta["param_shardings"])
+            self.opt_state = put_tree(trees["opt"],
+                                      self.bundle.meta["opt_shardings"])
+        self.pipe.load_state_dict(extras.get("data", {"step": step}))
+        self.start_step = step
+        log.info("restored checkpoint at step %d", step)
+        return step
+
+    def _save(self, step: int) -> None:
+        if self.ckpt is None:
+            return
+        self.ckpt.save(step, {"params": self.params, "opt": self.opt_state},
+                       extras={"data": self.pipe.state_dict(), "step": step})
+
+    # -- driving -------------------------------------------------------------
+    def _run_one(self, step: int) -> dict:
+        self.straggler.start()
+        batch = self.pipe.batch_at(step)
+        self.params, self.opt_state, metrics = self.bundle.jitted(
+            self.params, self.opt_state, batch, jnp.int32(step))
+        jax.block_until_ready(metrics)
+        report = self.straggler.stop(step)
+        if report is not None:
+            log.warning("straggler step %d: %.3fs (%.1fx EMA %.3fs)",
+                        report.step, report.seconds, report.ratio,
+                        report.ema_seconds)
+        out = {k: float(v) for k, v in metrics.items()}
+        if (step + 1) % self.tcfg.ckpt_every == 0 or \
+                (self.straggler.should_checkpoint_early()
+                 and self.ckpt is not None):
+            self._save(step + 1)
+        return out
+
+    def run(self, failure_hook: Optional[Callable[[int], None]] = None) -> dict:
+        if self.params is None and not self.try_resume():
+            self.init_state()
+            self._save(0)
+
+        def on_metrics(step: int, metrics: dict):
+            self.history.append({"step": step, **metrics})
+            if step % self.tcfg.log_every == 0:
+                log.info("step %d  %s", step,
+                         "  ".join(f"{k}={v:.4f}" for k, v in metrics.items()))
+
+        final = run_with_recovery(
+            self._run_one,
+            restore=self._restore,
+            start_step=self.start_step,
+            n_steps=self.tcfg.n_steps - self.start_step,
+            policy=RetryPolicy(max_restarts=self.tcfg.max_restarts),
+            failure_hook=failure_hook,
+            on_metrics=on_metrics,
+        )
+        if self.ckpt is not None:
+            self._save(final)
+            self.ckpt.wait()
+        return {"final_step": final,
+                "last_metrics": self.history[-1] if self.history else {},
+                "stragglers": len(self.straggler.flagged)}

@@ -1,0 +1,128 @@
+"""Hand-rolled AdamW with mixed precision and ZeRO-1-style state sharding.
+
+Params may live in bf16; the optimizer keeps fp32 master weights plus fp32
+(m, v).  ZeRO-1: optimizer-state leaves are additionally sharded over the
+``data`` (and ``pod``) axes on the first dimension that divides evenly and
+is not already model-sharded — the classic optimizer-state partitioning that
+makes 67B-scale state fit (state bytes scale 1/(dp x tp) instead of 1/tp).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.parallel.sharding import resolve
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    master_weights: bool = True   # keep fp32 master copy for bf16 params
+
+
+def init_opt_state(params, cfg: AdamWConfig):
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "m": jax.tree.map(zeros32, params),
+        "v": jax.tree.map(zeros32, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+    if cfg.master_weights:
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def adamw_update(grads, state, params, lr, cfg: AdamWConfig):
+    """Returns (new_params, new_state).  All math in fp32."""
+    count = state["count"] + 1
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p, master):
+        g32 = g.astype(jnp.float32)
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g32
+        v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        mhat = m_new / b1c
+        vhat = v_new / b2c
+        base = master if master is not None else p.astype(jnp.float32)
+        step = lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * base)
+        new_master = base - step
+        return m_new, v_new, new_master
+
+    masters = state.get("master")
+    if masters is None:
+        masters = jax.tree.map(lambda _: None, params)
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(params)
+    flat_ma = flat_p if state.get("master") is None else treedef.flatten_up_to(state["master"])
+
+    new_m, new_v, new_master = [], [], []
+    for g, m, v, p, ma in zip(flat_g, flat_m, flat_v, flat_p, flat_ma):
+        mn, vn, man = upd(g, m, v, p, ma if state.get("master") is not None else None)
+        new_m.append(mn)
+        new_v.append(vn)
+        new_master.append(man)
+
+    new_params = jax.tree.unflatten(
+        treedef, [ma.astype(p.dtype) for ma, p in zip(new_master, flat_p)])
+    new_state = {
+        "m": jax.tree.unflatten(treedef, new_m),
+        "v": jax.tree.unflatten(treedef, new_v),
+        "count": count,
+    }
+    if state.get("master") is not None:
+        new_state["master"] = jax.tree.unflatten(treedef, new_master)
+    return new_params, new_state
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 sharding of optimizer state
+# ---------------------------------------------------------------------------
+
+
+def zero1_pspec(logical_axes: tuple, shape: tuple, mesh: Mesh,
+                dp_axes: tuple[str, ...] = ("data",)) -> P:
+    """Param's resolved PartitionSpec, with the first even-dividing,
+    currently-unsharded dim additionally sharded over ``dp_axes``."""
+    base = resolve(logical_axes, shape)
+    parts = list(base) + [None] * (len(shape) - len(base))
+    dp = tuple(a for a in dp_axes
+               if a in mesh.axis_names and int(mesh.shape[a]) > 1)
+    if not dp:
+        return base
+    dp_total = int(np.prod([mesh.shape[a] for a in dp]))
+    for i, (dim, cur) in enumerate(zip(shape, parts)):
+        if cur is None and dim % dp_total == 0 and dim >= dp_total:
+            parts[i] = dp if len(dp) > 1 else dp[0]
+            break
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def opt_state_shardings(logical_specs, params, mesh: Mesh, cfg: AdamWConfig,
+                        zero1: bool = True, dp_axes=("data",)):
+    """NamedSharding tree matching init_opt_state's structure."""
+    def leaf_sharding(axes, p):
+        if zero1:
+            return NamedSharding(mesh, zero1_pspec(axes, p.shape, mesh, dp_axes))
+        return NamedSharding(mesh, resolve(axes))
+
+    per_param = jax.tree.map(leaf_sharding, logical_specs, params,
+                             is_leaf=lambda x: isinstance(x, tuple))
+    out = {"m": per_param, "v": per_param,
+           "count": NamedSharding(mesh, P())}
+    if cfg.master_weights:
+        out["master"] = per_param
+    return out

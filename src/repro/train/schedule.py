@@ -1,0 +1,44 @@
+"""LR schedules: linear warmup into cosine, linear, or WSD
+(warmup-stable-decay, MiniCPM arXiv:2404.06395)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    kind: str = "cosine"        # cosine | linear | wsd | constant
+    peak_lr: float = 3e-4
+    min_lr_ratio: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_steps: int = 1_000    # wsd: length of the final decay phase
+
+
+def lr_at(cfg: ScheduleConfig, step):
+    """Scalar (traced-friendly) learning rate at ``step``."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = (jnp.minimum(step / cfg.warmup_steps, 1.0)
+            if cfg.warmup_steps > 0 else jnp.float32(1.0))
+    peak = cfg.peak_lr
+    floor = cfg.peak_lr * cfg.min_lr_ratio
+
+    if cfg.kind == "constant":
+        return peak * warm
+    if cfg.kind == "linear":
+        frac = jnp.clip((step - cfg.warmup_steps) /
+                        jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        return warm * (peak + (floor - peak) * frac)
+    if cfg.kind == "cosine":
+        frac = jnp.clip((step - cfg.warmup_steps) /
+                        jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        return warm * (floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * frac)))
+    if cfg.kind == "wsd":
+        decay_start = cfg.total_steps - cfg.decay_steps
+        frac = jnp.clip((step - decay_start) / jnp.maximum(cfg.decay_steps, 1), 0, 1)
+        # stable at peak until decay_start, then linear to floor
+        return warm * (peak + (floor - peak) * frac)
+    raise ValueError(cfg.kind)

@@ -1,0 +1,42 @@
+"""Quantized gradient compression: single-device property tests
+(distributed behavior covered in test_distributed.py)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.parallel import compression
+
+
+@settings(max_examples=30)
+@given(st.integers(0, 10_000), st.floats(1e-6, 1e3))
+def test_quantize_roundtrip_error_bound(seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(256) * scale, jnp.float32)
+    q, s = compression.quantize_int8(x)
+    back = compression.dequantize_int8(q, s)
+    step = float(jnp.max(jnp.abs(x))) / 127.0
+    assert float(jnp.max(jnp.abs(back - x))) <= step / 2 + 1e-9
+    assert q.dtype == jnp.int8
+
+
+def test_error_feedback_removes_bias():
+    """Repeatedly compressing the same gradient with error feedback must
+    deliver the exact value in aggregate (bias-free in the long run)."""
+    g = jnp.asarray(np.random.default_rng(0).standard_normal(64), jnp.float32)
+    err = jnp.zeros_like(g)
+    delivered = jnp.zeros_like(g)
+    n = 50
+    for _ in range(n):
+        x = g + err
+        q, s = compression.quantize_int8(x)
+        deq = compression.dequantize_int8(q, s)
+        err = x - deq
+        delivered = delivered + deq
+    np.testing.assert_allclose(np.asarray(delivered / n), np.asarray(g),
+                               atol=float(jnp.max(jnp.abs(g))) / 127.0)
+
+
+def test_zero_gradient():
+    q, s = compression.quantize_int8(jnp.zeros(16))
+    assert float(jnp.max(jnp.abs(compression.dequantize_int8(q, s)))) == 0.0

@@ -1,0 +1,56 @@
+"""Multi-device correctness: every case runs in a subprocess with fake host
+devices (the device count must precede jax init; see conftest.run_case)."""
+
+import pytest
+
+
+def test_alltoallv_variants(dist):
+    dist("alltoallv_variants", devices=8)
+
+
+def test_alltoallv_small_world(dist):
+    dist("alltoallv_variants", devices=2)
+
+
+def test_alltoallv_dtypes_and_features(dist):
+    dist("alltoallv_dtypes_and_features", devices=4)
+
+
+def test_plan_and_window_reuse(dist):
+    dist("plan_and_window_reuse", devices=4)
+
+
+def test_ragged_backend_lowers(dist):
+    dist("ragged_backend_lowers", devices=8)
+
+
+def test_rma_kernels(dist):
+    dist("rma_kernels", devices=4)
+
+
+def test_pallas_pack_in_plan(dist):
+    dist("pallas_pack_in_plan", devices=4)
+
+
+def test_moe_dispatch_distributed(dist):
+    dist("moe_dispatch_distributed", devices=8)
+
+
+def test_compression_distributed(dist):
+    dist("compression_distributed", devices=4)
+
+
+def test_elastic_reshard(dist):
+    dist("elastic_reshard", devices=4)
+
+
+def test_ulysses_attention(dist):
+    dist("ulysses_attention_matches_local", devices=4)
+
+
+def test_hierarchical_psum(dist):
+    dist("hierarchical_psum", devices=8)
+
+
+def test_production_mesh_mini(dist):
+    dist("production_mesh_mini", devices=8, timeout=1800)

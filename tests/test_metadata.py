@@ -1,0 +1,115 @@
+"""Property tests (hypothesis) for the INIT-phase metadata math."""
+
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import breakeven, metadata as md
+
+
+counts_matrices = st.integers(2, 10).flatmap(
+    lambda p: st.lists(
+        st.lists(st.integers(0, 50), min_size=p, max_size=p),
+        min_size=p, max_size=p).map(np.array))
+
+
+@given(counts_matrices)
+def test_conservation(counts):
+    """Total sent == total received; per-pair counts transpose exactly."""
+    rc = md.recv_counts(counts)
+    assert rc.sum() == counts.sum()
+    np.testing.assert_array_equal(rc.T, counts)
+
+
+@given(counts_matrices)
+def test_displacements_monotone_and_tight(counts):
+    d = md.displacements(counts)
+    p = counts.shape[0]
+    for i in range(p):
+        assert d[i, 0] == 0
+        np.testing.assert_array_equal(np.diff(d[i]), counts[i, :-1])
+        assert d[i, -1] + counts[i, -1] == counts[i].sum()
+
+
+@given(counts_matrices)
+def test_put_displacements_land_inside_window(counts):
+    """put_displs[i, j] + count must fit rank j's receive window, and the
+    target regions of all senders must tile it without overlap."""
+    put = md.put_displacements(counts)
+    rc = md.recv_counts(counts)
+    p = counts.shape[0]
+    for j in range(p):
+        total = rc[j].sum()
+        spans = sorted((put[i, j], put[i, j] + counts[i, j]) for i in range(p))
+        pos = 0
+        for lo, hi in spans:
+            assert lo == pos and hi <= total
+            pos = hi
+        assert pos == total
+
+
+@given(counts_matrices)
+def test_capacity_covers_all_pairs(counts):
+    cap = md.global_capacity(counts)
+    assert cap >= counts.max()
+    assert cap % md.TILE_ROWS == 0
+    rcaps = md.ring_round_capacities(counts)
+    p = counts.shape[0]
+    for r in range(1, p):
+        diag = counts[np.arange(p), (np.arange(p) + r) % p]
+        assert rcaps[r] >= diag.max()
+        assert rcaps[r] <= cap  # persistent plans never exceed the fence cap
+
+
+@given(counts_matrices)
+def test_pack_unpack_index_maps_roundtrip(counts):
+    """Routing through pack map -> bucket transpose -> unpack map is exactly
+    the alltoallv permutation (numpy simulation of the full pipeline)."""
+    p = counts.shape[0]
+    cap = md.global_capacity(counts)
+    sd = md.displacements(counts)
+    rc = md.recv_counts(counts)
+    rd = md.displacements(rc)
+    send_rows = max(md.max_total_send(counts), 1)
+    recv_rows = max(md.max_total_recv(counts), 1)
+
+    data = [np.arange(send_rows) + 1000 * i for i in range(p)]
+    packed = np.zeros((p, p * cap))
+    for i in range(p):
+        src, valid = md.pack_index_map(counts[i], sd[i], cap)
+        packed[i] = np.where(valid, data[i][src], 0)
+    buckets = np.zeros_like(packed)
+    for i in range(p):
+        for j in range(p):
+            buckets[j, i * cap:(i + 1) * cap] = packed[i, j * cap:(j + 1) * cap]
+    for j in range(p):
+        src, valid = md.unpack_index_map(rc[j], rd[j], cap, recv_rows)
+        out = np.where(valid, buckets[j][src], 0)
+        # element-wise: rows from sender i carry values 1000*i + local_row
+        for i in range(p):
+            n = counts[i, j]
+            if n:
+                seg = out[rd[j, i]: rd[j, i] + n]
+                np.testing.assert_array_equal(
+                    seg, data[i][sd[i, j]: sd[i, j] + n])
+
+
+@given(st.floats(1e-6, 10), st.floats(1e-6, 10), st.floats(1e-6, 10))
+def test_breakeven_formula(t_init, t_mpi, t_persist):
+    n = breakeven.n_breakeven(t_init, t_mpi, t_persist)
+    if t_mpi <= t_persist:
+        assert n == float("inf")
+    else:
+        # n is the smallest integer where persistence wins
+        assert t_init + n * t_persist <= n * t_mpi + 1e-9
+        if n > 1:
+            m = n - 1
+            assert t_init + m * t_persist >= m * t_mpi - 1e-9
+
+
+def test_signature_identity():
+    c = np.array([[1, 2], [3, 4]])
+    s1 = md.PatternSignature.build(c, (4,), "float32", "fence", ("x",), 16)
+    s2 = md.PatternSignature.build(c.copy(), (4,), "float32", "fence", ("x",), 16)
+    s3 = md.PatternSignature.build(c + 1, (4,), "float32", "fence", ("x",), 16)
+    assert s1 == s2 and s1 != s3
+    assert s1.total_recv_bytes == c.sum() * 16

@@ -1,0 +1,86 @@
+"""Per-arch smoke tests: every assigned architecture instantiates at reduced
+scale and runs one forward + one train step on CPU — shapes + finiteness.
+(The FULL configs are exercised via the dry-run only.)"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced, list_archs
+from repro.data.pipeline import DataPipeline
+from repro.models import api as model_api
+
+SEQ = 64
+BATCH = 2
+
+
+def _batch_for(cfg):
+    pipe = DataPipeline(cfg, SEQ, BATCH, mesh=None, seed=7)
+    return pipe.batch_at(0)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_smoke(arch):
+    cfg = get_reduced(arch)
+    params, specs = model_api.init_model(jax.random.key(0), cfg)
+
+    # logical specs mirror the params tree exactly
+    assert jax.tree.structure(jax.tree.map(lambda x: 0, params)) == \
+        jax.tree.structure(jax.tree.map(lambda x: 0, specs,
+                                        is_leaf=lambda s: isinstance(s, tuple)))
+
+    batch = _batch_for(cfg)
+    loss, metrics = model_api.model_loss(params, cfg, batch)
+    assert np.isfinite(float(loss)), (arch, metrics)
+    assert 1.0 < float(loss) < 20.0, f"{arch}: implausible initial loss {loss}"
+
+    grads = jax.grad(lambda p: model_api.model_loss(p, cfg, batch)[0])(params)
+    gleaves = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in gleaves), arch
+    # at least one nonzero gradient per arch
+    assert any(float(jnp.max(jnp.abs(g))) > 0 for g in gleaves), arch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_abstract_init_matches(arch):
+    """abstract=True produces the same tree/shapes/dtypes as real init."""
+    cfg = get_reduced(arch)
+    real, _ = model_api.init_model(jax.random.key(0), cfg)
+    abst, _ = model_api.init_model(None, cfg, abstract=True)
+    rf = jax.tree_util.tree_flatten_with_path(real)[0]
+    af = jax.tree_util.tree_flatten_with_path(abst)[0]
+    assert len(rf) == len(af)
+    for (pr, r), (pa, a) in zip(rf, af):
+        assert pr == pa
+        assert r.shape == a.shape and r.dtype == a.dtype, (pr, r.shape, a.shape)
+
+
+def test_full_config_param_counts():
+    """Config arithmetic sanity for the full-size models (no allocation)."""
+    from repro.configs import get
+    from repro.roofline.analyze import count_params
+
+    expect = {
+        "deepseek-67b": (67e9, 69e9),
+        "nemotron-4-15b": (15e9, 16.5e9),
+        "minicpm-2b": (2.4e9, 3.0e9),
+        "olmo-1b": (1.0e9, 1.4e9),
+        "internvl2-26b": (19e9, 21e9),    # LM backbone (ViT is stubbed)
+        "olmoe-1b-7b": (6.5e9, 7.5e9),
+        "xlstm-125m": (0.08e9, 0.17e9),
+        "whisper-base": (0.06e9, 0.09e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        total, active = count_params(get(arch))
+        assert lo <= total <= hi, f"{arch}: {total/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"
+        assert active <= total
+
+
+def test_moe_active_params_less_than_total():
+    from repro.configs import get
+    from repro.roofline.analyze import count_params
+
+    for arch in ("olmoe-1b-7b", "moonshot-v1-16b-a3b", "jamba-v0.1-52b"):
+        total, active = count_params(get(arch))
+        assert active < total * 0.6, f"{arch} active {active/1e9:.1f}B vs {total/1e9:.1f}B"

@@ -1,0 +1,128 @@
+"""Optimizer / schedule / grad-utility unit tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import grad as grad_util
+from repro.train import optimizer as opt_mod
+from repro.train import schedule as sched_mod
+
+
+def test_adamw_matches_reference():
+    """Two steps of our AdamW == a straightforward numpy implementation."""
+    cfg = opt_mod.AdamWConfig(b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+                              master_weights=False)
+    rng = np.random.default_rng(0)
+    p0 = rng.standard_normal((4, 3)).astype(np.float32)
+    params = {"w": jnp.asarray(p0)}
+    state = opt_mod.init_opt_state(params, cfg)
+    lr = 1e-2
+
+    m = np.zeros_like(p0)
+    v = np.zeros_like(p0)
+    p_ref = p0.copy()
+    for t in range(1, 3):
+        g = rng.standard_normal(p0.shape).astype(np.float32)
+        params, state = opt_mod.adamw_update({"w": jnp.asarray(g)}, state,
+                                             params, lr, cfg)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / (1 - cfg.b1 ** t)
+        vh = v / (1 - cfg.b2 ** t)
+        p_ref = p_ref - lr * (mh / (np.sqrt(vh) + cfg.eps)
+                              + cfg.weight_decay * p_ref)
+        np.testing.assert_allclose(np.asarray(params["w"]), p_ref, rtol=1e-5)
+
+
+def test_adamw_master_weights_bf16():
+    """bf16 params keep full-precision masters; updates accumulate there."""
+    cfg = opt_mod.AdamWConfig(weight_decay=0.0, master_weights=True)
+    params = {"w": jnp.ones((8,), jnp.bfloat16)}
+    state = opt_mod.init_opt_state(params, cfg)
+    assert state["master"]["w"].dtype == jnp.float32
+    g = {"w": jnp.full((8,), 1e-4, jnp.float32)}
+    for _ in range(10):
+        params, state = opt_mod.adamw_update(g, state, params, 1e-5, cfg)
+    # master moved even though each bf16 step may round to nothing
+    assert float(jnp.max(jnp.abs(state["master"]["w"] - 1.0))) > 0
+    assert params["w"].dtype == jnp.bfloat16
+
+
+def test_schedules():
+    cfg = sched_mod.ScheduleConfig(kind="wsd", peak_lr=1.0, min_lr_ratio=0.1,
+                                   warmup_steps=10, total_steps=100,
+                                   decay_steps=20)
+    # warmup
+    assert float(sched_mod.lr_at(cfg, 0)) == 0.0
+    assert abs(float(sched_mod.lr_at(cfg, 5)) - 0.5) < 1e-6
+    # stable plateau
+    assert abs(float(sched_mod.lr_at(cfg, 50)) - 1.0) < 1e-6
+    assert abs(float(sched_mod.lr_at(cfg, 79)) - 1.0) < 1e-6
+    # decay tail
+    assert abs(float(sched_mod.lr_at(cfg, 100)) - 0.1) < 1e-6
+    mid = float(sched_mod.lr_at(cfg, 90))
+    assert 0.1 < mid < 1.0
+
+    cos = sched_mod.ScheduleConfig(kind="cosine", peak_lr=1.0, warmup_steps=0,
+                                   total_steps=100, min_lr_ratio=0.0)
+    assert abs(float(sched_mod.lr_at(cos, 0)) - 1.0) < 1e-6
+    assert abs(float(sched_mod.lr_at(cos, 100))) < 1e-6
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 3.0), "b": jnp.full((10,), 4.0)}
+    clipped, gn = grad_util.clip_by_global_norm(g, 1.0)
+    assert abs(float(gn) - np.sqrt(250)) < 1e-4
+    new_norm = grad_util.global_norm(clipped)
+    assert abs(float(new_norm) - 1.0) < 1e-5
+    # below threshold -> untouched
+    clipped2, _ = grad_util.clip_by_global_norm(g, 100.0)
+    np.testing.assert_allclose(np.asarray(clipped2["a"]), 3.0, rtol=1e-6)
+
+
+def test_accumulate_grads_matches_full_batch():
+    """n_micro=4 accumulation == single-shot full-batch grads."""
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((8, 4)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((16, 4)), jnp.float32)
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"]
+        l = jnp.mean(jnp.square(pred - batch["y"]))
+        return l, {"l": l}
+
+    batch = {"x": x, "y": y}
+    l1, m1, g1 = grad_util.accumulate_grads(loss_fn, {"w": w}, batch, 1)
+    l4, m4, g4 = grad_util.accumulate_grads(loss_fn, {"w": w}, batch, 4)
+    np.testing.assert_allclose(float(l1), float(l4), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(g1["w"]), np.asarray(g4["w"]),
+                               rtol=1e-5)
+
+
+def test_zero1_pspec_divisibility():
+    import jax as _jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_mesh
+    from repro.parallel.sharding import axis_rules, DEFAULT_RULES
+
+    import dataclasses
+
+    @dataclasses.dataclass
+    class FakeMesh:
+        shape: dict
+        @property
+        def axis_names(self):
+            return tuple(self.shape)
+
+    mesh = FakeMesh({"data": 4, "model": 2})
+    with axis_rules(DEFAULT_RULES, mesh):
+        # indivisible dims are never sharded
+        spec = opt_mod.zero1_pspec(("embed", "ff"), (7, 13), mesh)
+        assert spec == P()
+        # divisible dim0 gets the data axis on top of model on dim1
+        spec = opt_mod.zero1_pspec(("embed", "ff"), (8, 12), mesh)
+        assert spec == P("data", "model")

@@ -1,0 +1,92 @@
+"""Logical-axis resolution unit tests (divisibility, conflicts, profiles)."""
+
+import dataclasses
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import make_mesh
+from repro.parallel.sharding import (DECODE_RULES, DEFAULT_RULES,
+                                     LONG_CONTEXT_RULES, axis_rules, resolve)
+
+
+@dataclasses.dataclass
+class FakeMesh:
+    """Axis-name/shape stub — resolve() never touches devices."""
+    shape: dict
+    @property
+    def axis_names(self):
+        return tuple(self.shape)
+
+
+def make_fake(shape, axes):
+    return FakeMesh(dict(zip(axes, shape)))
+
+
+def test_resolve_basic():
+    mesh = make_fake((2, 2), ("data", "model"))
+    with axis_rules(DEFAULT_RULES, mesh):
+        assert resolve(("batch", "seq", "embed")) == P("data")
+        assert resolve(("embed", "ff")) == P(None, "model")
+        assert resolve(("vocab", "embed")) == P("model")
+
+
+def test_resolve_skips_trivial_axes():
+    mesh = make_fake((1, 1), ("data", "model"))
+    with axis_rules(DEFAULT_RULES, mesh):
+        assert resolve(("batch", "seq", "embed")) == P()
+        assert resolve(("embed", "ff")) == P()
+
+
+def test_resolve_divisibility_drops():
+    mesh = make_fake((1, 2), ("data", "model"))
+    with axis_rules(DEFAULT_RULES, mesh):
+        # kv_heads=3 can't split model=2 -> dropped
+        assert resolve(("embed", "kv_heads", "head_dim"), (64, 3, 16)) == P()
+        assert resolve(("embed", "kv_heads", "head_dim"), (64, 4, 16)) == \
+            P(None, "model")
+
+
+def test_resolve_axis_conflict_first_wins():
+    mesh = make_fake((2, 2), ("data", "model"))
+    with axis_rules(DECODE_RULES, mesh):
+        # decode rules: seq takes the model axis; heads loses it
+        spec = resolve(("batch", "seq", "kv_heads", "head_dim"),
+                       (4, 128, 8, 32))
+        assert spec == P("data", "model")
+        # seq=1 undividable -> heads gets the axis back
+        spec = resolve(("batch", "seq", "heads", "head_dim"), (4, 1, 8, 32))
+        assert spec == P("data", None, "model")
+
+
+def test_long_context_rules():
+    mesh = make_fake((2, 2, 2), ("pod", "data", "model"))
+    with axis_rules(LONG_CONTEXT_RULES, mesh):
+        # batch replicated, seq -> data
+        assert resolve(("batch", "seq", "kv_heads", "head_dim"),
+                       (1, 1024, 8, 32)) == P(None, "data", "model")
+
+
+def test_multi_axis_batch():
+    mesh = make_fake((2, 2, 2), ("pod", "data", "model"))
+    with axis_rules(DEFAULT_RULES, mesh):
+        spec = resolve(("batch", "seq"), (8, 64))
+        assert spec == P(("pod", "data"))
+        # batch=2 divides pod only
+        spec = resolve(("batch", "seq"), (2, 64))
+        assert spec == P("pod")
+
+
+def test_param_factory_records_specs():
+    from repro.parallel.sharding import ParamFactory, normal_init
+
+    f = ParamFactory(jax.random.key(0), dtype=np.float32)
+    f.param("a/w", (4, 8), ("embed", "ff"), normal_init(1.0))
+    f.param("a/b", (8,), ("ff",), normal_init(1.0))
+    assert f.params["a"]["w"].shape == (4, 8)
+    assert f.logical_specs["a"]["w"] == ("embed", "ff")
+    # abstract mode: same tree, ShapeDtypeStructs
+    fa = ParamFactory(None, dtype=np.float32, abstract=True)
+    fa.param("a/w", (4, 8), ("embed", "ff"), normal_init(1.0))
+    assert isinstance(fa.params["a"]["w"], jax.ShapeDtypeStruct)

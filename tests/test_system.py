@@ -1,0 +1,48 @@
+"""End-to-end system behaviour: the full train CLI and serve CLI run on a
+reduced architecture, checkpoint, resume, and generate."""
+
+import os
+import subprocess
+import sys
+import tempfile
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
+
+
+def _run(args, timeout=900):
+    env = dict(os.environ, PYTHONPATH=SRC + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    r = subprocess.run([sys.executable, "-m"] + args, capture_output=True,
+                       text=True, timeout=timeout, env=env, cwd=ROOT)
+    assert r.returncode == 0, f"{args} failed:\n{r.stdout[-2000:]}\n{r.stderr[-3000:]}"
+    return r.stdout
+
+
+def test_train_cli_end_to_end():
+    with tempfile.TemporaryDirectory() as d:
+        out = _run(["repro.launch.train", "--arch", "olmoe-1b-7b", "--reduced",
+                    "--steps", "6", "--seq-len", "128", "--global-batch", "4",
+                    "--ckpt-dir", d, "--ckpt-every", "3", "--log-every", "2"])
+        assert "train finished" in out and "'final_step': 6" in out
+        assert any(p.startswith("step_") for p in os.listdir(d))
+
+        # resume continues from the checkpoint
+        out = _run(["repro.launch.train", "--arch", "olmoe-1b-7b", "--reduced",
+                    "--steps", "8", "--seq-len", "128", "--global-batch", "4",
+                    "--ckpt-dir", d, "--ckpt-every", "4", "--log-every", "2"])
+        assert "'final_step': 8" in out
+
+
+def test_serve_cli():
+    out = _run(["repro.launch.serve", "--arch", "olmo-1b", "--reduced",
+                "--batch", "2", "--prompt-len", "16", "--tokens", "4"])
+    assert "generated (2, 4)" in out
+
+
+def test_train_cli_dispatch_override():
+    out = _run(["repro.launch.train", "--arch", "olmoe-1b-7b", "--reduced",
+                "--steps", "2", "--seq-len", "64", "--global-batch", "2",
+                "--dispatch", "nonpersistent_a2a", "--a2a-variant", "lock",
+                "--log-every", "1"])
+    assert "'final_step': 2" in out
