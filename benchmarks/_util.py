@@ -10,6 +10,7 @@ ranks implicit in single-process host timing.
 from __future__ import annotations
 
 import csv
+import json
 import os
 import sys
 import time
@@ -50,3 +51,35 @@ class Csv:
             w = csv.writer(f)
             w.writerow(["name", "us_per_call", "derived"])
             w.writerows(self.rows)
+
+    def save_json(self, path: str) -> None:
+        """Machine-readable per-benchmark results (perf trajectory across PRs)."""
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        payload = [{"name": n, "us_per_call": float(us), "derived": d}
+                   for n, us, d in self.rows]
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+
+
+def rows_to_json(stdout_text: str, path: str) -> int:
+    """Parse ``name,us_per_call,derived`` CSV rows from captured benchmark
+    stdout and write them as JSON; returns the number of rows written."""
+    rows = []
+    for line in stdout_text.splitlines():
+        parts = line.split(",", 2)
+        # Benchmark rows are "<bench>/<case>,<float>,..."; requiring the
+        # slash filters stray library output that happens to contain commas.
+        if len(parts) < 2 or line.startswith("#") or "/" not in parts[0]:
+            continue
+        try:
+            us = float(parts[1])
+        except ValueError:
+            continue
+        rows.append({"name": parts[0], "us_per_call": us,
+                     "derived": parts[2] if len(parts) > 2 else ""})
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=2)
+        f.write("\n")
+    return len(rows)

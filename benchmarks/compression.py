@@ -19,6 +19,7 @@ def main(iters=20, n_elems=1 << 20, out="experiments/bench/compression.csv"):
     import numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro.compat import shard_map
     from repro.launch.mesh import make_host_mesh
     from repro.parallel import compression
 
@@ -35,9 +36,9 @@ def main(iters=20, n_elems=1 << 20, out="experiments/bench/compression.csv"):
         out, _ = compression.compressed_psum(x, "x")
         return out
 
-    f_plain = jax.jit(jax.shard_map(plain, mesh=mesh, in_specs=P("x"),
+    f_plain = jax.jit(shard_map(plain, mesh=mesh, in_specs=P("x"),
                                     out_specs=P("x"), check_vma=False))
-    f_comp = jax.jit(jax.shard_map(comp, mesh=mesh, in_specs=P("x"),
+    f_comp = jax.jit(shard_map(comp, mesh=mesh, in_specs=P("x"),
                                    out_specs=P("x"), check_vma=False))
 
     csv = Csv(out)

@@ -3,18 +3,33 @@
 Uniform alltoallv with `bytes_per_pair` from 1 KiB to ~1 MiB across 8 ranks;
 compares the non-persistent baseline against the persistent fence and lock
 variants, and evaluates the break-even model (Eq. 1-3) at every size.
+
+Two extra persistent-fence rows quantify the hot-path work of this repo's
+own engine:
+
+  fence_ingraph    persistent plan with ``baked_metadata=False`` — the
+                   seed's behavior, recomputing pack/unpack index maps
+                   in-graph every epoch.  The gap to ``fence_persistent``
+                   is the pure metadata-hoisting win.
+  fence_pipelined  ``start_pipelined`` double-buffered epochs (epoch k+1
+                   dispatched while epoch k's output is consumed).
+
 The paper's headline claims to reproduce: persistence pays off beyond a
 message-size threshold; N_breakeven = 1 there; fence > lock.
+
+    python msg_sweep.py [iters] [--json]
 """
 
-import sys
+import argparse
 
 from _util import Csv, set_host_devices, time_call
 
 N_RANKS = 8
+JSON_OUT = "experiments/bench/BENCH_msg_sweep.json"
 
 
-def main(sizes=None, iters=30, out="experiments/bench/msg_sweep.csv"):
+def main(sizes=None, iters=30, out="experiments/bench/msg_sweep.csv",
+         json_out=None):
     set_host_devices(N_RANKS)
     import jax
     import jax.numpy as jnp
@@ -47,6 +62,10 @@ def main(sizes=None, iters=30, out="experiments/bench/msg_sweep.csv"):
             plans[variant] = alltoallv_init(counts, (feature,), jnp.float32,
                                             mesh, axis="x", variant=variant)
             plans[variant].compile()
+        plan_ingraph = alltoallv_init(counts, (feature,), jnp.float32, mesh,
+                                      axis="x", variant="fence",
+                                      baked_metadata=False)
+        plan_ingraph.compile()
 
         base = make_nonpersistent(
             mesh, axis="x", p=N_RANKS, capacity=plans["fence"].capacity,
@@ -55,21 +74,58 @@ def main(sizes=None, iters=30, out="experiments/bench/msg_sweep.csv"):
         cnts = jax.device_put(jnp.asarray(counts.reshape(-1), jnp.int32),
                               NamedSharding(mesh, P("x")))
 
-        t_base = time_call(lambda: base(x, cnts), iters)
+        # All arms measured with the SAME estimator: interleaved short
+        # bursts, min of burst means per arm.  Interleaving + min is robust
+        # to drifting background load on a shared host (a sequential pass
+        # would attribute load swings to the code difference), and one
+        # estimator keeps every derived cross-arm metric comparable.
+        plan = plans["fence"]
+
+        def pipelined_pair():
+            plan.start_pipelined(x)       # in flight alongside the next one
+            return plan.start_pipelined(x)
+
+        arms = {
+            "baseline": lambda: base(x, cnts),
+            "fence": lambda: plan.start(x),
+            "lock": lambda: plans["lock"].start(x),
+            "ingraph": lambda: plan_ingraph.start(x),
+            "pipelined": pipelined_pair,
+        }
+        burst = max(iters // 4, 2)
+        samples = {name: [] for name in arms}
+        for _ in range(4):
+            for name, fn in arms.items():
+                samples[name].append(time_call(fn, burst, warmup=1))
+        t_base, t_fence, t_lock, t_ig = (min(samples[n]) for n in
+                                         ("baseline", "fence", "lock",
+                                          "ingraph"))
+        t_pipe = min(samples["pipelined"]) / 2.0   # two epochs per call
+
         csv.row(f"msg_sweep/baseline/{nbytes}B", t_base * 1e6,
                 f"bytes_per_pair={nbytes}")
-        for variant in ("fence", "lock"):
-            plan = plans[variant]
-            t = time_call(lambda: plan.start(x), iters)
+        for variant, t in (("fence", t_fence), ("lock", t_lock)):
             be = breakeven.BreakEven(
-                t_init=plan.init_host_seconds, t_persist=t, t_mpi=t_base,
+                t_init=plans[variant].init_host_seconds, t_persist=t,
+                t_mpi=t_base,
                 n_breakeven=breakeven.n_breakeven(
-                    plan.init_host_seconds, t_base, t))
+                    plans[variant].init_host_seconds, t_base, t))
             csv.row(f"msg_sweep/{variant}_persistent/{nbytes}B", t * 1e6,
                     f"savings={be.savings_pct:.1f}%;N_be={be.n_breakeven};"
-                    f"t_init_us={plan.init_host_seconds*1e6:.0f}")
+                    f"t_init_us={plans[variant].init_host_seconds*1e6:.0f}")
+        csv.row(f"msg_sweep/fence_ingraph/{nbytes}B", t_ig * 1e6,
+                f"baked_speedup={(t_ig - t_fence) / t_ig * 100.0:.1f}%")
+        csv.row(f"msg_sweep/fence_pipelined/{nbytes}B", t_pipe * 1e6,
+                f"overlap_gain={(t_fence - t_pipe) / t_fence * 100.0:.1f}%")
     csv.save()
+    if json_out:
+        csv.save_json(json_out)
 
 
 if __name__ == "__main__":
-    main(iters=int(sys.argv[1]) if len(sys.argv) > 1 else 30)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("iters", nargs="?", type=int, default=30)
+    ap.add_argument("--json", action="store_true",
+                    help=f"also write {JSON_OUT}")
+    args = ap.parse_args()
+    main(iters=args.iters, json_out=JSON_OUT if args.json else None)

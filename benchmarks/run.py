@@ -21,6 +21,8 @@ import sys
 
 HERE = os.path.dirname(os.path.abspath(__file__))
 SRC = os.path.abspath(os.path.join(HERE, "..", "src"))
+sys.path.insert(0, HERE)
+from _util import rows_to_json  # noqa: E402
 
 BENCHES = [
     ("weak_scaling", []),
@@ -35,11 +37,19 @@ BENCHES = [
 QUICK_ITERS = {"weak_scaling": None, "msg_sweep": "8", "breakeven_model": "8",
                "sparse_pattern": "8", "moe_dispatch": "5", "compression": "5"}
 
+# Benchmarks with a native --json flag write their own BENCH_<name>.json
+# (structured rows); for the rest run.py scrapes the captured stdout.  One
+# writer per file — never both.
+JSON_NATIVE = {"msg_sweep", "sparse_pattern"}
+
 
 def main(argv=None) -> int:
     p = argparse.ArgumentParser()
     p.add_argument("--quick", action="store_true", help="fewer iterations")
     p.add_argument("--only", default=None, help="comma list of benchmarks")
+    p.add_argument("--json", action="store_true",
+                   help="write per-benchmark us_per_call results to "
+                        "experiments/bench/BENCH_<name>.json")
     args = p.parse_args(argv)
 
     only = set(args.only.split(",")) if args.only else None
@@ -55,6 +65,8 @@ def main(argv=None) -> int:
         cmd = [sys.executable, os.path.join(HERE, name + ".py")] + extra
         if args.quick and QUICK_ITERS.get(name):
             cmd.append(QUICK_ITERS[name])
+        if args.json and name in JSON_NATIVE:
+            cmd.append("--json")
         print(f"# === {name} ===", flush=True)
         r = subprocess.run(cmd, env=env, text=True, capture_output=True)
         sys.stdout.write(r.stdout)
@@ -62,6 +74,10 @@ def main(argv=None) -> int:
             failures.append(name)
             sys.stderr.write(r.stderr[-3000:])
             print(f"# {name} FAILED", flush=True)
+        elif args.json and name not in JSON_NATIVE:
+            path = os.path.join("experiments", "bench", f"BENCH_{name}.json")
+            n = rows_to_json(r.stdout, path)
+            print(f"# wrote {path} ({n} rows)", flush=True)
     if failures:
         print(f"# benchmark failures: {failures}")
         return 1

@@ -9,13 +9,22 @@ partition rows across ranks to produce skewed count matrices.
 Reproduction targets: fence and fence_hierarchy cluster together (same
 global synchronization, different put order); lock degrades most under
 skew because the hottest pair gates every serialized round.
+
+A second, *strictly banded* pattern (zero outside one ring hop — the
+neighborhood-collective regime) exercises the persistent lock schedule's
+sparsity-aware round elision: only the non-empty diagonals run, reported as
+``rounds=active/total``, against the non-persistent lock baseline that must
+run every round at full capacity.
+
+    python sparse_pattern.py [iters] [--json]
 """
 
-import sys
+import argparse
 
 from _util import Csv, set_host_devices, time_call
 
 N_RANKS = 8
+JSON_OUT = "experiments/bench/BENCH_sparse_pattern.json"
 
 
 def hugetrace_like_counts(p: int, base_rows: int, seed: int = 7,
@@ -33,7 +42,19 @@ def hugetrace_like_counts(p: int, base_rows: int, seed: int = 7,
     return c
 
 
-def main(base_rows=48, iters=20, out="experiments/bench/sparse_pattern.csv"):
+def banded_counts(p: int, base_rows: int, width: int = 1, seed: int = 11):
+    """Strictly banded pattern: traffic only within ``width`` ring hops."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    c = np.zeros((p, p), np.int64)
+    for i in range(p):
+        for d in range(-width, width + 1):
+            c[i, (i + d) % p] = rng.integers(base_rows // 2, base_rows + 1)
+    return c
+
+
+def main(base_rows=48, iters=20, out="experiments/bench/sparse_pattern.csv",
+         json_out=None):
     set_host_devices(N_RANKS)
     import jax
     import jax.numpy as jnp
@@ -47,6 +68,8 @@ def main(base_rows=48, iters=20, out="experiments/bench/sparse_pattern.csv"):
 
     feature = 256
     counts = hugetrace_like_counts(N_RANKS, base_rows)
+    import os
+    os.makedirs("experiments/bench", exist_ok=True)
     np.savetxt("experiments/bench/sparse_counts_heatmap.csv", counts,
                fmt="%d", delimiter=",")
     send_rows = md.round_up(md.max_total_send(counts), 8)
@@ -86,8 +109,37 @@ def main(base_rows=48, iters=20, out="experiments/bench/sparse_pattern.csv"):
     t = time_call(lambda: plan_h.start(x2), iters)
     csv.row("sparse/fence_hierarchy_persistent", t * 1e6,
             f"recv_skew={skew:.2f}")
+
+    # --- strictly banded (neighborhood) pattern: round elision ------------
+    bcounts = banded_counts(N_RANKS, base_rows)
+    bsend_rows = md.round_up(md.max_total_send(bcounts), 8)
+    xb = jax.device_put(
+        jnp.asarray(np.random.default_rng(1).standard_normal(
+            (N_RANKS * bsend_rows, feature)), jnp.float32),
+        NamedSharding(mesh1d, P("x")))
+    plan_b = alltoallv_init(bcounts, (feature,), jnp.float32, mesh1d,
+                            axis="x", variant="lock").compile()
+    t = time_call(lambda: plan_b.start(xb), iters)
+    csv.row("sparse_banded/lock_persistent", t * 1e6,
+            f"rounds={plan_b.lock_rounds_active}/{plan_b.lock_rounds_total}")
+    base_b = make_nonpersistent(
+        mesh1d, axis="x", p=N_RANKS, capacity=plan_b.capacity,
+        send_rows=bsend_rows, recv_rows=plan_b.recv_rows,
+        feature_shape=(feature,), dtype=jnp.float32, variant="lock")
+    cnts_b = jax.device_put(jnp.asarray(bcounts.reshape(-1), jnp.int32),
+                            NamedSharding(mesh1d, P("x")))
+    t = time_call(lambda: base_b(xb, cnts_b), iters)
+    csv.row("sparse_banded/lock_baseline", t * 1e6,
+            f"rounds={N_RANKS - 1}/{N_RANKS - 1}")
     csv.save()
+    if json_out:
+        csv.save_json(json_out)
 
 
 if __name__ == "__main__":
-    main(iters=int(sys.argv[1]) if len(sys.argv) > 1 else 20)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("iters", nargs="?", type=int, default=20)
+    ap.add_argument("--json", action="store_true",
+                    help=f"also write {JSON_OUT}")
+    args = ap.parse_args()
+    main(iters=args.iters, json_out=JSON_OUT if args.json else None)

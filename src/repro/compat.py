@@ -1,0 +1,63 @@
+"""Version tolerance for the jax APIs this repo leans on.
+
+The codebase is written against the modern surface (``jax.shard_map`` with
+``check_vma``); older jax releases (0.4.x, as shipped in some containers)
+expose the same machinery as ``jax.experimental.shard_map.shard_map`` with
+the ``check_rep`` spelling.  Route every call through here so the rest of
+the tree stays on one idiom.
+"""
+
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)
+
+
+def axis_size(name) -> int:
+    """``jax.lax.axis_size`` (new) with a psum-of-ones fallback (0.4.x).
+
+    Call inside shard_map/pmap.  The fallback is constant-folded by XLA, so
+    both spellings are free at runtime.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+# --- optional primitives / Pallas TPU surface ------------------------------
+
+HAS_RAGGED_ALL_TO_ALL = hasattr(jax.lax, "ragged_all_to_all")
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` (new) / ``pltpu.TPUCompilerParams`` (0.4.x)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def tpu_interpret_params():
+    """The TPU-semantics Pallas interpreter config, or None if this jax
+    cannot interpret remote DMAs / semaphores on host (pre-InterpretParams
+    releases): callers must gate RMA-kernel execution on it."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "InterpretParams", None)
+    return cls() if cls is not None else None
+
+
+def has_tpu_interpret() -> bool:
+    return tpu_interpret_params() is not None

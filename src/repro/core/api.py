@@ -34,9 +34,14 @@ def alltoallv_init(
     lock_schedule: str = "ring",
     tile_rows: int | None = None,
     pack_impl: str = "jnp",
+    baked_metadata: bool = True,
     cache: PlanCache | None = None,
 ) -> AlltoallvPlan:
-    """Build (or fetch from cache) a persistent plan for a frozen pattern."""
+    """Build (or fetch from cache) a persistent plan for a frozen pattern.
+
+    ``baked_metadata=False`` reverts to in-graph index-map recomputation
+    (the seed behavior) — kept for A/B benchmarking only.
+    """
     from . import metadata as md
 
     axis_t = (axis,) if isinstance(axis, str) else tuple(axis)
@@ -49,6 +54,7 @@ def alltoallv_init(
         lock_schedule=lock_schedule,
         tile_rows=tile_rows if tile_rows is not None else md.TILE_ROWS,
         pack_impl=pack_impl,
+        baked_metadata=baked_metadata,
     )
     return (cache or _GLOBAL_CACHE).get(spec, mesh)
 

@@ -23,6 +23,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from ..compat import shard_map
 from . import variants
 
 
@@ -68,7 +69,7 @@ def make_nonpersistent(mesh, *, axis: str, p: int, capacity: int, send_rows: int
     fn = partial(nonpersistent_shard_fn, axis=axis, p=p, capacity=capacity,
                  recv_rows=recv_rows, variant=variant, lock_schedule=lock_schedule)
     x_spec = P(axis)
-    mapped = jax.shard_map(
+    mapped = shard_map(
         fn, mesh=mesh, in_specs=(x_spec, x_spec), out_specs=x_spec, check_vma=False)
     jitted = jax.jit(mapped)
     xs = jax.ShapeDtypeStruct((p * send_rows,) + tuple(feature_shape), dtype,

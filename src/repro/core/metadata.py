@@ -11,13 +11,23 @@ Everything here is the JAX/TPU rendition of what the paper's
     target's exposed window),
   * the capacity schedule that converts a ragged pattern into the statically
     shaped, tile-aligned layout XLA requires (global capacity for the fused
-    fence collective, per-round capacities for the lock schedule, and the
-    two-stage capacities for the hierarchical variant),
-  * pack/unpack gather index maps (constants once the pattern is frozen).
+    fence collective, per-round capacities for the lock schedule — zero for
+    rounds that carry no data anywhere, which the persistent plan elides —
+    and the two-stage capacities for the hierarchical variant),
+  * the sparsity analysis (``active_round_schedule``,
+    ``hierarchy_is_all_local``) that lets a plan skip empty lock rounds and
+    the outer-stage collective of an all-local hierarchical pattern,
+  * all-rank pack/unpack gather index maps (``baked_index_tables``), dense
+    ``[P, P*C]`` / ``[P, recv_rows]`` tables.
 
-All of it is plain numpy: it runs on host at INIT time and is baked into the
-compiled START executable as constants — that is precisely the persistence
-win on TPU (a non-persistent call recomputes these in-graph every iteration).
+All of it is plain numpy: it runs on host once at INIT time.  The scalar
+metadata is baked into the compiled START executable as constants; the
+index tables are uploaded once as device arrays sharded over the
+communication axis (each shard holds exactly its own row) and passed to
+every START, so no index-map arithmetic remains in the epoch hot path.
+That is precisely the persistence win on TPU; the non-persistent baseline
+recomputes all of this in-graph every iteration via the ``*_in_graph``
+twins in ``core.variants``.
 """
 
 from __future__ import annotations
@@ -92,14 +102,61 @@ def ring_round_capacities(
     shape must be uniform across ranks, so its capacity is the max count on
     that diagonal — the TPU expression of the paper's observation that one
     hot target gates the whole lock epoch.
+
+    A round whose diagonal is *entirely empty* gets capacity 0: under a
+    sparse (e.g. banded / neighborhood) pattern the persistent lock schedule
+    elides that round completely — no ``ppermute``, no buffer update — which
+    is where irregular-pattern speedups live (Träff's message combining,
+    Collom's neighborhood collectives).
     """
     c = _as_counts(send_counts)
     p = c.shape[0]
     caps = np.zeros(p, np.int64)
     for r in range(1, p):
         diag = c[np.arange(p), (np.arange(p) + r) % p]
-        caps[r] = max(round_up(int(diag.max(initial=0)), tile_rows), tile_rows)
+        m = int(diag.max(initial=0))
+        caps[r] = 0 if m == 0 else max(round_up(m, tile_rows), tile_rows)
     return caps
+
+
+def xor_round_capacities(
+    send_counts: np.ndarray, tile_rows: int = TILE_ROWS
+) -> np.ndarray:
+    """Per-round capacities for the pairwise (XOR) lock schedule.
+
+    Round r exchanges rank i -> rank i ^ r, so the gating diagonal is
+    ``c[i, i ^ r]`` — distinct from the ring diagonal.  Empty rounds get
+    capacity 0 (elided), same as ``ring_round_capacities``.
+    """
+    c = _as_counts(send_counts)
+    p = c.shape[0]
+    if p & (p - 1):
+        raise ValueError("pairwise schedule requires power-of-two P")
+    caps = np.zeros(p, np.int64)
+    for r in range(1, p):
+        diag = c[np.arange(p), np.arange(p) ^ r]
+        m = int(diag.max(initial=0))
+        caps[r] = 0 if m == 0 else max(round_up(m, tile_rows), tile_rows)
+    return caps
+
+
+def active_round_schedule(round_capacities: np.ndarray) -> np.ndarray:
+    """Indices of lock rounds that actually carry data (capacity > 0)."""
+    caps = np.asarray(round_capacities)
+    return np.nonzero(caps[1:] > 0)[0] + 1
+
+
+def hierarchy_is_all_local(send_counts: np.ndarray, p_outer: int, p_inner: int) -> bool:
+    """True iff no row crosses an outer-group boundary (outer-major ranks).
+
+    When every send stays within its own outer group, the hierarchical
+    variant's remote stage (the outer-axis collective) moves only padding;
+    a persistent plan detects this at INIT and skips the stage entirely.
+    """
+    c = _as_counts(send_counts)
+    outer = np.arange(p_outer * p_inner) // p_inner
+    cross = outer[:, None] != outer[None, :]
+    return not bool(c[cross].any())
 
 
 def hierarchy_shape(p: int, p_outer: int) -> tuple[int, int]:
@@ -160,6 +217,45 @@ def unpack_index_map(
 
 
 @dataclasses.dataclass(frozen=True)
+class BakedIndexTables:
+    """All-rank pack/unpack gather maps, fully materialized at INIT time.
+
+    ``pack_src``/``pack_valid`` are ``[P, P * capacity]``; ``unpack_src``/
+    ``unpack_valid`` are ``[P, recv_rows]``.  A persistent plan uploads
+    these once, sharded over the communication axis, so each device holds
+    exactly its own row (O(P*C) per device) — the per-epoch index-map
+    *recomputation* (iota / division / searchsorted chains) that the
+    in-graph twins in ``core.variants`` pay on every call disappears
+    entirely.
+    """
+
+    pack_src: np.ndarray
+    pack_valid: np.ndarray
+    unpack_src: np.ndarray
+    unpack_valid: np.ndarray
+
+
+def baked_index_tables(
+    send_counts: np.ndarray, capacity: int, recv_rows: int
+) -> BakedIndexTables:
+    """Precompute every rank's pack/unpack index maps as dense tables."""
+    c = _as_counts(send_counts)
+    p = c.shape[0]
+    sd = displacements(c)
+    rc = recv_counts(c)
+    rd = displacements(rc)
+    pack_src = np.zeros((p, p * capacity), np.int32)
+    pack_valid = np.zeros((p, p * capacity), bool)
+    unpack_src = np.zeros((p, recv_rows), np.int32)
+    unpack_valid = np.zeros((p, recv_rows), bool)
+    for i in range(p):
+        pack_src[i], pack_valid[i] = pack_index_map(c[i], sd[i], capacity)
+        unpack_src[i], unpack_valid[i] = unpack_index_map(
+            rc[i], rd[i], capacity, recv_rows)
+    return BakedIndexTables(pack_src, pack_valid, unpack_src, unpack_valid)
+
+
+@dataclasses.dataclass(frozen=True)
 class PatternSignature:
     """Hashable identity of a communication pattern (the plan-cache key).
 
@@ -184,11 +280,21 @@ class PatternSignature:
         variant: str,
         axis: Sequence[str],
         row_bytes: int,
+        lock_schedule: str = "ring",
+        tile_rows: int = TILE_ROWS,
+        pack_impl: str = "jnp",
+        baked_metadata: bool = True,
     ) -> "PatternSignature":
+        # Every spec field that changes the compiled executable must land in
+        # the digest: two specs differing only in lock_schedule / tile_rows /
+        # pack_impl / baked_metadata compile different START programs and
+        # must not share one cached plan.
         c = _as_counts(send_counts)
         h = hashlib.sha1()
         h.update(c.tobytes())
-        h.update(str((tuple(feature_shape), str(dtype), variant, tuple(axis))).encode())
+        h.update(str((tuple(feature_shape), str(dtype), variant, tuple(axis),
+                      lock_schedule, int(tile_rows), pack_impl,
+                      bool(baked_metadata))).encode())
         return PatternSignature(
             digest=h.hexdigest()[:16],
             p=c.shape[0],

@@ -5,14 +5,26 @@ pattern.  INIT performs, once:
 
   1. the metadata exchange (recv counts, displacements, put displacements),
   2. the capacity schedule (fence bucket size, per-round lock capacities,
-     hierarchy factorization),
-  3. window acquisition from the WindowCache (reused while total_recv_bytes
+     hierarchy factorization) plus the *sparsity analysis*: lock rounds whose
+     capacity is 0 are dropped from the epoch, and an all-local pattern lets
+     the hierarchical variant skip its outer-stage collective,
+  3. host-baked pack/unpack index tables (``metadata.baked_index_tables``):
+     every rank's gather maps are materialized as ``[P, P*C]`` /
+     ``[P, recv_rows]`` tables, uploaded once *sharded over the
+     communication axis* (each device holds only its own row), and handed
+     to every START — per-epoch metadata recomputation vanishes (the
+     in-graph twins in ``core.variants`` survive only for the
+     non-persistent baseline),
+  4. window acquisition from the WindowCache (reused while total_recv_bytes
      is unchanged, recreated otherwise — the paper's rule),
-  4. AOT lowering + compilation of the START executable with the metadata
-     baked in as constants and the window buffer donated.
+  5. AOT lowering + compilation of the START executable with the scalar
+     metadata baked in as constants, the index tables as sharded runtime
+     parameters, and the window buffer donated.
 
 START then launches the compiled executable (JAX async dispatch returns
 immediately — genuine start semantics) and WAIT blocks on the result.
+``start_pipelined`` alternates between two window slots so epoch k+1 can be
+dispatched while epoch k's output is still being consumed.
 """
 
 from __future__ import annotations
@@ -27,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
 from . import metadata as md
 from . import variants
 from .window import Window, WindowCache
@@ -45,7 +58,8 @@ class AlltoallvSpec:
     variant: str = "fence"
     lock_schedule: str = "ring"           # ring | pairwise
     tile_rows: int = md.TILE_ROWS
-    pack_impl: str = "jnp"                # jnp | pallas
+    pack_impl: str = "jnp"                # jnp | pallas | fused
+    baked_metadata: bool = True           # False: seed-style in-graph maps (A/B)
 
     def __post_init__(self):
         if self.variant not in VARIANTS:
@@ -54,6 +68,13 @@ class AlltoallvSpec:
             raise ValueError("fence_hierarchy needs axis=(outer, inner)")
         if self.variant != "fence_hierarchy" and len(self.axis) != 1:
             raise ValueError(f"variant {self.variant} takes a single axis")
+        if self.pack_impl not in ("jnp", "pallas", "fused"):
+            raise ValueError(f"unknown pack_impl {self.pack_impl!r}")
+        if self.pack_impl == "fused" and self.variant != "fence":
+            raise ValueError("pack_impl='fused' fuses pack into the fence "
+                             "RMA kernel; it requires variant='fence'")
+        if self.pack_impl == "fused" and not self.baked_metadata:
+            raise ValueError("pack_impl='fused' needs host-baked index maps")
 
 
 class AlltoallvPlan:
@@ -80,15 +101,27 @@ class AlltoallvPlan:
         self.rdispls = md.displacements(self.recv_counts)
         self.put_displs = md.put_displacements(sc)
 
-        # --- capacity schedule ---
+        # --- capacity schedule + sparsity analysis ---
         self.capacity = md.global_capacity(sc, spec.tile_rows)
-        self.round_capacities = (
-            md.ring_round_capacities(sc, spec.tile_rows)
+        if spec.variant == "lock":
+            # Schedule-aware: ring and XOR rounds gate on different diagonals.
+            self.round_capacities = (
+                md.xor_round_capacities(sc, spec.tile_rows)
+                if spec.lock_schedule == "pairwise"
+                else md.ring_round_capacities(sc, spec.tile_rows))
+        else:
+            self.round_capacities = None
+        self.lock_rounds_total = self.p - 1 if spec.variant == "lock" else None
+        self.lock_rounds_active = (
+            int(md.active_round_schedule(self.round_capacities).size)
             if spec.variant == "lock" else None)
         if spec.variant == "fence_hierarchy":
             self.p_outer, self.p_inner = axis_sizes
+            self.hierarchy_remote_needed = not md.hierarchy_is_all_local(
+                sc, self.p_outer, self.p_inner)
         else:
             self.p_outer = self.p_inner = None
+            self.hierarchy_remote_needed = None
 
         # --- buffer geometry (SPMD: padded to the max over ranks) ---
         self.send_rows = max(
@@ -99,7 +132,9 @@ class AlltoallvPlan:
         row_elems = int(np.prod(spec.feature_shape)) if spec.feature_shape else 1
         row_bytes = row_elems * jnp.dtype(spec.dtype).itemsize
         self.signature = md.PatternSignature.build(
-            sc, spec.feature_shape, spec.dtype, spec.variant, spec.axis, row_bytes)
+            sc, spec.feature_shape, spec.dtype, spec.variant, spec.axis, row_bytes,
+            lock_schedule=spec.lock_schedule, tile_rows=spec.tile_rows,
+            pack_impl=spec.pack_impl, baked_metadata=spec.baked_metadata)
 
         # --- window (paper: reuse while total_recv_bytes unchanged) ---
         self._window_cache = window_cache if window_cache is not None else WindowCache()
@@ -113,10 +148,34 @@ class AlltoallvPlan:
         self._rd_tbl = jnp.asarray(self.rdispls, jnp.int32)
         self._put_tbl = jnp.asarray(self.put_displs, jnp.int32)
 
-        self.shard_fn = self._build_shard_fn()
-        self._compiled = None
         self._x_sharding = NamedSharding(self.mesh, P(spec.axis if len(spec.axis) > 1
                                                       else spec.axis[0]))
+
+        # --- host-baked pack/unpack index maps ---------------------------
+        # Computed once on host, uploaded once as device tables *sharded over
+        # the communication axis*: each shard holds exactly its own row
+        # (O(P*C) per device, not the O(P^2*C) a replicated constant would
+        # cost at production rank counts), and no per-call index-map
+        # arithmetic remains in the compiled START program.
+        # (baked_metadata=False keeps the seed's in-graph recomputation for
+        # honest A/B benchmarking.)
+        if spec.baked_metadata and spec.variant != "ragged":
+            tables = md.baked_index_tables(sc, self.capacity, self.recv_rows)
+            self.index_tables = tables
+            # device_put straight from numpy: sharded host-to-device upload,
+            # so no device ever holds more than its own O(P*C) row (a
+            # jnp.asarray first would commit the whole O(P^2*C) table to
+            # device 0 before resharding).
+            self._table_args = tuple(
+                jax.device_put(t, self._x_sharding)
+                for t in (tables.pack_src, tables.pack_valid,
+                          tables.unpack_src, tables.unpack_valid))
+        else:
+            self.index_tables = None
+            self._table_args = ()
+
+        self.shard_fn = self._build_shard_fn()
+        self._compiled = None
         self.init_host_seconds = time.perf_counter() - t0
         self.init_compile_seconds = 0.0
         self.starts = 0
@@ -142,13 +201,19 @@ class AlltoallvPlan:
         p, cap = self.p, self.capacity
         a2a_axis = spec.axis[0] if len(spec.axis) == 1 else None
 
-        if spec.pack_impl == "pallas":
+        if spec.pack_impl in ("pallas", "fused"):
             from repro.kernels import ops as kops
             pack, unpack = kops.pack, kops.unpack
         else:
+            kops = None
             pack, unpack = variants.pack_rows, partial(variants.unpack_rows)
 
-        def shard_fn(x: jax.Array, window: jax.Array) -> jax.Array:
+        def shard_fn(x: jax.Array, window: jax.Array, *tables) -> jax.Array:
+            """Epoch body.  ``tables`` (baked mode) are this shard's rows of
+            the INIT-baked index maps — the axis sharding already selected
+            rank i's row, so the hot path starts at the gather itself.  In
+            A/B mode (baked_metadata=False) it is empty and the seed's
+            in-graph recomputation below runs every epoch instead."""
             i = self._axis_index()
             if spec.variant == "ragged":
                 return variants.ragged_exchange(
@@ -156,23 +221,35 @@ class AlltoallvPlan:
                     self._sd_tbl[i], self._sc_tbl[i],
                     self._put_tbl[i], self._rc_tbl[i], a2a_axis)
 
-            src, valid = variants.pack_index_map_in_graph(
-                self._sc_tbl[i], self._sd_tbl[i], p, cap)
-            packed = pack(x, src, valid)
+            if spec.baked_metadata:
+                src, valid, rsrc, rvalid = (t[0] for t in tables)
+            else:
+                src, valid = variants.pack_index_map_in_graph(
+                    self._sc_tbl[i], self._sd_tbl[i], p, cap)
+                rsrc, rvalid = variants.unpack_index_map_in_graph(
+                    self._rc_tbl[i], self._rd_tbl[i], p, cap, self.recv_rows)
 
-            if spec.variant == "fence":
-                buckets = variants.fence_exchange(packed, a2a_axis)
-            elif spec.variant == "lock":
-                buckets = variants.lock_exchange(
-                    packed, a2a_axis, p, cap,
-                    self.round_capacities, spec.lock_schedule)
-            else:  # fence_hierarchy
-                buckets = variants.hierarchy_exchange(
-                    packed, spec.axis[0], spec.axis[1],
-                    self.p_outer, self.p_inner, cap)
+            if spec.pack_impl == "fused":
+                # Pack fused into the remote-DMA kernel: rows are gathered
+                # straight into the put source tile, never materializing the
+                # padded [P*C, F] intermediate in HBM.
+                buckets = kops.fused_pack_alltoallv(
+                    x, src, valid, p=p, capacity=cap, axis=a2a_axis,
+                    mesh_axes=tuple(self.mesh.axis_names))
+            else:
+                packed = pack(x, src, valid)
+                if spec.variant == "fence":
+                    buckets = variants.fence_exchange(packed, a2a_axis)
+                elif spec.variant == "lock":
+                    buckets = variants.lock_exchange(
+                        packed, a2a_axis, p, cap,
+                        self.round_capacities, spec.lock_schedule)
+                else:  # fence_hierarchy
+                    buckets = variants.hierarchy_exchange(
+                        packed, spec.axis[0], spec.axis[1],
+                        self.p_outer, self.p_inner, cap,
+                        remote_needed=self.hierarchy_remote_needed)
 
-            rsrc, rvalid = variants.unpack_index_map_in_graph(
-                self._rc_tbl[i], self._rd_tbl[i], p, cap, self.recv_rows)
             out = unpack(buckets, rsrc, rvalid)
             # Write-through into the window: padding keeps stale window bytes
             # (real RMA semantics) and lets XLA alias the donated buffer.
@@ -186,16 +263,20 @@ class AlltoallvPlan:
         if self._compiled is not None:
             return self
         t0 = time.perf_counter()
-        fn = jax.shard_map(
+        n_tbl = len(self._table_args)
+        fn = shard_map(
             self.shard_fn, mesh=self.mesh,
-            in_specs=(self._x_sharding.spec, self._x_sharding.spec),
+            in_specs=(self._x_sharding.spec,) * (2 + n_tbl),
             out_specs=self._x_sharding.spec, check_vma=False)
         jitted = jax.jit(fn, donate_argnums=(1,))
         x_s = jax.ShapeDtypeStruct(self.global_send_shape, self.spec.dtype,
                                    sharding=self._x_sharding)
         w_s = jax.ShapeDtypeStruct(self.global_recv_shape, self.spec.dtype,
                                    sharding=self._x_sharding)
-        self._compiled = jitted.lower(x_s, w_s).compile()
+        t_s = tuple(jax.ShapeDtypeStruct(t.shape, t.dtype,
+                                         sharding=self._x_sharding)
+                    for t in self._table_args)
+        self._compiled = jitted.lower(x_s, w_s, *t_s).compile()
         self.init_compile_seconds = time.perf_counter() - t0
         return self
 
@@ -204,8 +285,26 @@ class AlltoallvPlan:
         """Launch one epoch. Returns the (async) recv buffer."""
         self.compile()
         win = self.window.materialize(self.global_recv_shape, self._x_sharding)
-        out = self._compiled(sendbuf, win)
+        out = self._compiled(sendbuf, win, *self._table_args)
         self.window.adopt(out)   # donated-in, aliased-out: window reuse
+        self.starts += 1
+        return out
+
+    def start_pipelined(self, sendbuf: jax.Array) -> jax.Array:
+        """Launch one epoch against the double-buffered window.
+
+        Epochs alternate between two window slots, so epoch k+1's donated
+        buffer is never epoch k's output: dispatch of k+1 does not wait for
+        k's consumers, letting back-to-back epochs overlap.  Callers must not
+        read an epoch's output after two further ``start_pipelined`` calls
+        (its slot has been recycled — the RMA exposure-epoch rule).
+        """
+        self.compile()
+        slot = self.starts % 2
+        win = self.window.materialize(
+            self.global_recv_shape, self._x_sharding, slot=slot)
+        out = self._compiled(sendbuf, win, *self._table_args)
+        self.window.adopt(out, slot=slot)
         self.starts += 1
         return out
 
@@ -215,7 +314,7 @@ class AlltoallvPlan:
 
     def free(self) -> None:
         self._compiled = None
-        self.window.buffer = None
+        self.window.release()
 
     # -- reporting ----------------------------------------------------------
     def metadata_summary(self) -> dict:
@@ -233,6 +332,11 @@ class AlltoallvPlan:
             "init_host_seconds": self.init_host_seconds,
             "init_compile_seconds": self.init_compile_seconds,
             "window_generation": self.window.generation,
+            "baked_metadata": self.spec.baked_metadata,
+            "pack_impl": self.spec.pack_impl,
+            "lock_rounds_active": self.lock_rounds_active,
+            "lock_rounds_total": self.lock_rounds_total,
+            "hierarchy_remote_needed": self.hierarchy_remote_needed,
         }
 
 
@@ -250,7 +354,9 @@ class PlanCache:
         row_bytes = row_elems * jnp.dtype(spec.dtype).itemsize
         sig = md.PatternSignature.build(
             np.asarray(spec.send_counts), spec.feature_shape, spec.dtype,
-            spec.variant, spec.axis, row_bytes)
+            spec.variant, spec.axis, row_bytes,
+            lock_schedule=spec.lock_schedule, tile_rows=spec.tile_rows,
+            pack_impl=spec.pack_impl, baked_metadata=spec.baked_metadata)
         plan = self._plans.get(sig)
         if plan is not None:
             self.hits += 1

@@ -89,9 +89,13 @@ def lock_exchange(
 
     ``round_capacities[r]`` lets a *persistent* plan shrink each round to the
     largest message actually exchanged in it — metadata a non-persistent call
-    cannot exploit (it must assume the global capacity every round).  The
-    Python loop is intentional: each round is its own collective with its own
-    static permutation, mirroring per-target lock epochs.
+    cannot exploit (it must assume the global capacity every round).  A round
+    capacity of 0 means the round carries no data on any rank, and the
+    persistent schedule *elides it entirely*: no ``ppermute``, no
+    ``dynamic_update_slice`` — under sparse patterns the epoch shrinks to the
+    active rounds only.  The Python loop is intentional: each round is its
+    own collective with its own static permutation, mirroring per-target
+    lock epochs.
     """
     i = jax.lax.axis_index(axis)
 
@@ -102,6 +106,8 @@ def lock_exchange(
     for r in range(1, p):
         cap_r = int(round_capacities[r]) if round_capacities is not None else capacity
         cap_r = min(cap_r, capacity)
+        if cap_r == 0:
+            continue  # sparsity-aware elision: empty round, skip the collective
         if schedule == "ring":
             perm = [(s, (s + r) % p) for s in range(p)]
             tgt_of_src = (i + r) % p          # whom I send to this round
@@ -139,6 +145,7 @@ def hierarchy_exchange(
     p_outer: int,
     p_inner: int,
     capacity: int,
+    remote_needed: bool = True,
 ) -> jax.Array:
     """Two-stage alltoallv over a (P_outer, P_inner) factorization.
 
@@ -149,16 +156,28 @@ def hierarchy_exchange(
     Purely local slabs skip stage 1, so their stage-2 prep overlaps the outer
     collective.  Stage 2 (local): deliver within the group across
     ``inner_axis``.
+
+    ``remote_needed=False`` (a persistent plan's INIT-time detection that the
+    pattern never crosses an outer-group boundary —
+    ``metadata.hierarchy_is_all_local``) elides stage 1 entirely: every
+    cross-group slab holds only zero padding, so skipping the outer
+    collective is bit-identical and removes the expensive inter-pod epoch.
     """
     f = packed.shape[1:]
     # [target_outer, target_inner, C, F]
     blocks = packed.reshape(p_outer, p_inner, capacity, *f)
 
-    # Stage 1 — remote puts first: slab for outer group `to` moves across the
-    # outer axis.  After the exchange, slab index = source outer rank.
-    remote = jax.lax.all_to_all(blocks, outer_axis, split_axis=0, concat_axis=0, tiled=True)
-    # remote[so, ti, C, F] = data from outer group `so` (same inner rank as
-    # ours) destined to inner rank ti within our outer group.
+    if remote_needed:
+        # Stage 1 — remote puts first: slab for outer group `to` moves across
+        # the outer axis.  After the exchange, slab index = source outer rank.
+        remote = jax.lax.all_to_all(
+            blocks, outer_axis, split_axis=0, concat_axis=0, tiled=True)
+        # remote[so, ti, C, F] = data from outer group `so` (same inner rank
+        # as ours) destined to inner rank ti within our outer group.
+    else:
+        # All-local pattern: the exchange would be the identity on real data
+        # (slab `o` stays, every other slab is zeros on both sides).
+        remote = blocks
 
     # Stage 2 — local delivery: exchange over the inner axis.  Axis 1 is the
     # target-inner dimension of every slab.
@@ -190,13 +209,21 @@ def ragged_exchange(
     each target's window.  The window operand is donated by the plan, so the
     same device buffer is reused epoch over epoch (window reuse).
     """
+    if not hasattr(jax.lax, "ragged_all_to_all"):
+        raise NotImplementedError(
+            "jax.lax.ragged_all_to_all is unavailable in this jax release; "
+            "the ragged variant needs a newer jax (gate callers on "
+            "repro.compat.HAS_RAGGED_ALL_TO_ALL)")
     return jax.lax.ragged_all_to_all(
         x, window, input_offsets, send_sizes, output_offsets, recv_sizes, axis_name=axis
     )
 
 
 # ---------------------------------------------------------------------------
-# In-graph metadata exchange (the *non-persistent* path pays this per call)
+# In-graph metadata exchange (the *non-persistent* path pays this per call).
+# Persistent plans no longer call these twins: their index maps are baked on
+# host at INIT (metadata.baked_index_tables) and embedded as constants, so
+# these exist solely so baseline.py honestly models the per-call cost.
 # ---------------------------------------------------------------------------
 
 

@@ -19,30 +19,53 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass
 class Window:
-    """One exposed receive buffer (per-rank rows x feature)."""
+    """One exposed receive buffer (per-rank rows x feature).
+
+    A window holds one buffer per *slot*.  Slot 0 is the classic
+    START/WAIT window; ``AlltoallvPlan.start_pipelined`` alternates slots
+    0/1 (double buffering) so epoch k+1's donated buffer is never epoch k's
+    output and back-to-back epochs can overlap.
+    """
 
     rows: int
     feature_shape: tuple[int, ...]
     dtype: Any
     nbytes_per_rank: int
-    buffer: jax.Array | None = None  # global (sharded) array once materialized
-    generation: int = 0              # bumped every (re)create
+    generation: int = 0              # bumped every (re)create of any slot
+    _slots: dict = dataclasses.field(default_factory=dict)
 
     @property
     def shape_per_rank(self) -> tuple[int, ...]:
         return (self.rows,) + self.feature_shape
 
-    def materialize(self, global_shape: tuple[int, ...], sharding) -> jax.Array:
-        if self.buffer is None or self.buffer.shape != global_shape:
-            self.buffer = jax.device_put(
-                jnp.zeros(global_shape, self.dtype), sharding
-            )
-            self.generation += 1
-        return self.buffer
+    @property
+    def buffer(self) -> jax.Array | None:
+        """The primary (slot 0) buffer — the single-buffer window view."""
+        return self._slots.get(0)
 
-    def adopt(self, new_buffer: jax.Array) -> None:
+    @buffer.setter
+    def buffer(self, value) -> None:
+        if value is None:
+            self._slots.pop(0, None)
+        else:
+            self._slots[0] = value
+
+    def materialize(self, global_shape: tuple[int, ...], sharding,
+                    slot: int = 0) -> jax.Array:
+        buf = self._slots.get(slot)
+        if buf is None or buf.shape != global_shape:
+            buf = jax.device_put(jnp.zeros(global_shape, self.dtype), sharding)
+            self._slots[slot] = buf
+            self.generation += 1
+        return buf
+
+    def adopt(self, new_buffer: jax.Array, slot: int = 0) -> None:
         """Adopt the epoch's output as the live window (post-donation)."""
-        self.buffer = new_buffer
+        self._slots[slot] = new_buffer
+
+    def release(self) -> None:
+        """Drop every slot's device buffer (FREE)."""
+        self._slots.clear()
 
 
 class WindowCache:

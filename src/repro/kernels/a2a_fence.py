@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 
 def _device_id(mesh_axes, axis, target):
     return tuple(target if a == axis else jax.lax.axis_index(a) for a in mesh_axes)
@@ -105,6 +107,138 @@ def rma_alltoallv_fence(
         out_specs=pl.BlockSpec(memory_space=pl.ANY),
         scratch_shapes=[pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA,
                         pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.REGULAR],
-        compiler_params=pltpu.CompilerParams(collective_id=7),
+        compiler_params=tpu_compiler_params(collective_id=7),
         interpret=interpret,
     )(packed)
+
+
+# ---------------------------------------------------------------------------
+# Fused pack-put: gather rows straight into the remote-DMA source tile
+# ---------------------------------------------------------------------------
+
+
+def _fused_fence_kernel(idx_ref, x_ref, valid_ref, out_ref, scratch, row_sems,
+                        local_sem, send_sem, recv_sem, barrier_sem,
+                        *, p, capacity, axis, mesh_axes):
+    """Fence epoch with the pack gather fused into the put pipeline.
+
+    The unfused path writes the full padded ``[P*C, F]`` bucketed buffer to
+    HBM (pack) and then reads it back for the puts — one full round trip of
+    padded traffic per epoch.  Here each target's ``capacity`` rows are
+    gathered from the *ragged* send buffer directly into a VMEM staging tile
+    (addresses from the host-baked index map, scalar-prefetched), masked, and
+    put remotely from VMEM.  Two staging tiles alternate so the gather for
+    target r+1 overlaps the put for target r.
+
+    ``send_sem`` is per-slot: all puts move equal byte counts, so a shared
+    send semaphore could be satisfied by the *other* slot's put completing
+    and let a staging tile be overwritten while its own put still reads it.
+    """
+    me = jax.lax.axis_index(axis)
+
+    # ---- epoch OPEN: fence barrier with all peers ----
+    def signal(r, _):
+        tgt = jax.lax.rem(me + r, p)
+        pltpu.semaphore_signal(barrier_sem, 1,
+                               device_id=_device_id(mesh_axes, axis, tgt),
+                               device_id_type=pltpu.DeviceIdType.MESH)
+        return _
+    if p > 1:
+        jax.lax.fori_loop(1, p, signal, 0)
+        pltpu.semaphore_wait(barrier_sem, p - 1)
+
+    def gather_bucket(tgt, slot):
+        """Rows of my bucket for rank ``tgt`` -> scratch[slot], masked."""
+        def start_row(k, _):
+            s = idx_ref[tgt * capacity + k]
+            pltpu.make_async_copy(
+                x_ref.at[s], scratch.at[slot, k], row_sems.at[k]).start()
+            return _
+
+        def wait_row(k, _):
+            s = idx_ref[tgt * capacity + k]
+            pltpu.make_async_copy(
+                x_ref.at[s], scratch.at[slot, k], row_sems.at[k]).wait()
+            return _
+
+        jax.lax.fori_loop(0, capacity, start_row, 0)
+        jax.lax.fori_loop(0, capacity, wait_row, 0)
+        mask = valid_ref[pl.ds(tgt * capacity, capacity), :]
+        scratch[slot] = scratch[slot] * mask.astype(scratch.dtype)
+
+    def remote_put(r):
+        """Descriptor for round r's put (also recreated for the waits)."""
+        slot = r % 2
+        tgt = jax.lax.rem(me + r, p)
+        return pltpu.make_async_remote_copy(
+            src_ref=scratch.at[slot],
+            dst_ref=out_ref.at[pl.ds(me * capacity, capacity)],
+            send_sem=send_sem.at[slot], recv_sem=recv_sem,
+            device_id=_device_id(mesh_axes, axis, tgt),
+            device_id_type=pltpu.DeviceIdType.MESH)
+
+    # ---- local bucket: gather into slot 0, copy down without leaving chip --
+    gather_bucket(me, 0)
+    local = pltpu.make_async_copy(
+        scratch.at[0], out_ref.at[pl.ds(me * capacity, capacity)], local_sem)
+    local.start()
+
+    # ---- pipelined gather+put rounds (slots alternate 1, 0, 1, ...) ----
+    for r in range(1, p):
+        slot = r % 2
+        if r == 2:
+            local.wait()               # slot 0 about to be reused
+        if r >= 3:
+            remote_put(r - 2).wait_send()   # same slot: drain before reuse
+        gather_bucket(jax.lax.rem(me + r, p), slot)
+        remote_put(r).start()
+
+    # ---- epoch CLOSE: sends drained, P-1 expected blocks arrived ----
+    if p <= 2:
+        local.wait()
+    for r in range(max(1, p - 2), p):
+        remote_put(r).wait_send()
+    for r in range(1, p):
+        remote_put(r).wait_recv()
+
+
+def rma_alltoallv_fence_fused(
+    x: jax.Array,           # per-shard [S, F] *ragged* send buffer
+    src_idx: jax.Array,     # [P*C] host-baked pack gather map
+    valid: jax.Array,       # [P*C] pack padding mask
+    *,
+    p: int,
+    capacity: int,
+    axis: str,
+    mesh_axes: tuple[str, ...],
+    interpret: bool | object = False,
+) -> jax.Array:
+    """Fused pack + fence-epoch puts; returns the bucketed recv layout."""
+    n = p * capacity
+    f = x.shape[1]
+    valid2d = valid.astype(jnp.int32).reshape(n, 1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),            # x stays in HBM
+            pl.BlockSpec((n, 1), lambda g, idx: (0, 0)),  # valid in VMEM
+        ],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        scratch_shapes=[
+            pltpu.VMEM((2, capacity, f), x.dtype),        # staging tiles
+            pltpu.SemaphoreType.DMA((capacity,)),         # per-row gathers
+            pltpu.SemaphoreType.DMA,                      # local bucket
+            pltpu.SemaphoreType.DMA((2,)),                # send, per slot
+            pltpu.SemaphoreType.DMA,                      # recv
+            pltpu.SemaphoreType.REGULAR,                  # fence barrier
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_fence_kernel, p=p, capacity=capacity,
+                          axis=axis, mesh_axes=mesh_axes),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, f), x.dtype),
+        compiler_params=tpu_compiler_params(collective_id=9),
+        interpret=interpret,
+    )(src_idx.astype(jnp.int32), x, valid2d)

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 
 def _device_id(mesh_axes, axis, target):
     return tuple(target if a == axis else jax.lax.axis_index(a) for a in mesh_axes)
@@ -77,6 +79,6 @@ def rma_alltoallv_lock(
         out_specs=pl.BlockSpec(memory_space=pl.ANY),
         scratch_shapes=[pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA,
                         pltpu.SemaphoreType.DMA],
-        compiler_params=pltpu.CompilerParams(collective_id=8),
+        compiler_params=tpu_compiler_params(collective_id=8),
         interpret=interpret,
     )(packed)

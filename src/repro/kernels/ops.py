@@ -29,8 +29,14 @@ def _interpret_default_rma():
     """Remote DMAs/semaphores need the TPU interpreter, not the HLO one."""
     if jax.default_backend() != "cpu":
         return False
-    from jax.experimental.pallas import tpu as pltpu
-    return pltpu.InterpretParams()
+    from repro.compat import tpu_interpret_params
+    params = tpu_interpret_params()
+    if params is None:
+        raise NotImplementedError(
+            "this jax release has no TPU-semantics Pallas interpreter "
+            "(pltpu.InterpretParams); RMA kernels can only run on real TPU "
+            "hardware here — gate callers on repro.compat.has_tpu_interpret()")
+    return params
 
 
 def _pick_tile(n: int) -> int:
@@ -75,6 +81,42 @@ def unpack(buckets: jax.Array, src_idx: jax.Array, valid: jax.Array,
            interpret=None) -> jax.Array:
     """Bucketed recv layout -> contiguous ragged recv buffer (Pallas gather)."""
     return _masked_gather(buckets, src_idx, valid, interpret)
+
+
+def fused_pack_alltoallv(x: jax.Array, src_idx: jax.Array, valid: jax.Array,
+                         *, p: int, capacity: int, axis: str,
+                         mesh_axes: tuple[str, ...],
+                         interpret=None) -> jax.Array:
+    """Fused pack-put fence epoch (call inside shard_map).
+
+    Gathers send rows straight into the remote-DMA source tile using the
+    host-baked index map — the padded ``[P*C, F]`` bucketed intermediate is
+    never written to HBM, removing one full buffer write+read of padded
+    traffic per epoch versus ``pack`` followed by ``rma_alltoallv``.
+
+    On environments that can neither compile the kernel (no TPU) nor
+    interpret its remote DMAs (jax without ``pltpu.InterpretParams``) this
+    falls back to the semantically identical jnp pack + ``lax.all_to_all``
+    reference so plans with ``pack_impl='fused'`` stay runnable everywhere.
+    """
+    if interpret is None:
+        if jax.default_backend() == "cpu":
+            from repro.compat import tpu_interpret_params
+            interpret = tpu_interpret_params()
+            if interpret is None:
+                from repro.core import variants
+                packed = variants.pack_rows(x, src_idx, valid)
+                return jax.lax.all_to_all(
+                    packed, axis, split_axis=0, concat_axis=0, tiled=True)
+        else:
+            interpret = False
+    x2d, feat = _flatten_features(x)
+    x2d, f0 = _pad_lanes(x2d)
+    out = _fence.rma_alltoallv_fence_fused(
+        x2d, src_idx, valid, p=p, capacity=capacity, axis=axis,
+        mesh_axes=mesh_axes, interpret=interpret)
+    out = out[:, :f0]
+    return out.reshape((p * capacity,) + feat)
 
 
 def rma_alltoallv(packed: jax.Array, *, variant: str, p: int, capacity: int,

@@ -10,18 +10,27 @@ import jax
 import numpy as np
 
 
+def _make_mesh(shape, axes):
+    # jax >= 0.5 exposes jax.sharding.AxisType and make_mesh takes
+    # axis_types; older versions (this container ships 0.4.x) have neither —
+    # every axis is Auto by default there, so the plain call is equivalent.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(tuple(shape), tuple(axes),
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """(16, 16) single-pod (256 chips) or (2, 16, 16) two-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh for tests/benchmarks (host-device or real)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(n: int | None = None, axis: str = "x"):

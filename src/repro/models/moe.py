@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import MoEConfig
 from repro.core import variants as core_variants
 from repro.parallel.sharding import (ScopedFactory, cs, current_mesh,
@@ -308,7 +309,7 @@ def apply_moe(params: dict, x: jax.Array, moe: MoEConfig,
         tok_spec = resolve(("batch", None), x2d.shape)  # tokens sharded like batch
         rep = P()
         wspec = resolve(("experts", None, None))
-        y, aux = jax.shard_map(
+        y, aux = shard_map(
             body, mesh=mesh,
             in_specs=(tok_spec, rep, wspec, wspec, wspec),
             out_specs=(tok_spec, rep),

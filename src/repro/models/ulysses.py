@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import variants as core_variants
 from repro.parallel.sharding import current_mesh, resolve
 
@@ -101,7 +102,7 @@ def ulysses_attention(
         o = _attend(qh, kh, vh, pos_full, causal)
         return _heads_to_seq(o, plan)
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(seq_spec, seq_spec, seq_spec, pos_spec),
         out_specs=seq_spec, check_vma=False,

@@ -13,6 +13,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size
+
 
 def hierarchical_psum_mean(x: jax.Array, inner_axis: str, outer_axis: str,
                            scatter_dim: int = 0) -> jax.Array:
@@ -21,8 +23,8 @@ def hierarchical_psum_mean(x: jax.Array, inner_axis: str, outer_axis: str,
     Call inside shard_map.  ``scatter_dim`` must be divisible by the inner
     axis size; falls back to a flat psum otherwise.
     """
-    inner = jax.lax.axis_size(inner_axis)
-    outer = jax.lax.axis_size(outer_axis)
+    inner = axis_size(inner_axis)
+    outer = axis_size(outer_axis)
     n = inner * outer
     if x.shape[scatter_dim] % inner:
         return jax.lax.psum(x, (inner_axis, outer_axis)) / n
@@ -39,5 +41,5 @@ def hierarchical_psum_mean(x: jax.Array, inner_axis: str, outer_axis: str,
 def flat_psum_mean(x: jax.Array, axes) -> jax.Array:
     n = 1
     for a in (axes if isinstance(axes, (tuple, list)) else (axes,)):
-        n *= jax.lax.axis_size(a)
+        n *= axis_size(a)
     return jax.lax.psum(x, axes) / n

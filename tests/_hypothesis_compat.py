@@ -1,0 +1,122 @@
+"""``hypothesis`` facade for the property tests.
+
+When hypothesis is installed (requirements-dev.txt) this module simply
+re-exports it.  In a bare environment it degrades to a small deterministic
+random-sampling engine implementing exactly the strategy surface the suite
+uses (``integers``, ``floats``, ``lists``, ``data``, ``map``/``flatmap``),
+so the property tests still *run* — with fixed seeds and fewer guarantees —
+instead of erroring at collection.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as _np
+
+    _DEFAULT_MAX_EXAMPLES = 25
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def example(self, rng):
+            return self._sample(rng)
+
+        def map(self, f):
+            return _Strategy(lambda rng: f(self._sample(rng)))
+
+        def flatmap(self, f):
+            return _Strategy(lambda rng: f(self._sample(rng)).example(rng))
+
+    class _DataObject:
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy):
+            return strategy.example(self._rng)
+
+    class _DataStrategy(_Strategy):
+        def __init__(self):
+            super().__init__(lambda rng: _DataObject(rng))
+
+    class _st:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def sample(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.example(rng) for _ in range(n)]
+
+            return _Strategy(sample)
+
+        @staticmethod
+        def data():
+            return _DataStrategy()
+
+    st = strategies = _st
+
+    def given(*strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = _np.random.default_rng(seed)
+                for _ in range(n):
+                    fn(*[s.example(rng) for s in strategies])
+
+            wrapper.__signature__ = inspect.Signature()
+            wrapper._max_examples = _DEFAULT_MAX_EXAMPLES
+            return wrapper
+
+        return deco
+
+    class settings:  # noqa: N801 — mirrors hypothesis.settings
+        def __init__(self, max_examples=None, **_ignored):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            if self.max_examples is not None:
+                fn._max_examples = self.max_examples
+            return fn
+
+        @staticmethod
+        def register_profile(*_a, **_k):
+            pass
+
+        @staticmethod
+        def load_profile(*_a, **_k):
+            pass
+
+    class HealthCheck:  # noqa: N801
+        too_slow = "too_slow"
+        data_too_large = "data_too_large"

@@ -10,12 +10,18 @@ import subprocess
 import sys
 
 import pytest
-from hypothesis import HealthCheck, settings
 
-settings.register_profile(
-    "repro", deadline=None, max_examples=25,
-    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
-settings.load_profile("repro")
+try:
+    from hypothesis import HealthCheck, settings
+except ModuleNotFoundError:
+    # Bare environment: tests fall back to tests/_hypothesis_compat.py's
+    # deterministic sampler; there is no profile to register.
+    pass
+else:
+    settings.register_profile(
+        "repro", deadline=None, max_examples=25,
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+    settings.load_profile("repro")
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(ROOT, "src")

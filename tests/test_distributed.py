@@ -32,6 +32,22 @@ def test_pallas_pack_in_plan(dist):
     dist("pallas_pack_in_plan", devices=4)
 
 
+def test_sparse_lock_elision(dist):
+    dist("sparse_lock_elision", devices=8)
+
+
+def test_hierarchy_local_elision(dist):
+    dist("hierarchy_local_elision", devices=8)
+
+
+def test_fused_pack_fence(dist):
+    dist("fused_pack_fence", devices=4)
+
+
+def test_pipelined_epochs(dist):
+    dist("pipelined_epochs", devices=4)
+
+
 def test_moe_dispatch_distributed(dist):
     dist("moe_dispatch_distributed", devices=8)
 

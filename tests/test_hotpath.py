@@ -1,0 +1,99 @@
+"""Hot-path metadata: host-baked index maps, round elision, signature keys.
+
+These are the single-device halves of the persistent-path overhaul; the
+multi-device output-identity checks live in test_distributed.py
+(sparse_lock_elision / hierarchy_local_elision / fused_pack_fence /
+pipelined_epochs).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from _hypothesis_compat import given, strategies as st
+from repro.core import metadata as md, variants
+
+
+counts_matrices = st.integers(2, 10).flatmap(
+    lambda p: st.lists(
+        st.lists(st.integers(0, 50), min_size=p, max_size=p),
+        min_size=p, max_size=p).map(np.array))
+
+
+@given(counts_matrices)
+def test_baked_maps_match_in_graph_twins(counts):
+    """Host-baked tables equal the traced twins bit-for-bit, for every rank —
+    the persistent path computes the *same* maps, just once instead of per
+    epoch."""
+    p = counts.shape[0]
+    cap = md.global_capacity(counts)
+    recv_rows = max(md.max_total_recv(counts), 1)
+    tables = md.baked_index_tables(counts, cap, recv_rows)
+    sd = md.displacements(counts)
+    rc = md.recv_counts(counts)
+    rd = md.displacements(rc)
+    for i in range(p):
+        src, valid = variants.pack_index_map_in_graph(
+            jnp.asarray(counts[i], jnp.int32), jnp.asarray(sd[i], jnp.int32),
+            p, cap)
+        np.testing.assert_array_equal(tables.pack_src[i], np.asarray(src))
+        np.testing.assert_array_equal(tables.pack_valid[i], np.asarray(valid))
+        rsrc, rvalid = variants.unpack_index_map_in_graph(
+            jnp.asarray(rc[i], jnp.int32), jnp.asarray(rd[i], jnp.int32),
+            p, cap, recv_rows)
+        np.testing.assert_array_equal(tables.unpack_src[i], np.asarray(rsrc))
+        np.testing.assert_array_equal(tables.unpack_valid[i], np.asarray(rvalid))
+
+
+def test_empty_rounds_get_zero_capacity():
+    """A ring-banded pattern produces capacity-0 (elidable) rounds exactly at
+    the empty diagonals, and the active schedule excludes them."""
+    p = 8
+    c = np.zeros((p, p), np.int64)
+    for i in range(p):
+        c[i, i] = 4
+        c[i, (i + 1) % p] = 3
+        c[i, (i - 1) % p] = 2
+    caps = md.ring_round_capacities(c)
+    active = md.active_round_schedule(caps)
+    np.testing.assert_array_equal(active, [1, p - 1])
+    assert all(caps[r] == 0 for r in range(2, p - 1))
+    assert caps[1] > 0 and caps[p - 1] > 0
+
+
+def test_xor_round_capacities_use_xor_diagonal():
+    """Pairwise-schedule capacities gate on c[i, i^r], not the ring diagonal."""
+    p = 4
+    c = np.zeros((p, p), np.int64)
+    c[0, 3] = 40        # XOR round 3 (0^3=3); ring round 3 from rank 0 also 3
+    c[2, 3] = 17        # XOR round 1 (2^1=3); ring round 1 from rank 2 is 3
+    xor_caps = md.xor_round_capacities(c)
+    ring_caps = md.ring_round_capacities(c)
+    assert xor_caps[1] >= 17 and xor_caps[3] >= 40
+    assert xor_caps[2] == 0
+    # the ring schedule distributes the same cells differently
+    assert ring_caps[1] >= 17 and ring_caps[3] >= 40
+
+
+def test_hierarchy_locality_detection():
+    p_outer, p_inner = 2, 4
+    p = p_outer * p_inner
+    c = np.zeros((p, p), np.int64)
+    c[0:4, 0:4] = 5
+    c[4:8, 4:8] = 3
+    assert md.hierarchy_is_all_local(c, p_outer, p_inner)
+    c[0, 5] = 1          # one cross-group row
+    assert not md.hierarchy_is_all_local(c, p_outer, p_inner)
+
+
+def test_signature_separates_compile_relevant_fields():
+    """PlanCache key collision fix: lock_schedule / tile_rows / pack_impl /
+    baked_metadata all reach the digest."""
+    c = np.array([[1, 2], [3, 4]])
+    base = dict(feature_shape=(4,), dtype="float32", variant="lock",
+                axis=("x",), row_bytes=16)
+    s0 = md.PatternSignature.build(c, **base)
+    assert s0 == md.PatternSignature.build(c, **base)
+    assert s0 != md.PatternSignature.build(c, **base, lock_schedule="pairwise")
+    assert s0 != md.PatternSignature.build(c, **base, tile_rows=16)
+    assert s0 != md.PatternSignature.build(c, **base, pack_impl="pallas")
+    assert s0 != md.PatternSignature.build(c, **base, baked_metadata=False)

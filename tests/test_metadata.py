@@ -1,7 +1,8 @@
 """Property tests (hypothesis) for the INIT-phase metadata math."""
 
 import numpy as np
-from hypothesis import given, strategies as st
+
+from _hypothesis_compat import given, strategies as st
 
 from repro.core import breakeven, metadata as md
 
