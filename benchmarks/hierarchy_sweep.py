@@ -1,0 +1,124 @@
+"""Benchmark: leader-combined hierarchical alltoallv on a grouped mesh.
+
+A (P_outer, P_inner) grouped mesh with a locality-heavy, skewed pattern —
+most traffic stays inside a group (the regime hierarchy exists for), the
+cross-group residue is sparse, and one hot intra-group pair inflates the
+flat fence's single global bucket capacity so its epoch moves mostly
+padding.  Row size sweeps 1 KiB -> 32 KiB.
+
+Reproduction targets:
+
+  * cross-group message count: flat fence posts P*(P-1) per-pair puts per
+    epoch; the combined path posts ``plan.cross_group_puts`` =
+    O(P_outer^2) leader slabs (reported per row).
+  * at large rows (>= 32 KiB) the combined path beats flat fence: slab
+    packing is ragged per group pair, so the padded-byte blowup that gates
+    the flat epoch never hits the wire.
+  * ``variant="auto"`` picks a variant within 10% of the best measured one
+    (``auto_within_pct`` in the derived column).
+
+    python hierarchy_sweep.py [iters] [--json]
+"""
+
+import argparse
+
+from _util import Csv, set_host_devices
+
+N_RANKS = 8
+P_OUTER, P_INNER = 2, 4
+JSON_OUT = "experiments/bench/BENCH_hierarchy_sweep.json"
+
+
+def grouped_counts(p, p_inner, base_rows=24, cross_rows=2, seed=3):
+    """Locality-heavy skewed pattern: dense intra-group blocks, a sparse
+    cross-group ring, and one hot intra-group pair (the flat-fence
+    capacity gate)."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    c = np.zeros((p, p), np.int64)
+    for i in range(p):
+        g = i // p_inner
+        for j in range(g * p_inner, (g + 1) * p_inner):
+            c[i, j] = rng.integers(base_rows // 2, base_rows + 1)
+        c[i, (i + p_inner) % p] = cross_rows          # sparse cross residue
+    c[0, 1] = base_rows * 2                           # hot pair gates flat C
+    return c
+
+
+def main(iters=30, out="experiments/bench/hierarchy_sweep.csv",
+         json_out=None):
+    set_host_devices(N_RANKS)
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import PlanCache, alltoallv_init, breakeven
+    from repro.core import metadata as md
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((P_OUTER, P_INNER), ("o", "i"))
+    counts = grouped_counts(N_RANKS, P_INNER)
+    send_rows = md.round_up(md.max_total_send(counts), 8)
+    csv = Csv(out)
+
+    for feature in (256, 2048, 8192):                 # 1 KiB .. 32 KiB rows
+        row_bytes = feature * 4
+        cache = PlanCache()
+        rng = np.random.default_rng(0)
+        x = jax.device_put(
+            jnp.asarray(rng.standard_normal((N_RANKS * send_rows, feature)),
+                        jnp.float32),
+            NamedSharding(mesh, P(("o", "i"))))
+
+        plans = {}
+        for variant in ("fence", "lock", "fence_hierarchy"):
+            plans[variant] = alltoallv_init(
+                counts, (feature,), jnp.float32, mesh, axis=("o", "i"),
+                variant=variant, cache=cache).compile()
+        plan_auto = alltoallv_init(counts, (feature,), jnp.float32, mesh,
+                                   axis=("o", "i"), variant="auto",
+                                   cache=cache, autotune_iters=max(iters, 12))
+
+        # Many short bursts: the min-of-bursts estimator sheds sporadic
+        # host load best when it gets more chances to catch a quiet window.
+        times = breakeven.measure_arms(
+            {v: (lambda p=p_: p.start(x)) for v, p_ in plans.items()},
+            iters=iters, warmup=3, bursts=6)
+
+        hier = plans["fence_hierarchy"]
+        flat_puts = N_RANKS * (N_RANKS - 1)
+        # Flat fence pads every pair block to the hot pair's capacity; this
+        # ratio is the padded-byte blowup its epoch moves vs real payload.
+        flat_sum = plans["fence"].metadata_summary()
+        pad = flat_sum["padded_bytes_per_rank"] / max(
+            flat_sum["payload_bytes_per_rank"], 1)
+        csv.row(f"hierarchy_sweep/flat_fence/{row_bytes}B",
+                times["fence"] * 1e6,
+                f"cross_puts={flat_puts};pad_factor={pad:.2f}")
+        csv.row(f"hierarchy_sweep/lock/{row_bytes}B", times["lock"] * 1e6,
+                f"rounds={N_RANKS - 1}")
+        csv.row(f"hierarchy_sweep/hierarchy/{row_bytes}B",
+                times["fence_hierarchy"] * 1e6,
+                f"cross_puts={hier.cross_group_puts};"
+                f"speedup_vs_flat={(times['fence'] - times['fence_hierarchy']) / times['fence'] * 100.0:.1f}%")
+        # auto resolves to one of the candidate plans (shared cache), so its
+        # epoch time IS the chosen arm's time under the same estimator; the
+        # derived column reports how far the pick sits from the best arm.
+        best = min(times[v] for v in plans)
+        picked = plan_auto.auto_choice["variant"]
+        csv.row(f"hierarchy_sweep/auto/{row_bytes}B", times[picked] * 1e6,
+                f"picked={picked};"
+                f"auto_within_pct={(times[picked] - best) / best * 100.0:.1f}")
+    csv.save()
+    if json_out:
+        csv.save_json(json_out)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("iters", nargs="?", type=int, default=20)
+    ap.add_argument("--json", action="store_true",
+                    help=f"also write {JSON_OUT}")
+    args = ap.parse_args()
+    main(iters=args.iters, json_out=JSON_OUT if args.json else None)

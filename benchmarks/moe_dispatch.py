@@ -12,14 +12,16 @@ Derived column reports the persistent-vs-nonpersistent saving — the MoE
 rendition of the paper's per-iteration metadata-elimination claim.
 """
 
-import sys
+import argparse
 
 from _util import Csv, set_host_devices, time_call
 
 MESH = (2, 4)   # (data, model)
+JSON_OUT = "experiments/bench/BENCH_moe_dispatch.json"
 
 
-def main(iters=20, tokens=2048, d_model=256, out="experiments/bench/moe_dispatch.csv"):
+def main(iters=20, tokens=2048, d_model=256,
+         out="experiments/bench/moe_dispatch.csv", json_out=None):
     set_host_devices(MESH[0] * MESH[1])
     import dataclasses
 
@@ -67,7 +69,14 @@ def main(iters=20, tokens=2048, d_model=256, out="experiments/bench/moe_dispatch
     csv.row("moe_dispatch/persistent_saving", dt * 1e6,
             f"savings={100*dt/results['nonpersistent_a2a']:.1f}%")
     csv.save()
+    if json_out:
+        csv.save_json(json_out)
 
 
 if __name__ == "__main__":
-    main(iters=int(sys.argv[1]) if len(sys.argv) > 1 else 20)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("iters", nargs="?", type=int, default=20)
+    ap.add_argument("--json", action="store_true",
+                    help=f"also write {JSON_OUT}")
+    args = ap.parse_args()
+    main(iters=args.iters, json_out=JSON_OUT if args.json else None)

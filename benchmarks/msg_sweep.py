@@ -22,7 +22,7 @@ message-size threshold; N_breakeven = 1 there; fence > lock.
 
 import argparse
 
-from _util import Csv, set_host_devices, time_call
+from _util import Csv, set_host_devices
 
 N_RANKS = 8
 JSON_OUT = "experiments/bench/BENCH_msg_sweep.json"
@@ -74,33 +74,27 @@ def main(sizes=None, iters=30, out="experiments/bench/msg_sweep.csv",
         cnts = jax.device_put(jnp.asarray(counts.reshape(-1), jnp.int32),
                               NamedSharding(mesh, P("x")))
 
-        # All arms measured with the SAME estimator: interleaved short
-        # bursts, min of burst means per arm.  Interleaving + min is robust
-        # to drifting background load on a shared host (a sequential pass
-        # would attribute load swings to the code difference), and one
-        # estimator keeps every derived cross-arm metric comparable.
+        # All arms measured with the SAME estimator: the shared interleaved
+        # min-of-bursts scheme (breakeven.measure_arms) — robust to drifting
+        # background load on a shared host, and one estimator keeps every
+        # derived cross-arm metric comparable.
         plan = plans["fence"]
 
         def pipelined_pair():
             plan.start_pipelined(x)       # in flight alongside the next one
             return plan.start_pipelined(x)
 
-        arms = {
+        times = breakeven.measure_arms({
             "baseline": lambda: base(x, cnts),
             "fence": lambda: plan.start(x),
             "lock": lambda: plans["lock"].start(x),
             "ingraph": lambda: plan_ingraph.start(x),
             "pipelined": pipelined_pair,
-        }
-        burst = max(iters // 4, 2)
-        samples = {name: [] for name in arms}
-        for _ in range(4):
-            for name, fn in arms.items():
-                samples[name].append(time_call(fn, burst, warmup=1))
-        t_base, t_fence, t_lock, t_ig = (min(samples[n]) for n in
+        }, iters=iters, warmup=1, bursts=4)
+        t_base, t_fence, t_lock, t_ig = (times[n] for n in
                                          ("baseline", "fence", "lock",
                                           "ingraph"))
-        t_pipe = min(samples["pipelined"]) / 2.0   # two epochs per call
+        t_pipe = times["pipelined"] / 2.0   # two epochs per call
 
         csv.row(f"msg_sweep/baseline/{nbytes}B", t_base * 1e6,
                 f"bytes_per_pair={nbytes}")

@@ -9,6 +9,8 @@ jax initializes) and prints ``name,us_per_call,derived`` CSV rows.
   msg_sweep        paper Fig. 2  (message-size sweep + Eq. 3 break-even)
   breakeven_model  paper Eq. 1-3 (T_init / T_persist / T_MPI table)
   sparse_pattern   paper Fig. 3/4 (hugetrace-like irregular patterns)
+  hierarchy_sweep  leader-combined hierarchy vs flat fence on a grouped
+                   mesh (cross-group message counts, variant="auto")
   moe_dispatch     framework integration (persistent vs per-call vs gspmd)
   compression      int8 error-feedback gradient all-reduce
   roofline_table   renders experiments/dryrun artifacts (§Roofline)
@@ -29,18 +31,21 @@ BENCHES = [
     ("msg_sweep", []),
     ("breakeven_model", []),
     ("sparse_pattern", []),
+    ("hierarchy_sweep", []),
     ("moe_dispatch", []),
     ("compression", []),
     ("roofline_table", []),
 ]
 
 QUICK_ITERS = {"weak_scaling": None, "msg_sweep": "8", "breakeven_model": "8",
-               "sparse_pattern": "8", "moe_dispatch": "5", "compression": "5"}
+               "sparse_pattern": "8", "hierarchy_sweep": "8",
+               "moe_dispatch": "5", "compression": "5"}
 
 # Benchmarks with a native --json flag write their own BENCH_<name>.json
 # (structured rows); for the rest run.py scrapes the captured stdout.  One
 # writer per file — never both.
-JSON_NATIVE = {"msg_sweep", "sparse_pattern"}
+JSON_NATIVE = {"msg_sweep", "sparse_pattern", "hierarchy_sweep",
+               "weak_scaling", "moe_dispatch"}
 
 
 def main(argv=None) -> int:

@@ -7,11 +7,13 @@ fence-persistent beats the baseline and the gap widens with rank count;
 lock-persistent trails fence.
 """
 
+import argparse
 import os
 import subprocess
 import sys
 
 BYTES_PER_RANK = 2_097_152
+JSON_OUT = "experiments/bench/BENCH_weak_scaling.json"
 
 
 def run_one(n_ranks: int, iters: int, bytes_per_rank: int):
@@ -60,7 +62,8 @@ def run_one(n_ranks: int, iters: int, bytes_per_rank: int):
 
 def main(rank_counts=(2, 4, 8, 16), iters=20,
          bytes_per_rank=BYTES_PER_RANK,
-         out="experiments/bench/weak_scaling.csv"):
+         out="experiments/bench/weak_scaling.csv",
+         json_out=None):
     rows = []
     for n in rank_counts:
         r = subprocess.run(
@@ -84,10 +87,18 @@ def main(rank_counts=(2, 4, 8, 16), iters=20,
         with open(out, "w") as f:
             f.write("name,us_per_call,derived\n")
             f.writelines(",".join(r) + "\n" for r in rows)
+    if json_out:
+        from _util import rows_to_json
+        rows_to_json("\n".join(",".join(r) for r in rows), json_out)
 
 
 if __name__ == "__main__":
     if len(sys.argv) > 1 and sys.argv[1] == "child":
         run_one(int(sys.argv[2]), int(sys.argv[3]), int(sys.argv[4]))
     else:
-        main()
+        ap = argparse.ArgumentParser()
+        ap.add_argument("iters", nargs="?", type=int, default=20)
+        ap.add_argument("--json", action="store_true",
+                        help=f"also write {JSON_OUT}")
+        args = ap.parse_args()
+        main(iters=args.iters, json_out=JSON_OUT if args.json else None)

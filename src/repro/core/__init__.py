@@ -10,11 +10,11 @@ Public surface:
 from .api import alltoallv_init, global_plan_cache, reset_global_plan_cache
 from .plan import AlltoallvPlan, AlltoallvSpec, PlanCache, VARIANTS
 from .window import Window, WindowCache
-from . import baseline, breakeven, metadata, reference, variants
+from . import autotune, baseline, breakeven, metadata, reference, variants
 
 __all__ = [
     "alltoallv_init", "global_plan_cache", "reset_global_plan_cache",
     "AlltoallvPlan", "AlltoallvSpec", "PlanCache", "VARIANTS",
     "Window", "WindowCache",
-    "baseline", "breakeven", "metadata", "reference", "variants",
+    "autotune", "baseline", "breakeven", "metadata", "reference", "variants",
 ]

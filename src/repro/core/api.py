@@ -7,6 +7,35 @@
     ...
     plan.free()
 
+Variant decision tree
+---------------------
+
+``variant`` selects the synchronization design for the frozen pattern:
+
+  auto             measure every applicable variant at INIT (interleaved
+                   min-of-bursts, ``core.autotune``) and keep the fastest;
+                   the decision is cached per ``PatternSignature``.  Use it
+                   whenever the pattern is long-lived and you don't already
+                   know the answer — the sweep is one-time INIT cost.
+  fence            one fused collective epoch.  Best default for dense,
+                   roughly uniform patterns; the ``pack_impl="fused"``
+                   Pallas kernel removes the packed-intermediate HBM round
+                   trip on top.
+  lock             (P-1) pairwise rounds with per-round capacities; empty
+                   rounds are elided at INIT.  Wins sparse/banded
+                   (neighborhood) patterns; loses under receiver skew
+                   (the hottest pair gates every round).
+  fence_hierarchy  leader-combined three-hop exchange over a grouped
+                   ``axis=(outer, inner)`` mesh: cross-group rows stage at
+                   distributed leaders, leaders exchange one combined ragged
+                   slab per group pair — O((P/g)^2) inter-group messages vs
+                   the flat epoch's O(P^2) — and purely-local rows bypass
+                   the inter-group hop.  Wins when inter-group links are the
+                   bottleneck, rows are large, or flat-fence padding blows
+                   up under skew; see ``benchmarks/hierarchy_sweep.py``.
+  ragged           ``lax.ragged_all_to_all`` (real-TPU only): no capacity
+                   padding at all, gated on ``compat.HAS_RAGGED_ALL_TO_ALL``.
+
 For embedding inside a larger shard_map program (MoE dispatch), use
 ``plan.shard_fn`` or the traced helpers in ``repro.models.moe``.
 """
@@ -36,26 +65,43 @@ def alltoallv_init(
     pack_impl: str = "jnp",
     baked_metadata: bool = True,
     cache: PlanCache | None = None,
+    autotune_iters: int = 12,
 ) -> AlltoallvPlan:
     """Build (or fetch from cache) a persistent plan for a frozen pattern.
 
+    ``variant="auto"`` measures all applicable variants once at INIT and
+    returns the fastest plan (see the decision tree above); the chosen
+    variant and per-candidate timings land on ``plan.auto_choice``.
     ``baked_metadata=False`` reverts to in-graph index-map recomputation
     (the seed behavior) — kept for A/B benchmarking only.
     """
     from . import metadata as md
 
     axis_t = (axis,) if isinstance(axis, str) else tuple(axis)
+    if variant == "auto":
+        # auto resolves to a measured concrete variant below; the spec needs
+        # a valid placeholder to pass construction.  fused+2-axis is only
+        # valid for the hierarchy, so that combination placeholds there.
+        placeholder = ("fence_hierarchy"
+                       if pack_impl == "fused" and len(axis_t) == 2
+                       else "fence")
+    else:
+        placeholder = variant
     spec = AlltoallvSpec(
         send_counts=np.asarray(send_counts, np.int64),
         feature_shape=tuple(int(s) for s in feature_shape),
         dtype=dtype,
         axis=axis_t,
-        variant=variant,
+        variant=placeholder,
         lock_schedule=lock_schedule,
         tile_rows=tile_rows if tile_rows is not None else md.TILE_ROWS,
         pack_impl=pack_impl,
         baked_metadata=baked_metadata,
     )
+    if variant == "auto":
+        from .autotune import autotune_variant
+        return autotune_variant(spec, mesh, cache or _GLOBAL_CACHE,
+                                iters=autotune_iters)
     return (cache or _GLOBAL_CACHE).get(spec, mesh)
 
 

@@ -1,0 +1,123 @@
+"""Break-even-driven variant selection for ``variant="auto"``.
+
+The paper's measurements (and this repo's benchmarks) show no variant wins
+everywhere: the fused fence epoch wins dense uniform patterns, the lock
+schedule wins sparse banded ones (round elision), and the leader-combined
+hierarchy wins grouped meshes once rows are large enough that inter-group
+message count and padding dominate.  ``variant="auto"`` turns that decision
+over to measurement: at INIT time every candidate plan for the frozen
+pattern is built, compiled, and timed with the shared interleaved
+min-of-bursts estimator (``breakeven.measure_arms``), and the fastest one
+becomes the plan.  The sweep is one-time INIT cost — exactly the
+amortization contract of Eq. 1-3 — and the decision is cached in the
+``PlanCache`` keyed by the pattern's ``PatternSignature``, so a recurring
+pattern re-measures only after a genuine pattern change.
+
+The losing candidate plans stay in the plan cache (they cost compile time
+anyway); callers that want them dropped can ``free()`` them via the cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import breakeven
+from . import metadata as md
+from .plan import AlltoallvPlan, AlltoallvSpec, PlanCache
+
+
+def candidate_variants(spec: AlltoallvSpec, mesh) -> list[str]:
+    """Variants worth measuring for this spec's pattern.
+
+    fence and lock always apply (over a 2-axis mesh they exchange on the
+    linearized pair); the leader-combined hierarchy needs a genuine
+    (outer, inner) factorization AND baked metadata (its two-stage tables
+    have no in-graph twins, so A/B mode excludes it).  ragged is excluded:
+    it only executes on real TPU and is opted into explicitly.
+    """
+    cands = ["fence", "lock"]
+    if (len(spec.axis) == 2 and int(mesh.shape[spec.axis[0]]) > 1
+            and spec.baked_metadata):
+        cands.append("fence_hierarchy")
+    return cands
+
+
+def autotune_variant(
+    spec: AlltoallvSpec,
+    mesh: jax.sharding.Mesh,
+    cache: PlanCache,
+    iters: int = 12,
+    warmup: int = 2,
+    bursts: int = 3,
+) -> AlltoallvPlan:
+    """Measure every candidate for ``spec``'s pattern, return the winner.
+
+    ``spec.variant`` is ignored (the caller passed ``variant="auto"``); all
+    other spec fields are forwarded to each candidate.  The measurement
+    input is a zeros buffer — timing, not values, is under test, and a
+    zeros epoch exercises the identical collective/gather program.
+    """
+    sc = np.asarray(spec.send_counts)
+    row_elems = int(np.prod(spec.feature_shape)) if spec.feature_shape else 1
+    row_bytes = row_elems * jnp.dtype(spec.dtype).itemsize
+    auto_sig = md.PatternSignature.build(
+        sc, spec.feature_shape, spec.dtype, "auto", spec.axis, row_bytes,
+        lock_schedule=spec.lock_schedule, tile_rows=spec.tile_rows,
+        pack_impl=spec.pack_impl, baked_metadata=spec.baked_metadata,
+        axis_sizes=tuple(mesh.shape[a] for a in spec.axis))
+
+    choice = cache.auto_choices.get(auto_sig)
+    if choice is not None:
+        plan = cache.get(_candidate_spec(spec, choice["variant"]), mesh)
+        plan.auto_choice = choice
+        return plan
+
+    plans: dict[str, AlltoallvPlan] = {}
+    for variant in candidate_variants(spec, mesh):
+        plan = cache.get(_candidate_spec(spec, variant), mesh)
+        plan.compile()
+        plans[variant] = plan
+
+    x = jax.device_put(
+        jnp.zeros(next(iter(plans.values())).global_send_shape, spec.dtype),
+        next(iter(plans.values()))._x_sharding)
+    arms = {v: (lambda p=p: p.start(x)) for v, p in plans.items()}
+    times = breakeven.measure_arms(arms, iters=iters, warmup=warmup,
+                                   bursts=bursts)
+
+    # Adaptive refinement: when the top two candidates land within 25% the
+    # first (short) round cannot rank them reliably on a noisy host, so
+    # they get a second round at double the budget and the minimum of both
+    # rounds decides.  A clear winner skips the rerun — the sweep stays
+    # cheap exactly when the answer is obvious.
+    ranked = sorted(times, key=times.get)
+    if len(ranked) > 1 and times[ranked[1]] < 1.25 * times[ranked[0]]:
+        finalists = {v: arms[v] for v in ranked[:2]}
+        refined = breakeven.measure_arms(
+            finalists, iters=2 * iters, warmup=warmup, bursts=max(bursts, 6))
+        for v, t in refined.items():
+            times[v] = min(times[v], t)
+
+    best = min(times, key=times.get)
+    choice = {"variant": best,
+              "times": {v: float(t) for v, t in times.items()}}
+    cache.auto_choices[auto_sig] = choice
+    plan = plans[best]
+    plan.auto_choice = choice
+    return plan
+
+
+def _candidate_spec(spec: AlltoallvSpec, variant: str) -> AlltoallvSpec:
+    kw = {}
+    if spec.pack_impl == "fused" and (
+            variant == "lock"
+            or (variant == "fence" and len(spec.axis) != 1)):
+        # The fused kernel exists for the fence epoch (single axis) and the
+        # hierarchy leader stage; other candidates use the pallas gather.
+        kw["pack_impl"] = "pallas"
+    return dataclasses.replace(spec, variant=variant, **kw)

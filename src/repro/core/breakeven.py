@@ -52,23 +52,48 @@ def n_breakeven(t_init: float, t_mpi: float, t_persist: float) -> float:
     return math.ceil(t_init / delta) if t_init > 0 else 1
 
 
+def measure_arms(arms: dict[str, Callable[[], jax.Array]],
+                 iters: int = 50,
+                 warmup: int = 5,
+                 bursts: int = 4) -> dict[str, float]:
+    """Interleaved min-of-bursts timing over named arms.
+
+    Every arm runs in short bursts, round-robin across arms, and each arm's
+    estimate is the *minimum* of its burst means.  Interleaving keeps a
+    drifting background load (shared CI hosts) from being attributed to
+    whichever arm happened to run later; the min discards bursts that
+    caught a load spike.  Two arms timed with different estimators are not
+    comparable — every cross-arm metric in this repo (break-even, autotune,
+    benchmark savings columns) goes through this one.
+    """
+    for fn in arms.values():
+        for _ in range(warmup):
+            jax.block_until_ready(fn())
+    burst_iters = max(iters // bursts, 1)
+    samples: dict[str, list[float]] = {name: [] for name in arms}
+    for _ in range(bursts):
+        for name, fn in arms.items():
+            t0 = time.perf_counter()
+            for _ in range(burst_iters):
+                jax.block_until_ready(fn())
+            samples[name].append((time.perf_counter() - t0) / burst_iters)
+    return {name: min(s) for name, s in samples.items()}
+
+
 def measure(run_persistent: Callable[[], jax.Array],
             run_baseline: Callable[[], jax.Array],
             t_init: float,
             iters: int = 50,
-            warmup: int = 5) -> BreakEven:
-    """Time both paths (block_until_ready per call, max-style like MPI_MAX
-    reduction is implicit: single-process host timing covers all shards)."""
-    for _ in range(warmup):
-        jax.block_until_ready(run_persistent())
-        jax.block_until_ready(run_baseline())
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        jax.block_until_ready(run_persistent())
-    t_persist = (time.perf_counter() - t0) / iters
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        jax.block_until_ready(run_baseline())
-    t_mpi = (time.perf_counter() - t0) / iters
-    return BreakEven(t_init=t_init, t_persist=t_persist, t_mpi=t_mpi,
-                     n_breakeven=n_breakeven(t_init, t_mpi, t_persist))
+            warmup: int = 5,
+            bursts: int = 4) -> BreakEven:
+    """Time both paths with the shared interleaved min-of-bursts estimator
+    (block_until_ready per call; single-process host timing covers all
+    shards, the MPI_MAX reduction is implicit).  Back-to-back whole-block
+    timing — persistent first, baseline second — would bias Eq. 3 against
+    whichever path ran while the host was busier."""
+    t = measure_arms({"persistent": run_persistent, "baseline": run_baseline},
+                     iters=iters, warmup=warmup, bursts=bursts)
+    return BreakEven(t_init=t_init, t_persist=t["persistent"],
+                     t_mpi=t["baseline"],
+                     n_breakeven=n_breakeven(t_init, t["baseline"],
+                                             t["persistent"]))

@@ -18,7 +18,12 @@ Everything here is the JAX/TPU rendition of what the paper's
     ``hierarchy_is_all_local``) that lets a plan skip empty lock rounds and
     the outer-stage collective of an all-local hierarchical pattern,
   * all-rank pack/unpack gather index maps (``baked_index_tables``), dense
-    ``[P, P*C]`` / ``[P, recv_rows]`` tables.
+    ``[P, P*C]`` / ``[P, recv_rows]`` tables,
+  * the leader-combined two-stage schedule (``hier_two_stage_schedule``)
+    for the hierarchical variant: intra-group gather, per-group-pair
+    combined slab capacities + slab-filtered round permutations (and the
+    ``cross_group_puts`` message counter), intra-group scatter, and the
+    final unpack — four more axis-sharded gather tables.
 
 All of it is plain numpy: it runs on host once at INIT time.  The scalar
 metadata is baked into the compiled START executable as constants; the
@@ -255,6 +260,321 @@ def baked_index_tables(
     return BakedIndexTables(pack_src, pack_valid, unpack_src, unpack_valid)
 
 
+# ---------------------------------------------------------------------------
+# Leader-combined two-stage hierarchy (Träff-style message combining)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HierSchedule:
+    """INIT-baked schedule + index tables for the leader-combined hierarchy.
+
+    The flat hierarchical exchange moves one slab per (rank, remote group):
+    O(P * P_outer) cross-group messages, each padded to the global bucket
+    capacity.  Message combining stages the exchange in three hops instead:
+
+      stage 1  intra-group gather (inner-axis all_to_all): every rank ships
+               its cross-group rows to the group *leader* responsible for the
+               destination group.  Leadership is distributed round-robin over
+               the inner axis so all ranks act as leaders in parallel: in
+               macro-round ``m`` inner rank ``q`` owns the group at ring
+               offset ``d = m * p_inner + q + 1``.
+      stage 2  inter-group leader exchange: one combined slab per
+               (source group, target group) pair — ``P_outer * (P_outer - 1)``
+               cross-group messages total, i.e. O((P/g)^2) instead of
+               O(P * P/g).  Slabs are ragged-packed (padding amortizes over
+               the whole group pair, not per rank pair) and empty slabs are
+               dropped from the round's permutation (sparsity elision);
+               macro-rounds with no traffic anywhere are elided entirely.
+      stage 3  intra-group scatter (inner-axis all_to_all): receiving leaders
+               deliver slab rows to their final local destinations.  Purely
+               group-local rows bypass stages 1-2 completely and enter here
+               straight from the send buffer, so their staging overlaps the
+               inter-group epoch (the paper's remote-first put ordering).
+
+    All four gather maps (``s1`` pack, ``s2`` slab build, ``s3`` scatter
+    build, final ``unpack``) are materialized per rank at INIT and uploaded
+    axis-sharded exactly like ``BakedIndexTables``.  ``cross_group_puts`` is
+    the instrumented message counter the tests assert on.
+    """
+
+    p_outer: int
+    p_inner: int
+    n_macro: int                      # macro rounds (ceil((P_outer-1)/P_inner))
+    remote_needed: bool               # any row crosses a group boundary
+    s1_cap: int                       # stage-1 bucket capacity (rows)
+    s2_caps: tuple[int, ...]          # per-macro-round slab capacity (0 = elided)
+    s2_offs: tuple[int, ...]          # row offset of each round's slab
+    total_s2: int                     # sum of s2_caps
+    s3_cap: int                       # stage-3 bucket capacity (rows)
+    round_perms: tuple[tuple[tuple[int, int], ...], ...]  # per round, linearized
+    cross_group_puts: int             # total inter-group messages per epoch
+    # Per-rank gather tables, [P, width]; uploaded axis-sharded.
+    s1_src: np.ndarray
+    s1_valid: np.ndarray              # [P, p_inner * s1_cap]   from send buffer
+    s2_src: np.ndarray
+    s2_valid: np.ndarray              # [P, total_s2]           from stage-1 recv
+    s3_src: np.ndarray
+    s3_valid: np.ndarray              # [P, p_inner * s3_cap]   from concat(stage-2 recv, send buffer)
+    unpack_src: np.ndarray
+    unpack_valid: np.ndarray          # [P, recv_rows]          from stage-3 recv
+
+    @property
+    def tables(self) -> tuple[np.ndarray, ...]:
+        return (self.s1_src, self.s1_valid, self.s2_src, self.s2_valid,
+                self.s3_src, self.s3_valid, self.unpack_src, self.unpack_valid)
+
+
+def hier_offset(m: int, q: int, p_inner: int) -> int:
+    """Ring offset (in groups) that leader ``q`` serves in macro-round ``m``."""
+    return m * p_inner + q + 1
+
+
+def hier_leader_of(src_outer: int, dst_outer: int, p_outer: int,
+                   p_inner: int) -> tuple[int, int]:
+    """(macro_round, inner_leader) that carries the (src -> dst) group slab."""
+    d = (dst_outer - src_outer) % p_outer
+    if d == 0:
+        raise ValueError("intra-group traffic has no inter-group leader")
+    return (d - 1) // p_inner, (d - 1) % p_inner
+
+
+def hier_two_stage_schedule(
+    send_counts: np.ndarray,
+    p_outer: int,
+    p_inner: int,
+    recv_rows: int,
+    tile_rows: int = TILE_ROWS,
+) -> HierSchedule:
+    """Bake the full leader-combined schedule for a frozen pattern.
+
+    Ranks are outer-major: global rank ``g = o * p_inner + q``.  Everything
+    here is host-side numpy run once at INIT; the returned tables are the
+    only per-rank state the epoch hot path touches.
+    """
+    c = _as_counts(send_counts)
+    p = c.shape[0]
+    if p != p_outer * p_inner:
+        raise ValueError(f"{p} ranks != {p_outer} x {p_inner}")
+    sd = displacements(c)
+    rc = recv_counts(c)
+    rd = displacements(rc)
+    n_macro = -(-(p_outer - 1) // p_inner) if p_outer > 1 else 0
+
+    # Cross-group traffic matrix X[o, to] = rows group o sends group to.
+    grp = np.arange(p) // p_inner
+    x_mat = np.zeros((p_outer, p_outer), np.int64)
+    for o in range(p_outer):
+        for to in range(p_outer):
+            x_mat[o, to] = c[np.ix_(grp == o, grp == to)].sum()
+    cross = x_mat.copy()
+    np.fill_diagonal(cross, 0)
+    remote_needed = bool(cross.any())
+
+    def valid_d(m: int, q: int) -> int | None:
+        d = hier_offset(m, q, p_inner)
+        return d if d < p_outer else None
+
+    # --- stage-1 bucket layout: sender (o, sq) -> leader (o, q') ----------
+    # Rows in bucket order: for m, for ti: the c[(o,sq), (to(m,q'), ti)] rows.
+    def s1_bucket_rows(g: int, qp: int) -> list[int]:
+        o = g // p_inner
+        rows: list[int] = []
+        for m in range(n_macro):
+            d = valid_d(m, qp)
+            if d is None:
+                continue
+            to = (o + d) % p_outer
+            for ti in range(p_inner):
+                tgt = to * p_inner + ti
+                rows.extend(range(int(sd[g, tgt]), int(sd[g, tgt] + c[g, tgt])))
+        return rows
+
+    b1 = np.zeros((p, p_inner), np.int64)
+    for g in range(p):
+        for qp in range(p_inner):
+            b1[g, qp] = len(s1_bucket_rows(g, qp))
+    s1_cap = 0
+    if remote_needed:
+        s1_cap = max(round_up(int(b1.max(initial=0)), tile_rows), tile_rows)
+
+    s1_src = np.zeros((p, p_inner * s1_cap), np.int32)
+    s1_valid = np.zeros((p, p_inner * s1_cap), bool)
+    if remote_needed:
+        for g in range(p):
+            for qp in range(p_inner):
+                rows = s1_bucket_rows(g, qp)
+                off = qp * s1_cap
+                s1_src[g, off:off + len(rows)] = rows
+                s1_valid[g, off:off + len(rows)] = True
+
+    # Offset of the (m, ti) block inside bucket (sq -> q') — needed to
+    # address stage-1 recv rows when building stage-2 slabs.
+    def s1_block_off(g: int, qp: int, m_want: int, ti_want: int) -> int:
+        o = g // p_inner
+        off = 0
+        for m in range(n_macro):
+            d = valid_d(m, qp)
+            if d is None:
+                continue
+            to = (o + d) % p_outer
+            for ti in range(p_inner):
+                if m == m_want and ti == ti_want:
+                    return off
+                off += int(c[g, to * p_inner + ti])
+        raise KeyError((g, qp, m_want, ti_want))
+
+    # --- stage-2 slab capacities + permutations ---------------------------
+    s2_caps = []
+    round_perms = []
+    for m in range(n_macro):
+        cap_m = 0
+        perm_m = []
+        for o in range(p_outer):
+            for q in range(p_inner):
+                d = valid_d(m, q)
+                if d is None:
+                    continue
+                to = (o + d) % p_outer
+                if cross[o, to] == 0:
+                    continue       # empty slab: dropped from the permutation
+                cap_m = max(cap_m, int(cross[o, to]))
+                perm_m.append((o * p_inner + q, to * p_inner + q))
+        s2_caps.append(0 if cap_m == 0 else
+                       max(round_up(cap_m, tile_rows), tile_rows))
+        round_perms.append(tuple(perm_m))
+    s2_offs = np.concatenate([[0], np.cumsum(s2_caps)]).astype(int)[:-1] \
+        if s2_caps else np.zeros(0, int)
+    total_s2 = int(np.sum(s2_caps)) if s2_caps else 0
+    cross_group_puts = int(sum(len(pm) for pm in round_perms))
+
+    # --- stage-2 gather: leader (o, q) builds slab m from stage-1 recv ----
+    # Slab rows in order: for sq, for ti: c[(o,sq), (to,ti)] rows.  The
+    # (sq -> q) bucket landed at stage-1 recv offset sq * s1_cap.
+    s2_src = np.zeros((p, total_s2), np.int32)
+    s2_valid = np.zeros((p, total_s2), bool)
+    for g in range(p):
+        o, q = g // p_inner, g % p_inner
+        for m in range(n_macro):
+            d = valid_d(m, q)
+            if d is None or s2_caps[m] == 0:
+                continue
+            to = (o + d) % p_outer
+            if cross[o, to] == 0:
+                continue
+            pos = int(s2_offs[m])
+            for sq in range(p_inner):
+                gs = o * p_inner + sq
+                for ti in range(p_inner):
+                    n = int(c[gs, to * p_inner + ti])
+                    if n == 0:
+                        continue
+                    base = sq * s1_cap + s1_block_off(gs, q, m, ti)
+                    s2_src[g, pos:pos + n] = np.arange(base, base + n)
+                    s2_valid[g, pos:pos + n] = True
+                    pos += n
+
+    # Offset of the (sq, ti) block inside the (so -> o) slab.
+    def slab_block_off(so: int, o: int, sq_want: int, ti_want: int) -> int:
+        off = 0
+        for sq in range(p_inner):
+            for ti in range(p_inner):
+                if sq == sq_want and ti == ti_want:
+                    return off
+                off += int(c[so * p_inner + sq, o * p_inner + ti])
+        raise KeyError((so, o, sq_want, ti_want))
+
+    # --- stage-3 scatter: leader (o, q) -> local rank (o, ti) -------------
+    # Bucket rows: for each valid macro-round (remote slab from so(m, q)),
+    # for sq: the c[(so,sq), (o,ti)] rows out of the stage-2 recv buffer;
+    # then the leader's own local rows c[(o,q), (o,ti)] straight from the
+    # send buffer (index space: concat(stage-2 recv, send buffer)).
+    def s3_bucket(g: int, ti: int) -> list[int]:
+        o, q = g // p_inner, g % p_inner
+        rows: list[int] = []
+        for m in range(n_macro):
+            d = valid_d(m, q)
+            if d is None or s2_caps[m] == 0:
+                continue
+            so = (o - d) % p_outer
+            if cross[so, o] == 0:
+                continue
+            for sq in range(p_inner):
+                n = int(c[so * p_inner + sq, o * p_inner + ti])
+                base = int(s2_offs[m]) + slab_block_off(so, o, sq, ti)
+                rows.extend(range(base, base + n))
+        tgt = o * p_inner + ti
+        n = int(c[g, tgt])
+        rows.extend(range(total_s2 + int(sd[g, tgt]),
+                          total_s2 + int(sd[g, tgt]) + n))
+        return rows
+
+    b3 = np.zeros((p, p_inner), np.int64)
+    for g in range(p):
+        for ti in range(p_inner):
+            b3[g, ti] = len(s3_bucket(g, ti))
+    s3_cap = max(round_up(int(b3.max(initial=0)), tile_rows), tile_rows)
+
+    s3_src = np.zeros((p, p_inner * s3_cap), np.int32)
+    s3_valid = np.zeros((p, p_inner * s3_cap), bool)
+    for g in range(p):
+        for ti in range(p_inner):
+            rows = s3_bucket(g, ti)
+            off = ti * s3_cap
+            s3_src[g, off:off + len(rows)] = rows
+            s3_valid[g, off:off + len(rows)] = True
+
+    # Offset of source rank gs's rows inside the (q -> ti) stage-3 bucket.
+    def s3_block_off(g_leader: int, ti: int, gs_want: int) -> int:
+        o, q = g_leader // p_inner, g_leader % p_inner
+        off = 0
+        for m in range(n_macro):
+            d = valid_d(m, q)
+            if d is None or s2_caps[m] == 0:
+                continue
+            so = (o - d) % p_outer
+            if cross[so, o] == 0:
+                continue
+            for sq in range(p_inner):
+                gs = so * p_inner + sq
+                if gs == gs_want:
+                    return off
+                off += int(c[gs, o * p_inner + ti])
+        if gs_want == g_leader:
+            return off
+        raise KeyError((g_leader, ti, gs_want))
+
+    # --- final unpack: rank (o, ti) reorders stage-3 recv by source rank --
+    unpack_src = np.zeros((p, recv_rows), np.int32)
+    unpack_valid = np.zeros((p, recv_rows), bool)
+    for gr in range(p):
+        o, ti = gr // p_inner, gr % p_inner
+        for gs in range(p):
+            n = int(c[gs, gr])
+            if n == 0:
+                continue
+            so, sq = gs // p_inner, gs % p_inner
+            if so == o:
+                q = sq                      # local rows ride their own rank's bucket
+            else:
+                _, q = hier_leader_of(so, o, p_outer, p_inner)
+            base = q * s3_cap + s3_block_off(o * p_inner + q, ti, gs)
+            out = int(rd[gr, gs])
+            unpack_src[gr, out:out + n] = np.arange(base, base + n)
+            unpack_valid[gr, out:out + n] = True
+
+    return HierSchedule(
+        p_outer=p_outer, p_inner=p_inner, n_macro=n_macro,
+        remote_needed=remote_needed,
+        s1_cap=s1_cap, s2_caps=tuple(int(x) for x in s2_caps),
+        s2_offs=tuple(int(x) for x in s2_offs), total_s2=total_s2,
+        s3_cap=s3_cap, round_perms=tuple(round_perms),
+        cross_group_puts=cross_group_puts,
+        s1_src=s1_src, s1_valid=s1_valid, s2_src=s2_src, s2_valid=s2_valid,
+        s3_src=s3_src, s3_valid=s3_valid,
+        unpack_src=unpack_src, unpack_valid=unpack_valid)
+
+
 @dataclasses.dataclass(frozen=True)
 class PatternSignature:
     """Hashable identity of a communication pattern (the plan-cache key).
@@ -284,17 +604,21 @@ class PatternSignature:
         tile_rows: int = TILE_ROWS,
         pack_impl: str = "jnp",
         baked_metadata: bool = True,
+        axis_sizes: Sequence[int] = (),
     ) -> "PatternSignature":
         # Every spec field that changes the compiled executable must land in
         # the digest: two specs differing only in lock_schedule / tile_rows /
         # pack_impl / baked_metadata compile different START programs and
-        # must not share one cached plan.
+        # must not share one cached plan.  axis_sizes distinguishes mesh
+        # factorizations that share axis *names* — a (2, 4) and a (4, 2)
+        # grouped mesh bake entirely different two-stage schedules.
         c = _as_counts(send_counts)
         h = hashlib.sha1()
         h.update(c.tobytes())
         h.update(str((tuple(feature_shape), str(dtype), variant, tuple(axis),
                       lock_schedule, int(tile_rows), pack_impl,
-                      bool(baked_metadata))).encode())
+                      bool(baked_metadata),
+                      tuple(int(s) for s in axis_sizes))).encode())
         return PatternSignature(
             digest=h.hexdigest()[:16],
             p=c.shape[0],

@@ -66,13 +66,28 @@ class AlltoallvSpec:
             raise ValueError(f"variant must be one of {VARIANTS}")
         if self.variant == "fence_hierarchy" and len(self.axis) != 2:
             raise ValueError("fence_hierarchy needs axis=(outer, inner)")
-        if self.variant != "fence_hierarchy" and len(self.axis) != 1:
-            raise ValueError(f"variant {self.variant} takes a single axis")
+        if self.variant == "ragged" and len(self.axis) != 1:
+            raise ValueError("variant ragged takes a single axis")
+        if len(self.axis) not in (1, 2):
+            # fence/lock accept a 2-axis mesh factorization too (the
+            # exchange then runs over the linearized axis pair), so the
+            # auto dispatcher can compare flat and hierarchical variants
+            # on the same grouped mesh.
+            raise ValueError(f"axis must name 1 or 2 mesh axes, got {self.axis}")
+        if self.variant == "fence_hierarchy" and not self.baked_metadata:
+            raise ValueError("fence_hierarchy is driven by the INIT-baked "
+                             "two-stage tables; it requires baked_metadata")
         if self.pack_impl not in ("jnp", "pallas", "fused"):
             raise ValueError(f"unknown pack_impl {self.pack_impl!r}")
-        if self.pack_impl == "fused" and self.variant != "fence":
-            raise ValueError("pack_impl='fused' fuses pack into the fence "
-                             "RMA kernel; it requires variant='fence'")
+        if self.pack_impl == "fused" and self.variant not in (
+                "fence", "fence_hierarchy"):
+            raise ValueError("pack_impl='fused' fuses the gather into the "
+                             "RMA kernel; it requires variant='fence' or "
+                             "'fence_hierarchy'")
+        if self.pack_impl == "fused" and self.variant == "fence" \
+                and len(self.axis) != 1:
+            raise ValueError("the fused fence kernel exchanges over a "
+                             "single mesh axis")
         if self.pack_impl == "fused" and not self.baked_metadata:
             raise ValueError("pack_impl='fused' needs host-baked index maps")
 
@@ -115,26 +130,32 @@ class AlltoallvPlan:
         self.lock_rounds_active = (
             int(md.active_round_schedule(self.round_capacities).size)
             if spec.variant == "lock" else None)
-        if spec.variant == "fence_hierarchy":
-            self.p_outer, self.p_inner = axis_sizes
-            self.hierarchy_remote_needed = not md.hierarchy_is_all_local(
-                sc, self.p_outer, self.p_inner)
-        else:
-            self.p_outer = self.p_inner = None
-            self.hierarchy_remote_needed = None
-
         # --- buffer geometry (SPMD: padded to the max over ranks) ---
         self.send_rows = max(
             md.round_up(md.max_total_send(sc), spec.tile_rows), spec.tile_rows)
         self.recv_rows = max(
             md.round_up(md.max_total_recv(sc), spec.tile_rows), spec.tile_rows)
 
+        # --- leader-combined two-stage schedule (hierarchy only) ---
+        if spec.variant == "fence_hierarchy":
+            self.p_outer, self.p_inner = axis_sizes
+            self.hier_schedule = md.hier_two_stage_schedule(
+                sc, self.p_outer, self.p_inner, self.recv_rows, spec.tile_rows)
+            self.hierarchy_remote_needed = self.hier_schedule.remote_needed
+            self.cross_group_puts = self.hier_schedule.cross_group_puts
+        else:
+            self.p_outer = self.p_inner = None
+            self.hier_schedule = None
+            self.hierarchy_remote_needed = None
+            self.cross_group_puts = None
+
         row_elems = int(np.prod(spec.feature_shape)) if spec.feature_shape else 1
         row_bytes = row_elems * jnp.dtype(spec.dtype).itemsize
         self.signature = md.PatternSignature.build(
             sc, spec.feature_shape, spec.dtype, spec.variant, spec.axis, row_bytes,
             lock_schedule=spec.lock_schedule, tile_rows=spec.tile_rows,
-            pack_impl=spec.pack_impl, baked_metadata=spec.baked_metadata)
+            pack_impl=spec.pack_impl, baked_metadata=spec.baked_metadata,
+            axis_sizes=axis_sizes)
 
         # --- window (paper: reuse while total_recv_bytes unchanged) ---
         self._window_cache = window_cache if window_cache is not None else WindowCache()
@@ -159,7 +180,14 @@ class AlltoallvPlan:
         # arithmetic remains in the compiled START program.
         # (baked_metadata=False keeps the seed's in-graph recomputation for
         # honest A/B benchmarking.)
-        if spec.baked_metadata and spec.variant != "ragged":
+        if spec.variant == "fence_hierarchy":
+            # The two-stage schedule carries its own gather/unpack tables
+            # (s1 pack -> s2 slab build -> s3 scatter -> final unpack).
+            self.index_tables = None
+            self._table_args = tuple(
+                jax.device_put(t, self._x_sharding)
+                for t in self.hier_schedule.tables)
+        elif spec.baked_metadata and spec.variant != "ragged":
             tables = md.baked_index_tables(sc, self.capacity, self.recv_rows)
             self.index_tables = tables
             # device_put straight from numpy: sharded host-to-device upload,
@@ -199,7 +227,8 @@ class AlltoallvPlan:
     def _build_shard_fn(self) -> Callable:
         spec = self.spec
         p, cap = self.p, self.capacity
-        a2a_axis = spec.axis[0] if len(spec.axis) == 1 else None
+        # fence/lock over a 2-axis mesh exchange over the linearized pair.
+        a2a_axis = spec.axis[0] if len(spec.axis) == 1 else tuple(spec.axis)
 
         if spec.pack_impl in ("pallas", "fused"):
             from repro.kernels import ops as kops
@@ -221,34 +250,45 @@ class AlltoallvPlan:
                     self._sd_tbl[i], self._sc_tbl[i],
                     self._put_tbl[i], self._rc_tbl[i], a2a_axis)
 
-            if spec.baked_metadata:
-                src, valid, rsrc, rvalid = (t[0] for t in tables)
+            if spec.variant == "fence_hierarchy":
+                # Leader-combined three-hop epoch on the two-stage tables.
+                rows = tuple(t[0] for t in tables)
+                if spec.pack_impl == "fused":
+                    stage2 = partial(
+                        kops.fused_hier_leader_exchange,
+                        schedule=self.hier_schedule,
+                        outer_axis=spec.axis[0], inner_axis=spec.axis[1],
+                        mesh_axes=tuple(self.mesh.axis_names))
+                else:
+                    stage2 = None
+                buckets = variants.hierarchy_exchange_combined(
+                    x, rows[:6], self.hier_schedule,
+                    spec.axis[0], spec.axis[1], stage2_impl=stage2)
+                rsrc, rvalid = rows[6], rows[7]
             else:
-                src, valid = variants.pack_index_map_in_graph(
-                    self._sc_tbl[i], self._sd_tbl[i], p, cap)
-                rsrc, rvalid = variants.unpack_index_map_in_graph(
-                    self._rc_tbl[i], self._rd_tbl[i], p, cap, self.recv_rows)
+                if spec.baked_metadata:
+                    src, valid, rsrc, rvalid = (t[0] for t in tables)
+                else:
+                    src, valid = variants.pack_index_map_in_graph(
+                        self._sc_tbl[i], self._sd_tbl[i], p, cap)
+                    rsrc, rvalid = variants.unpack_index_map_in_graph(
+                        self._rc_tbl[i], self._rd_tbl[i], p, cap, self.recv_rows)
 
-            if spec.pack_impl == "fused":
-                # Pack fused into the remote-DMA kernel: rows are gathered
-                # straight into the put source tile, never materializing the
-                # padded [P*C, F] intermediate in HBM.
-                buckets = kops.fused_pack_alltoallv(
-                    x, src, valid, p=p, capacity=cap, axis=a2a_axis,
-                    mesh_axes=tuple(self.mesh.axis_names))
-            else:
-                packed = pack(x, src, valid)
-                if spec.variant == "fence":
-                    buckets = variants.fence_exchange(packed, a2a_axis)
-                elif spec.variant == "lock":
-                    buckets = variants.lock_exchange(
-                        packed, a2a_axis, p, cap,
-                        self.round_capacities, spec.lock_schedule)
-                else:  # fence_hierarchy
-                    buckets = variants.hierarchy_exchange(
-                        packed, spec.axis[0], spec.axis[1],
-                        self.p_outer, self.p_inner, cap,
-                        remote_needed=self.hierarchy_remote_needed)
+                if spec.pack_impl == "fused":
+                    # Pack fused into the remote-DMA kernel: rows are gathered
+                    # straight into the put source tile, never materializing the
+                    # padded [P*C, F] intermediate in HBM.
+                    buckets = kops.fused_pack_alltoallv(
+                        x, src, valid, p=p, capacity=cap, axis=a2a_axis,
+                        mesh_axes=tuple(self.mesh.axis_names))
+                else:
+                    packed = pack(x, src, valid)
+                    if spec.variant == "fence":
+                        buckets = variants.fence_exchange(packed, a2a_axis)
+                    else:  # lock
+                        buckets = variants.lock_exchange(
+                            packed, a2a_axis, p, cap,
+                            self.round_capacities, spec.lock_schedule)
 
             out = unpack(buckets, rsrc, rvalid)
             # Write-through into the window: padding keeps stale window bytes
@@ -290,17 +330,21 @@ class AlltoallvPlan:
         self.starts += 1
         return out
 
-    def start_pipelined(self, sendbuf: jax.Array) -> jax.Array:
-        """Launch one epoch against the double-buffered window.
+    def start_pipelined(self, sendbuf: jax.Array, depth: int = 2) -> jax.Array:
+        """Launch one epoch against the multi-slot window.
 
-        Epochs alternate between two window slots, so epoch k+1's donated
+        Epochs rotate through ``depth`` window slots, so epoch k+1's donated
         buffer is never epoch k's output: dispatch of k+1 does not wait for
         k's consumers, letting back-to-back epochs overlap.  Callers must not
-        read an epoch's output after two further ``start_pipelined`` calls
-        (its slot has been recycled — the RMA exposure-epoch rule).
+        read an epoch's output after ``depth`` further ``start_pipelined``
+        calls (its slot has been recycled — the RMA exposure-epoch rule).
+        ``depth=2`` is classic double buffering; deeper pipelines trade
+        window memory for more epochs in flight (useful when a consumer
+        drains several epochs at once, e.g. the hierarchy benchmark's
+        batched drains).
         """
         self.compile()
-        slot = self.starts % 2
+        slot = self.starts % depth
         win = self.window.materialize(
             self.global_recv_shape, self._x_sharding, slot=slot)
         out = self._compiled(sendbuf, win, *self._table_args)
@@ -337,6 +381,9 @@ class AlltoallvPlan:
             "lock_rounds_active": self.lock_rounds_active,
             "lock_rounds_total": self.lock_rounds_total,
             "hierarchy_remote_needed": self.hierarchy_remote_needed,
+            # Inter-group messages per epoch (leader-combined hierarchy):
+            # O((P/g)^2); the flat fence epoch posts P*(P-1).
+            "cross_group_puts": self.cross_group_puts,
         }
 
 
@@ -345,6 +392,11 @@ class PlanCache:
 
     def __init__(self, window_cache: WindowCache | None = None):
         self._plans: dict[md.PatternSignature, AlltoallvPlan] = {}
+        # variant="auto" decisions, keyed by the pattern's auto-signature:
+        # {"variant": str, "times": {candidate: seconds}}.  Cached so a
+        # recurring pattern pays the measurement sweep once per process
+        # (the same amortization rule as the plans themselves).
+        self.auto_choices: dict[md.PatternSignature, dict] = {}
         self.window_cache = window_cache if window_cache is not None else WindowCache()
         self.hits = 0
         self.misses = 0
@@ -356,7 +408,8 @@ class PlanCache:
             np.asarray(spec.send_counts), spec.feature_shape, spec.dtype,
             spec.variant, spec.axis, row_bytes,
             lock_schedule=spec.lock_schedule, tile_rows=spec.tile_rows,
-            pack_impl=spec.pack_impl, baked_metadata=spec.baked_metadata)
+            pack_impl=spec.pack_impl, baked_metadata=spec.baked_metadata,
+            axis_sizes=tuple(mesh.shape[a] for a in spec.axis))
         plan = self._plans.get(sig)
         if plan is not None:
             self.hits += 1
@@ -369,4 +422,5 @@ class PlanCache:
     @property
     def stats(self) -> dict:
         return {"hits": self.hits, "misses": self.misses, "live": len(self._plans),
+                "auto_choices": len(self.auto_choices),
                 "window": self.window_cache.stats}

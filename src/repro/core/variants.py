@@ -10,12 +10,21 @@ implements one synchronization design from the paper, adapted to TPU:
                    pairwise schedule) — per-target epochs; each round's shape
                    is gated by the hottest pair, reproducing the lock-queue
                    serialization the paper measures under skew.
-  fence_hierarchy  two-stage exchange: the *remote* stage crosses the outer
-                   (pod / node) axis first with aggregated blocks, the *local*
-                   stage delivers within the group, and purely-local data
-                   bypasses the remote stage entirely so XLA overlaps it with
-                   the outer collective — the paper's remote-first put
-                   ordering.
+  fence_hierarchy  leader-combined three-hop exchange (Träff-style message
+                   combining): an intra-group gather stages every rank's
+                   cross-group rows at distributed group leaders, leaders
+                   exchange ONE combined ragged slab per (source group,
+                   target group) pair — O((P/g)^2) inter-group messages
+                   instead of O(P * P/g) — and an intra-group scatter
+                   delivers rows to their final ranks.  Purely-local rows
+                   bypass the inter-group epoch entirely and enter at the
+                   scatter stage, so their staging overlaps the remote puts
+                   (the paper's remote-first ordering).  Driven by the
+                   INIT-baked ``metadata.HierSchedule`` tables
+                   (``hierarchy_exchange_combined``); a table-free
+                   uniform-capacity rendition (``hierarchy_exchange``)
+                   serves consumers with static bucket layouts (MoE
+                   dispatch, Ulysses).
   ragged           ``lax.ragged_all_to_all`` — true variable-size exchange.
                    XLA:TPU only (XLA:CPU has no ragged-all-to-all emitter);
                    kept behind a flag for real-pod deployment and covered by
@@ -134,8 +143,82 @@ def lock_exchange(
 
 
 # ---------------------------------------------------------------------------
-# Fence-hierarchy: remote stage first, local data bypasses it
+# Fence-hierarchy: leader-combined three-hop exchange (message combining)
 # ---------------------------------------------------------------------------
+
+
+def stage2_leader_ppermute(
+    s1_recv: jax.Array,
+    s2_src: jax.Array,
+    s2_valid: jax.Array,
+    schedule,                    # metadata.HierSchedule (static)
+    axes: tuple[str, str],
+) -> jax.Array:
+    """Inter-group leader epoch, one ``ppermute`` per active macro-round.
+
+    Each active round moves one combined slab per (source group, target
+    group) pair whose cross-traffic is non-empty — the permutation was
+    slab-filtered at INIT (``HierSchedule.round_perms``), so the posted
+    message count is exactly ``schedule.cross_group_puts`` per epoch.
+    Rounds whose capacity is 0 were elided from the schedule entirely.
+    """
+    s2_send = pack_rows(s1_recv, s2_src, s2_valid)
+    s2_recv = jnp.zeros_like(s2_send)
+    for m, perm in enumerate(schedule.round_perms):
+        cap, off = schedule.s2_caps[m], schedule.s2_offs[m]
+        if cap == 0 or not perm:
+            continue
+        blk = jax.lax.slice_in_dim(s2_send, off, off + cap, axis=0)
+        got = jax.lax.ppermute(blk, axes, perm=list(perm))
+        s2_recv = jax.lax.dynamic_update_slice_in_dim(s2_recv, got, off, axis=0)
+    return s2_recv
+
+
+def hierarchy_exchange_combined(
+    x: jax.Array,                # [send_rows, F...] this shard's ragged buffer
+    tables: Sequence[jax.Array],  # this rank's rows: s1_src/valid, s2_src/valid, s3_src/valid
+    schedule,                    # metadata.HierSchedule (static host metadata)
+    outer_axis: str,
+    inner_axis: str,
+    stage2_impl=None,            # override for the fused Pallas leader epoch
+) -> jax.Array:
+    """Leader-combined hierarchical alltoallv body (call inside shard_map).
+
+    Three hops, all driven by INIT-baked index tables:
+
+      1. intra-group gather  (``all_to_all`` over ``inner_axis``): my
+         cross-group rows ship to the distributed leaders of their target
+         groups.
+      2. inter-group leader exchange: one ragged combined slab per group
+         pair (``stage2_leader_ppermute``, or the fused gather+put Pallas
+         kernel via ``stage2_impl``).
+      3. intra-group scatter (``all_to_all`` over ``inner_axis``): received
+         slab rows — plus my own group-local rows, which skipped hops 1-2
+         and therefore overlap them — are delivered to final ranks.
+
+    Returns the stage-3 recv layout ``[p_inner * s3_cap, F...]``; the
+    caller unpacks it with ``schedule``'s unpack tables.  An all-local
+    pattern (``schedule.remote_needed == False``) elides hops 1-2 at trace
+    time — the epoch is a single intra-group collective.
+    """
+    s1_src, s1_valid, s2_src, s2_valid, s3_src, s3_valid = tables
+    if schedule.remote_needed:
+        s1_send = pack_rows(x, s1_src, s1_valid)
+        s1_recv = jax.lax.all_to_all(
+            s1_send, inner_axis, split_axis=0, concat_axis=0, tiled=True)
+        if stage2_impl is not None:
+            s2_recv = stage2_impl(s1_recv, s2_src, s2_valid)
+        else:
+            s2_recv = stage2_leader_ppermute(
+                s1_recv, s2_src, s2_valid, schedule, (outer_axis, inner_axis))
+        cat = jnp.concatenate([s2_recv, x], axis=0)
+    else:
+        # No row crosses a group boundary: hops 1-2 vanish (total_s2 == 0,
+        # the s3 tables index straight into the send buffer).
+        cat = x
+    s3_send = pack_rows(cat, s3_src, s3_valid)
+    return jax.lax.all_to_all(
+        s3_send, inner_axis, split_axis=0, concat_axis=0, tiled=True)
 
 
 def hierarchy_exchange(
@@ -147,46 +230,102 @@ def hierarchy_exchange(
     capacity: int,
     remote_needed: bool = True,
 ) -> jax.Array:
-    """Two-stage alltoallv over a (P_outer, P_inner) factorization.
+    """Leader-combined exchange for *uniform* bucket layouts (no tables).
 
-    Global rank g = o * P_inner + q (outer-major).  Buckets arrive in global
-    target order [g, C, F].  Stage 1 (remote): exchange whole per-outer-group
-    slabs across ``outer_axis`` — P_outer messages of P_inner * C rows replace
-    P_outer * P_inner small ones (message aggregation, the hierarchy win).
-    Purely local slabs skip stage 1, so their stage-2 prep overlaps the outer
-    collective.  Stage 2 (local): deliver within the group across
-    ``inner_axis``.
+    The table-free twin of ``hierarchy_exchange_combined`` for consumers
+    whose per-peer buckets all share one static capacity (MoE dispatch,
+    Ulysses head exchange): every index map reduces to host-static
+    reshapes/gathers, so no INIT-baked tables are needed.  Semantically
+    identical to a flat ``all_to_all`` over the linearized (outer, inner)
+    axis pair on the bucketed layout ``[P * C, F...]``.
 
-    ``remote_needed=False`` (a persistent plan's INIT-time detection that the
-    pattern never crosses an outer-group boundary —
-    ``metadata.hierarchy_is_all_local``) elides stage 1 entirely: every
-    cross-group slab holds only zero padding, so skipping the outer
-    collective is bit-identical and removes the expensive inter-pod epoch.
+    Global rank g = o * P_inner + q (outer-major).  In macro-round ``m``
+    inner rank ``q`` is the leader for the group at ring offset
+    ``d = m * P_inner + q + 1``: the intra-group gather hands it the whole
+    group's buckets for that target group, it exchanges one combined slab
+    of ``P_inner^2 * C`` rows — P_outer * (P_outer - 1) inter-group
+    messages total instead of P * (P_outer - 1) — and the intra-group
+    scatter delivers.  Group-local buckets bypass the inter-group epoch
+    (``remote_needed=False`` skips it wholesale, the INIT-time
+    ``metadata.hierarchy_is_all_local`` detection).
     """
     f = packed.shape[1:]
-    # [target_outer, target_inner, C, F]
-    blocks = packed.reshape(p_outer, p_inner, capacity, *f)
+    c = capacity
+    blocks = packed.reshape(p_outer, p_inner, c, *f)   # [to, ti, C, F]
+    o = jax.lax.axis_index(outer_axis)
+    n_macro = -(-(p_outer - 1) // p_inner) if p_outer > 1 else 0
+    slots = n_macro * p_inner + 1                      # per-ti stage-3 slots
 
-    if remote_needed:
-        # Stage 1 — remote puts first: slab for outer group `to` moves across
-        # the outer axis.  After the exchange, slab index = source outer rank.
-        remote = jax.lax.all_to_all(
-            blocks, outer_axis, split_axis=0, concat_axis=0, tiled=True)
-        # remote[so, ti, C, F] = data from outer group `so` (same inner rank
-        # as ours) destined to inner rank ti within our outer group.
+    if remote_needed and n_macro > 0:
+        # --- hop 1: intra-group gather (split over the leader dim) -------
+        # send[q', m, ti, C] = my bucket for (group (o + d(m, q')) % P_outer,
+        # inner ti); slots whose offset exceeds the ring are zero padding.
+        d_tbl = np.arange(p_inner)[:, None] * 0 + (
+            np.arange(n_macro)[None, :] * p_inner
+            + np.arange(p_inner)[:, None] + 1)         # [q', m]
+        d_ok = d_tbl < p_outer
+        to = (o + jnp.asarray(d_tbl)) % p_outer        # traced [q', m]
+        send1 = jnp.take(blocks, to.reshape(-1), axis=0).reshape(
+            p_inner, n_macro, p_inner, c, *f)
+        send1 = jnp.where(
+            jnp.asarray(d_ok).reshape(p_inner, n_macro, *([1] * (send1.ndim - 2))),
+            send1, jnp.zeros((), send1.dtype))
+        recv1 = jax.lax.all_to_all(
+            send1, inner_axis, split_axis=0, concat_axis=0, tiled=True)
+        # recv1[sq, m, ti, C] = local rank sq's bucket for my owned groups.
+
+        # --- hop 2: one combined slab per (source group, target group) ---
+        q = jax.lax.axis_index(inner_axis)
+        lin = o * p_inner + q
+        slabs = []
+        for m in range(n_macro):
+            perm = []
+            for oo in range(p_outer):
+                for qq in range(p_inner):
+                    d = m * p_inner + qq + 1
+                    if d < p_outer:
+                        perm.append((oo * p_inner + qq,
+                                     ((oo + d) % p_outer) * p_inner + qq))
+            slab = recv1[:, m]                          # [sq, ti, C, F]
+            slabs.append(jax.lax.ppermute(
+                slab, (outer_axis, inner_axis), perm=perm))
+        recv2 = jnp.stack(slabs, axis=0)                # [m, sq, ti, C, F]
+
+        # --- hop 3: intra-group scatter + local bypass -------------------
+        local = jnp.take(blocks, o[None], axis=0)[0]    # [ti, C, F]
+        remote_part = recv2.transpose(2, 0, 1, *range(3, recv2.ndim))
+        send3 = jnp.concatenate(
+            [remote_part.reshape(p_inner, n_macro * p_inner, c, *f),
+             local[:, None]], axis=1)                   # [ti, slots, C, F]
     else:
-        # All-local pattern: the exchange would be the identity on real data
-        # (slab `o` stays, every other slab is zeros on both sides).
-        remote = blocks
+        local = jnp.take(blocks, o[None], axis=0)[0]
+        send3 = local[:, None]                          # [ti, 1, C, F]
+        slots = 1
+    recv3 = jax.lax.all_to_all(
+        send3, inner_axis, split_axis=0, concat_axis=0, tiled=True)
+    # recv3[q, slot, C, F]: slot m*P_inner+sq = rows from (so(m, q), sq);
+    # the last slot = local rank q's own bucket for me.
 
-    # Stage 2 — local delivery: exchange over the inner axis.  Axis 1 is the
-    # target-inner dimension of every slab.
-    out = jax.lax.all_to_all(remote, inner_axis, split_axis=1, concat_axis=1, tiled=True)
-    # out[so, si, C, F] = data from global rank (so, si) destined to us... but
-    # stage 2 moved axis-1 slices, so position si now indexes source inner rank.
-    return out.reshape(p_outer * p_inner, capacity, *f).reshape(
-        p_outer * p_inner * capacity, *f
-    )
+    # Reorder by source rank.  ds = (o - so) % P_outer selects (leader q,
+    # slot); ds == 0 is the local bypass slot.
+    flat = recv3.reshape(p_inner * slots, c, *f)
+    lin_idx = np.zeros((p_outer, p_inner), np.int64)    # [ds, sq]
+    for ds in range(p_outer):
+        for sq in range(p_inner):
+            if ds == 0:
+                lin_idx[ds, sq] = sq * slots + (slots - 1)
+            else:
+                qq, mm = (ds - 1) % p_inner, (ds - 1) // p_inner
+                lin_idx[ds, sq] = qq * slots + mm * p_inner + sq
+    by_ds = jnp.take(flat, jnp.asarray(lin_idx.reshape(-1)), axis=0).reshape(
+        p_outer, p_inner, c, *f)
+    if not (remote_needed and n_macro > 0):
+        # Only ds == 0 carries data; every remote slot must read as zeros.
+        mask = (jnp.arange(p_outer) == 0).reshape(p_outer, *([1] * (by_ds.ndim - 1)))
+        by_ds = jnp.where(mask, by_ds, jnp.zeros((), by_ds.dtype))
+    ds_of_so = (o - jnp.arange(p_outer)) % p_outer      # traced [so]
+    out = jnp.take(by_ds, ds_of_so, axis=0)             # [so, sq, C, F]
+    return out.reshape(p_outer * p_inner * c, *f)
 
 
 # ---------------------------------------------------------------------------

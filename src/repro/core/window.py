@@ -22,9 +22,13 @@ class Window:
     """One exposed receive buffer (per-rank rows x feature).
 
     A window holds one buffer per *slot*.  Slot 0 is the classic
-    START/WAIT window; ``AlltoallvPlan.start_pipelined`` alternates slots
-    0/1 (double buffering) so epoch k+1's donated buffer is never epoch k's
-    output and back-to-back epochs can overlap.
+    START/WAIT window; ``AlltoallvPlan.start_pipelined`` rotates through
+    ``depth`` slots (default 2, classic double buffering) so epoch k+1's
+    donated buffer is never epoch k's output and back-to-back epochs can
+    overlap — an epoch's output slot is recycled after ``depth`` further
+    starts (the RMA exposure-epoch rule).  Slots materialize lazily, so a
+    window only ever holds as many buffers as its deepest pipeline asked
+    for.
     """
 
     rows: int

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from . import gather_rows as _gather
 from . import a2a_fence as _fence
+from . import a2a_hier as _hier
 from . import a2a_lock as _lock
 
 LANE = 128
@@ -117,6 +118,48 @@ def fused_pack_alltoallv(x: jax.Array, src_idx: jax.Array, valid: jax.Array,
         mesh_axes=mesh_axes, interpret=interpret)
     out = out[:, :f0]
     return out.reshape((p * capacity,) + feat)
+
+
+def fused_hier_leader_exchange(s1_recv: jax.Array, s2_src: jax.Array,
+                               s2_valid: jax.Array, *, schedule,
+                               outer_axis: str, inner_axis: str,
+                               mesh_axes: tuple[str, ...],
+                               interpret=None) -> jax.Array:
+    """Fused stage-2 leader epoch of the combined hierarchy (in shard_map).
+
+    Gathers each inter-group slab's rows from the stage-1 recv buffer
+    straight into the remote-DMA staging tile (host-baked index map,
+    scalar-prefetched) and puts it to the partner leader — the packed slab
+    buffer never lands in HBM, and the gather of macro-round m overlaps the
+    put of round m-1.
+
+    On environments that can neither compile the kernel (no TPU) nor
+    interpret its remote DMAs this falls back to the semantically identical
+    jnp gather + per-round ``ppermute`` leader epoch, so hierarchy plans
+    with ``pack_impl='fused'`` stay runnable everywhere.
+    """
+    if interpret is None:
+        if jax.default_backend() == "cpu":
+            from repro.compat import tpu_interpret_params
+            interpret = tpu_interpret_params()
+            if interpret is None:
+                from repro.core import variants
+                return variants.stage2_leader_ppermute(
+                    s1_recv, s2_src, s2_valid, schedule,
+                    (outer_axis, inner_axis))
+        else:
+            interpret = False
+    x2d, feat = _flatten_features(s1_recv)
+    x2d, f0 = _pad_lanes(x2d)
+    out = _hier.rma_hier_leader_exchange(
+        x2d, s2_src, s2_valid,
+        p_outer=schedule.p_outer, p_inner=schedule.p_inner,
+        round_caps=schedule.s2_caps, round_offs=schedule.s2_offs,
+        total_s2=schedule.total_s2,
+        outer_axis=outer_axis, inner_axis=inner_axis,
+        mesh_axes=mesh_axes, interpret=interpret)
+    out = out[:, :f0]
+    return out.reshape((schedule.total_s2,) + feat)
 
 
 def rma_alltoallv(packed: jax.Array, *, variant: str, p: int, capacity: int,

@@ -78,12 +78,14 @@ class MoEDispatchPlan:
 
     n_experts: int
     top_k: int
-    ep_size: int            # shards along the expert (model) axis
+    ep_size: int            # shards along the expert axis (or axis pair)
     e_local: int            # experts per shard
     tokens_per_shard: int   # padded token chunk per EP shard (T_loc)
     capacity: int           # per-(chunk, expert) slot capacity C
     variant: str            # fence | lock | fence_hierarchy | gspmd-only
-    axis: str | None        # EP mesh axis name (None = no EP axis in mesh)
+    # EP mesh axis: a single name, a linearized (outer, inner) pair (the
+    # hierarchical EP factorization), or None (no EP axis in mesh).
+    axis: str | tuple[str, str] | None
     hier_axes: tuple[str, str] | None = None
 
     @property
@@ -91,9 +93,23 @@ class MoEDispatchPlan:
         return self.e_local * self.capacity
 
     @staticmethod
-    def build(moe: MoEConfig, n_tokens: int, mesh, tile: int = 8) -> "MoEDispatchPlan":
-        axis = "model" if (mesh is not None and "model" in mesh.axis_names) else None
-        ep = int(mesh.shape[axis]) if axis else 1
+    def build(moe: MoEConfig, n_tokens: int, mesh, tile: int = 8,
+              hier_axes: tuple[str, str] | None = None) -> "MoEDispatchPlan":
+        """``hier_axes=(outer, inner)`` spans EP over a 2-axis mesh
+        factorization (e.g. ``("pod", "model")`` with the ``experts``
+        sharding rule widened to match): the alltoallv then runs over the
+        linearized pair, and ``a2a_variant="fence_hierarchy"`` dispatches
+        through the leader-combined exchange — O((EP/g)^2) cross-pod
+        messages per MoE layer instead of O(EP^2/g)."""
+        if hier_axes is not None and mesh is not None \
+                and all(a in mesh.axis_names for a in hier_axes):
+            axis: str | tuple[str, str] | None = tuple(hier_axes)
+            ep = int(np.prod([mesh.shape[a] for a in hier_axes]))
+        else:
+            hier_axes = None
+            axis = "model" if (mesh is not None
+                               and "model" in mesh.axis_names) else None
+            ep = int(mesh.shape[axis]) if axis else 1
         if moe.n_experts % ep:
             raise ValueError(f"{moe.n_experts} experts not divisible by EP={ep}")
         t_loc = max(-(-n_tokens // ep), tile)
@@ -101,14 +117,11 @@ class MoEDispatchPlan:
         cap = max(int(math.ceil(t_loc * moe.top_k * moe.capacity_factor
                                 / moe.n_experts)), tile)
         cap = -(-cap // tile) * tile
-        # Hierarchical a2a needs EP to span two mesh axes; our production EP
-        # lives on the single `model` axis, so hier_axes stays None here (the
-        # variant then falls back to fence) — exercised via the core engine
-        # benchmarks on dedicated 2-D meshes instead.
         return MoEDispatchPlan(
             n_experts=moe.n_experts, top_k=moe.top_k, ep_size=ep,
             e_local=moe.n_experts // ep, tokens_per_shard=t_loc,
-            capacity=cap, variant=moe.a2a_variant, axis=axis, hier_axes=None)
+            capacity=cap, variant=moe.a2a_variant, axis=axis,
+            hier_axes=hier_axes)
 
 
 # ---------------------------------------------------------------------------
@@ -211,7 +224,9 @@ def _a2a_shard_body(tokens, router_w, w_gate, w_up, w_down,
         one = (rdispls[-1] >= 0).astype(packed.dtype)
         packed = packed * one
 
-    # alltoallv over the EP axis
+    # alltoallv over the EP axis.  The per-peer bucket is e_local slots of C
+    # rows = plan.peer_rows rows — the uniform capacity every exchange
+    # schedule below shares.
     if axis is None or ep == 1:
         exchanged = packed
     elif plan.variant == "lock":
@@ -221,7 +236,8 @@ def _a2a_shard_body(tokens, router_w, w_gate, w_up, w_down,
         o_ax, i_ax = plan.hier_axes
         mesh = current_mesh()
         exchanged = core_variants.hierarchy_exchange(
-            packed, o_ax, i_ax, mesh.shape[o_ax], mesh.shape[i_ax], cap)
+            packed, o_ax, i_ax, int(mesh.shape[o_ax]), int(mesh.shape[i_ax]),
+            plan.peer_rows)
     else:
         exchanged = core_variants.fence_exchange(packed, axis)
 
@@ -241,7 +257,8 @@ def _a2a_shard_body(tokens, router_w, w_gate, w_up, w_down,
         o_ax, i_ax = plan.hier_axes
         mesh = current_mesh()
         returned = core_variants.hierarchy_exchange(
-            back, o_ax, i_ax, mesh.shape[o_ax], mesh.shape[i_ax], cap)
+            back, o_ax, i_ax, int(mesh.shape[o_ax]), int(mesh.shape[i_ax]),
+            plan.peer_rows)
     else:
         returned = core_variants.fence_exchange(back, axis)
 
@@ -270,7 +287,14 @@ def _gspmd_dispatch(x2d, nvalid, params, moe: MoEConfig, plan: MoEDispatchPlan):
     buckets = _scatter_buckets(x2d, slot, keep, moe.top_k, e * cap_total, d)
     buckets = cs(buckets.reshape(e, cap_total, d), "experts", None, "embed")
     h = _expert_ffn(buckets, params["w_gate"], params["w_up"], params["w_down"])
-    h = cs(h, "experts", None, "embed").reshape(e * cap_total, d)
+    # Combine gathers back out of h with *token*-sharded indices.  h must be
+    # replicated (cs with no sharded axes) before that gather: jax 0.4.x
+    # GSPMD miscompiles a gather whose operand dim 0 is model-sharded while
+    # the indices are data-sharded — the partial-gather reduction is also
+    # applied over the data axis, returning data_axis_size x the true values
+    # (the "dp-doubled gspmd output" defect from the ROADMAP; minimal repro
+    # in repro.testing.dist_cases.gspmd_gather_miscompile_guard).
+    h = cs(h.reshape(e * cap_total, d), None, None)
     padded = jnp.concatenate([h, jnp.zeros((8, d), h.dtype)], axis=0)
     out = padded[slot] * (keep.astype(h.dtype) * w.astype(h.dtype))[:, None]
     y = out.reshape(t, moe.top_k, d).sum(axis=1)

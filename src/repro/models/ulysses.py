@@ -35,19 +35,46 @@ from repro.parallel.sharding import current_mesh, resolve
 class UlyssesPlan:
     """Persistent head-exchange geometry (INIT-time metadata)."""
 
-    axis: str          # mesh axis carrying the sequence shards
+    # mesh axis carrying the sequence shards: one name, or a linearized
+    # (outer, inner) pair when the sequence spans a grouped (pod, chip) mesh
+    axis: str | tuple[str, str]
     p: int             # shards
     n_heads: int
     head_dim: int
+    # route the head exchange through the leader-combined hierarchical
+    # schedule (uniform-capacity rendition): O((P/g)^2) cross-pod messages
+    # per exchange instead of O(P * P/g).  Requires a 2-axis ``axis``.
+    hier: bool = False
 
     @staticmethod
-    def build(n_heads: int, head_dim: int, mesh=None, axis: str = "model"):
+    def build(n_heads: int, head_dim: int, mesh=None, axis="model",
+              hier: bool = False):
         mesh = mesh if mesh is not None else current_mesh()
-        p = int(mesh.shape[axis]) if (mesh is not None
-                                      and axis in mesh.axis_names) else 1
+        axes = (axis,) if isinstance(axis, str) else tuple(axis)
+        if mesh is not None and all(a in mesh.axis_names for a in axes):
+            p = int(np.prod([mesh.shape[a] for a in axes]))
+        else:
+            p = 1
+        if hier and len(axes) != 2:
+            raise ValueError("hier head exchange needs axis=(outer, inner)")
         if n_heads % max(p, 1):
             raise ValueError(f"{n_heads} heads not divisible by {p} shards")
-        return UlyssesPlan(axis=axis, p=p, n_heads=n_heads, head_dim=head_dim)
+        return UlyssesPlan(axis=axis if isinstance(axis, str) else axes,
+                           p=p, n_heads=n_heads, head_dim=head_dim, hier=hier)
+
+
+def _head_exchange(packed: jax.Array, plan: UlyssesPlan) -> jax.Array:
+    """Bucketed [P*B, ...] exchange: flat fence epoch, or the
+    leader-combined hierarchical schedule on a grouped (outer, inner) mesh
+    (bit-identical output; the cross-group message count drops from
+    O(P * P_outer) to O(P_outer^2))."""
+    if plan.hier:
+        mesh = current_mesh()
+        o_ax, i_ax = plan.axis
+        return core_variants.hierarchy_exchange(
+            packed, o_ax, i_ax, int(mesh.shape[o_ax]), int(mesh.shape[i_ax]),
+            packed.shape[0] // plan.p)
+    return core_variants.fence_exchange(packed, plan.axis)
 
 
 def _seq_to_heads(x: jax.Array, plan: UlyssesPlan) -> jax.Array:
@@ -57,7 +84,7 @@ def _seq_to_heads(x: jax.Array, plan: UlyssesPlan) -> jax.Array:
     # bucket j = my sequence shard's slice of head-group j
     packed = x.reshape(b, s_loc, p, h // p, d).transpose(2, 0, 1, 3, 4)
     packed = packed.reshape(p * b, s_loc, h // p, d)
-    out = core_variants.fence_exchange(packed, plan.axis)
+    out = _head_exchange(packed, plan)
     out = out.reshape(p, b, s_loc, h // p, d).transpose(1, 0, 2, 3, 4)
     return out.reshape(b, p * s_loc, h // p, d)
 
@@ -68,7 +95,7 @@ def _heads_to_seq(x: jax.Array, plan: UlyssesPlan) -> jax.Array:
     p = plan.p
     packed = x.reshape(b, p, s // p, hp, d).transpose(1, 0, 2, 3, 4)
     packed = packed.reshape(p * b, s // p, hp, d)
-    out = core_variants.fence_exchange(packed, plan.axis)
+    out = _head_exchange(packed, plan)
     # recv bucket i = my position block computed with head-group i:
     # [p, b, s_loc, hp, d] -> [b, s_loc, (p, hp)=H, d]
     out = out.reshape(p, b, s // p, hp, d).transpose(1, 2, 0, 3, 4)

@@ -40,6 +40,30 @@ def test_hierarchy_local_elision(dist):
     dist("hierarchy_local_elision", devices=8)
 
 
+def test_hier_combined_parity(dist):
+    dist("hier_combined_parity", devices=8)
+
+
+def test_hier_combined_parity_small_world(dist):
+    dist("hier_combined_parity", devices=4)
+
+
+def test_auto_variant_dispatch(dist):
+    dist("auto_variant_dispatch", devices=8)
+
+
+def test_gspmd_gather_miscompile_guard(dist):
+    dist("gspmd_gather_miscompile_guard", devices=8)
+
+
+def test_moe_hier_dispatch(dist):
+    dist("moe_hier_dispatch", devices=8)
+
+
+def test_ulysses_hier_attention(dist):
+    dist("ulysses_hier_attention", devices=4)
+
+
 def test_fused_pack_fence(dist):
     dist("fused_pack_fence", devices=4)
 

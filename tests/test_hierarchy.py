@@ -1,0 +1,175 @@
+"""Leader-combined two-stage hierarchy: host-side schedule correctness.
+
+The three-hop exchange (intra-group gather -> inter-group leader slabs ->
+intra-group scatter) is fully described by the INIT-baked index tables in
+``metadata.HierSchedule``.  These tests execute the schedule in pure numpy —
+each collective replaced by its literal data movement — and require the
+round trip to reproduce the global alltoallv oracle bit-for-bit, for dense,
+banded, skewed, all-local, and randomized patterns across group shapes.
+The multi-device (jax collective) halves live in test_distributed.py.
+"""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, strategies as st
+from repro.core import metadata as md, reference
+
+
+def _gather(src_tbl, valid_tbl, source):
+    """Masked row gather: numpy twin of variants.pack_rows."""
+    out = source[np.clip(src_tbl, 0, len(source) - 1)]
+    mask = valid_tbl.reshape(valid_tbl.shape + (1,) * (out.ndim - 1))
+    return np.where(mask, out, 0)
+
+
+def simulate_two_stage(counts, p_outer, p_inner, bufs, recv_rows):
+    """Run the schedule with every collective spelled out in numpy.
+
+    bufs: [P, send_rows, F...] per-rank ragged send buffers.
+    Returns [P, recv_rows, F...].
+    """
+    hs = md.hier_two_stage_schedule(counts, p_outer, p_inner, recv_rows)
+    p = p_outer * p_inner
+    feat = bufs.shape[2:]
+
+    # stage 1: pack + inner-axis all_to_all (bucket sq of my recv = bucket
+    # q of local rank sq's send)
+    s1w = hs.s1_src.shape[1]
+    s1_recv = np.zeros((p, s1w) + feat, bufs.dtype)
+    if hs.remote_needed:
+        s1_send = np.stack(
+            [_gather(hs.s1_src[g], hs.s1_valid[g], bufs[g]) for g in range(p)])
+        for o in range(p_outer):
+            for q in range(p_inner):
+                for sq in range(p_inner):
+                    s1_recv[o * p_inner + q, sq * hs.s1_cap:(sq + 1) * hs.s1_cap] = \
+                        s1_send[o * p_inner + sq, q * hs.s1_cap:(q + 1) * hs.s1_cap]
+
+    # stage 2: slab build + per-macro-round leader permutation
+    s2_recv = np.zeros((p, hs.total_s2) + feat, bufs.dtype)
+    if hs.remote_needed:
+        s2_send = np.stack(
+            [_gather(hs.s2_src[g], hs.s2_valid[g], s1_recv[g]) for g in range(p)])
+        for m, perm in enumerate(hs.round_perms):
+            off, cap = hs.s2_offs[m], hs.s2_caps[m]
+            for src, dst in perm:
+                s2_recv[dst, off:off + cap] = s2_send[src, off:off + cap]
+
+    # stage 3: scatter build (sources = stage-2 recv ++ own send buffer)
+    # + inner-axis all_to_all
+    cat = np.concatenate([s2_recv, bufs], axis=1)
+    s3_send = np.stack(
+        [_gather(hs.s3_src[g], hs.s3_valid[g], cat[g]) for g in range(p)])
+    s3_recv = np.zeros_like(s3_send)
+    for o in range(p_outer):
+        for q in range(p_inner):
+            for sq in range(p_inner):
+                s3_recv[o * p_inner + q, sq * hs.s3_cap:(sq + 1) * hs.s3_cap] = \
+                    s3_send[o * p_inner + sq, q * hs.s3_cap:(q + 1) * hs.s3_cap]
+
+    # final unpack into source-rank order
+    return np.stack(
+        [_gather(hs.unpack_src[g], hs.unpack_valid[g], s3_recv[g])
+         for g in range(p)])
+
+
+def _roundtrip(counts, p_outer, p_inner, feature=(3,)):
+    counts = np.asarray(counts, np.int64)
+    p = counts.shape[0]
+    send_rows = max(md.round_up(md.max_total_send(counts), 8), 8)
+    recv_rows = max(md.round_up(md.max_total_recv(counts), 8), 8)
+    bufs = reference.make_testbufs(counts, feature, np.float32, send_rows)
+    want = reference.alltoallv_global(bufs, counts, recv_rows)
+    got = simulate_two_stage(counts, p_outer, p_inner, bufs, recv_rows)
+    rc = md.recv_counts(counts)
+    for r in range(p):
+        n = int(rc[r].sum())
+        np.testing.assert_array_equal(got[r, :n], want[r, :n], err_msg=f"rank {r}")
+
+
+GROUP_SHAPES = [(2, 2), (2, 4), (4, 2), (2, 3), (3, 2), (4, 4), (1, 4), (4, 1)]
+
+
+@pytest.mark.parametrize("p_outer,p_inner", GROUP_SHAPES)
+def test_two_stage_roundtrip_dense(p_outer, p_inner):
+    p = p_outer * p_inner
+    rng = np.random.default_rng(p)
+    _roundtrip(rng.integers(0, 13, (p, p)), p_outer, p_inner)
+
+
+@pytest.mark.parametrize("p_outer,p_inner", [(2, 4), (4, 2)])
+def test_two_stage_roundtrip_banded(p_outer, p_inner):
+    p = p_outer * p_inner
+    rng = np.random.default_rng(3)
+    c = np.zeros((p, p), np.int64)
+    for i in range(p):
+        for d in (-1, 0, 1):
+            c[i, (i + d) % p] = rng.integers(1, 9)
+    _roundtrip(c, p_outer, p_inner)
+
+
+@pytest.mark.parametrize("p_outer,p_inner", [(2, 4), (4, 2)])
+def test_two_stage_roundtrip_skewed(p_outer, p_inner):
+    p = p_outer * p_inner
+    rng = np.random.default_rng(5)
+    c = rng.integers(0, 4, (p, p))
+    c[:, p - 1] *= 11          # hot receiver
+    c[0, :] *= 7               # hot sender
+    _roundtrip(c, p_outer, p_inner)
+
+
+def test_two_stage_roundtrip_all_local():
+    """Group-diagonal pattern: remote stages elide, schedule still correct."""
+    p_outer, p_inner = 2, 4
+    p = p_outer * p_inner
+    rng = np.random.default_rng(7)
+    c = np.zeros((p, p), np.int64)
+    for g in range(p_outer):
+        lo, hi = g * p_inner, (g + 1) * p_inner
+        c[lo:hi, lo:hi] = rng.integers(0, 9, (p_inner, p_inner))
+    hs = md.hier_two_stage_schedule(c, p_outer, p_inner, 64)
+    assert not hs.remote_needed and hs.cross_group_puts == 0
+    _roundtrip(c, p_outer, p_inner)
+
+
+counts_and_shape = st.integers(0, 5).flatmap(
+    lambda i: st.lists(
+        st.lists(st.integers(0, 20),
+                 min_size=GROUP_SHAPES[i][0] * GROUP_SHAPES[i][1],
+                 max_size=GROUP_SHAPES[i][0] * GROUP_SHAPES[i][1]),
+        min_size=GROUP_SHAPES[i][0] * GROUP_SHAPES[i][1],
+        max_size=GROUP_SHAPES[i][0] * GROUP_SHAPES[i][1],
+    ).map(lambda rows: (np.array(rows), GROUP_SHAPES[i])))
+
+
+@given(counts_and_shape)
+def test_two_stage_roundtrip_property(arg):
+    counts, (p_outer, p_inner) = arg
+    _roundtrip(counts, p_outer, p_inner)
+
+
+def test_cross_group_put_count_scaling():
+    """Dense pattern: combined put count is exactly P_outer*(P_outer-1) —
+    O((P/g)^2) — versus P*(P-1) for the flat fence epoch."""
+    for p_outer, p_inner in [(2, 4), (4, 2), (4, 4)]:
+        p = p_outer * p_inner
+        c = np.full((p, p), 3, np.int64)
+        hs = md.hier_two_stage_schedule(c, p_outer, p_inner, 8 * p)
+        assert hs.cross_group_puts == p_outer * (p_outer - 1)
+        assert hs.cross_group_puts < p * (p - 1)
+
+
+def test_sparse_slabs_drop_from_perms():
+    """Only group pairs that actually exchange rows appear in the round
+    permutations; empty macro-rounds are elided (capacity 0)."""
+    p_outer, p_inner = 4, 2
+    p = p_outer * p_inner
+    c = np.zeros((p, p), np.int64)
+    c[0, p_inner] = 5          # group 0 -> group 1 only
+    hs = md.hier_two_stage_schedule(c, p_outer, p_inner, 8)
+    assert hs.cross_group_puts == 1
+    active = [m for m, cap in enumerate(hs.s2_caps) if cap > 0]
+    assert len(active) == 1
+    (src, dst), = hs.round_perms[active[0]]
+    assert src // p_inner == 0 and dst // p_inner == 1

@@ -97,3 +97,8 @@ def test_signature_separates_compile_relevant_fields():
     assert s0 != md.PatternSignature.build(c, **base, tile_rows=16)
     assert s0 != md.PatternSignature.build(c, **base, pack_impl="pallas")
     assert s0 != md.PatternSignature.build(c, **base, baked_metadata=False)
+    # mesh factorizations share axis *names* but bake different schedules:
+    # a (2, 4) and a (4, 2) grouped mesh must not share one cached plan
+    s24 = md.PatternSignature.build(c, **base, axis_sizes=(2, 4))
+    assert s24 != md.PatternSignature.build(c, **base, axis_sizes=(4, 2))
+    assert s24 != s0
