@@ -7,14 +7,15 @@ paper's claim: for sizes >= 32,768 bytes the savings are positive and
 N_breakeven = 1 (immediate payoff).
 """
 
-import sys
+import argparse
 
 from _util import Csv, set_host_devices, time_call
 
 N_RANKS = 8
+JSON_OUT = "experiments/bench/BENCH_breakeven_model.json"
 
 
-def main(iters=30, out="experiments/bench/breakeven.csv"):
+def main(iters=30, out="experiments/bench/breakeven.csv", json_out=None):
     set_host_devices(N_RANKS)
     import jax
     import jax.numpy as jnp
@@ -59,8 +60,24 @@ def main(iters=30, out="experiments/bench/breakeven.csv"):
                 f"t_mpi_us={be.t_mpi*1e6:.1f};t_init_us={be.t_init*1e6:.0f};"
                 f"t_compile_s={plan.init_compile_seconds:.2f};"
                 f"N_be={be.n_breakeven};savings={be.savings_pct:.1f}%")
+        # Feed the fit back into the plan store (when one is configured):
+        # later processes can read the measured Eq. 1-3 terms for this
+        # pattern next to its warm-start tables.
+        from repro.planstore import default_store
+        store = default_store()
+        if store is not None:
+            store.attach_breakeven(plan.signature, {
+                "t_init": be.t_init, "t_persist": be.t_persist,
+                "t_mpi": be.t_mpi, "n_breakeven": be.n_breakeven})
     csv.save()
+    if json_out:
+        csv.save_json(json_out)
 
 
 if __name__ == "__main__":
-    main(iters=int(sys.argv[1]) if len(sys.argv) > 1 else 30)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("iters", nargs="?", type=int, default=30)
+    ap.add_argument("--json", action="store_true",
+                    help=f"also write {JSON_OUT}")
+    args = ap.parse_args()
+    main(iters=args.iters, json_out=JSON_OUT if args.json else None)

@@ -5,14 +5,16 @@ Compares fp32 psum against the int8 error-feedback compressed psum
 reduction (4x for fp32 payloads) and the quantization error bound.
 """
 
-import sys
+import argparse
 
 from _util import Csv, set_host_devices, time_call
 
 N_RANKS = 8
+JSON_OUT = "experiments/bench/BENCH_compression.json"
 
 
-def main(iters=20, n_elems=1 << 20, out="experiments/bench/compression.csv"):
+def main(iters=20, n_elems=1 << 20, out="experiments/bench/compression.csv",
+         json_out=None):
     set_host_devices(N_RANKS)
     import jax
     import jax.numpy as jnp
@@ -50,7 +52,14 @@ def main(iters=20, n_elems=1 << 20, out="experiments/bench/compression.csv"):
     csv.row("compression/psum_int8_ef", t1 * 1e6,
             f"wire_bytes={n_elems};max_err={err:.2e};quant_step={scale:.2e}")
     csv.save()
+    if json_out:
+        csv.save_json(json_out)
 
 
 if __name__ == "__main__":
-    main(iters=int(sys.argv[1]) if len(sys.argv) > 1 else 20)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("iters", nargs="?", type=int, default=20)
+    ap.add_argument("--json", action="store_true",
+                    help=f"also write {JSON_OUT}")
+    args = ap.parse_args()
+    main(iters=args.iters, json_out=JSON_OUT if args.json else None)

@@ -1,0 +1,116 @@
+"""Benchmark: cold vs warm INIT via the persistent plan store.
+
+The paper amortizes INIT over the iterations of one run (Eq. 1-3); the plan
+store amortizes it over *runs*.  This benchmark puts a number on the second
+term: for dense / banded / skewed patterns x fence / lock / hierarchy /
+auto, it times a cold INIT (host-side metadata bake, plus the autotune
+measurement sweep for ``variant="auto"``) against a warm INIT of the same
+pattern in a fresh plan cache backed by the store the cold run populated —
+the cross-process restart, emulated in-process by discarding every
+in-memory tier.
+
+Rows report the warm INIT time with the cold time, speedup, and the warm
+run's init_stats (bursts/bakes must be zero) in the derived column.
+
+    python init_cost.py [repeats] [--json]
+"""
+
+import argparse
+import tempfile
+
+from _util import Csv, set_host_devices
+
+N_DEVICES = 64      # hierarchy runs the full 8x8 mesh; fence/lock/auto use 16
+N_RANKS_FLAT = 16
+JSON_OUT = "experiments/bench/BENCH_init_cost.json"
+
+
+def _patterns(p, rng):
+    dense = rng.integers(64, 128, size=(p, p))
+    banded = dense * 0
+    for i in range(p):
+        for d in (-2, -1, 0, 1, 2):
+            banded[i, (i + d) % p] = int(rng.integers(64, 128))
+    skewed = rng.integers(4, 16, size=(p, p))
+    skewed[:, 0] += 240            # one hot receiver
+    return {"dense": dense, "banded": banded, "skewed": skewed}
+
+
+def main(repeats=2, json_out=None, out="experiments/bench/init_cost.csv"):
+    set_host_devices(N_DEVICES)
+    import time
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import PlanCache, alltoallv_init, init_stats, reset_init_stats
+    from repro.launch.mesh import make_host_mesh, make_mesh
+    from repro.planstore import PlanStore
+
+    rng = np.random.default_rng(7)
+    csv = Csv(out)
+
+    # (variant, p, mesh, axis).  The hierarchy runs at the full device count
+    # — its two-stage schedule is the bake whose cost grows superlinearly in
+    # P, i.e. exactly the artifact worth persisting.  auto stays at 16 ranks
+    # because its cold cost is the measurement sweep (compile + timed
+    # bursts), which already dwarfs table baking at any P.
+    cases = [
+        ("fence", N_RANKS_FLAT, make_host_mesh(N_RANKS_FLAT), "x"),
+        ("lock", N_RANKS_FLAT, make_host_mesh(N_RANKS_FLAT), "x"),
+        ("fence_hierarchy", N_DEVICES,
+         make_mesh((8, N_DEVICES // 8), ("o", "i")), ("o", "i")),
+        ("auto", N_RANKS_FLAT,
+         make_mesh((4, N_RANKS_FLAT // 4), ("o2", "i2")), ("o2", "i2")),
+    ]
+    patterns = {p: _patterns(p, rng) for p in {c[1] for c in cases}}
+
+    # Untimed warmup: the first plan construction pays one-time jax costs
+    # (dispatch machinery, sharded device_put path) that belong to neither
+    # the cold nor the warm column.
+    alltoallv_init(np.full((N_RANKS_FLAT,) * 2, 8), (64,), jnp.float32,
+                   cases[0][2], axis="x", cache=PlanCache(), store=False)
+
+    for pat_name in ("dense", "banded", "skewed"):
+        for variant, p, mesh, axis in cases:
+            counts = patterns[p][pat_name]
+            t_cold = t_warm = float("inf")
+            warm_stats = {}
+            for _ in range(max(repeats, 1)):
+                with tempfile.TemporaryDirectory() as d:
+                    # cold: empty store, fresh in-memory tiers
+                    reset_init_stats()
+                    t0 = time.perf_counter()
+                    alltoallv_init(counts, (64,), jnp.float32, mesh,
+                                   axis=axis, variant=variant,
+                                   cache=PlanCache(), store=PlanStore(d),
+                                   autotune_iters=4)
+                    t_cold = min(t_cold, time.perf_counter() - t0)
+                    # warm: same disk, every in-memory tier discarded
+                    reset_init_stats()
+                    t0 = time.perf_counter()
+                    alltoallv_init(counts, (64,), jnp.float32, mesh,
+                                   axis=axis, variant=variant,
+                                   cache=PlanCache(), store=PlanStore(d),
+                                   autotune_iters=4)
+                    t_warm = min(t_warm, time.perf_counter() - t0)
+                    warm_stats = init_stats()
+            csv.row(
+                f"init_cost/{pat_name}/{variant}", t_warm * 1e6,
+                f"p={p};cold_us={t_cold*1e6:.0f};"
+                f"speedup={t_cold/t_warm:.1f}x;"
+                f"warm_bakes={warm_stats['table_bakes']};"
+                f"warm_bursts={warm_stats['autotune_bursts']};"
+                f"warm_inits={warm_stats['warm_inits']}")
+    csv.save()
+    if json_out:
+        csv.save_json(json_out)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("repeats", nargs="?", type=int, default=2)
+    ap.add_argument("--json", action="store_true",
+                    help=f"also write {JSON_OUT}")
+    args = ap.parse_args()
+    main(repeats=args.repeats, json_out=JSON_OUT if args.json else None)

@@ -1,10 +1,12 @@
 """Roofline table: renders experiments/dryrun/*.json into the §Roofline
 report (one row per arch x shape x mesh).  No devices needed."""
 
+import argparse
 import glob
 import json
 import os
-import sys
+
+JSON_OUT = "experiments/bench/BENCH_roofline_table.json"
 
 
 def load(dryrun_dir="experiments/dryrun"):
@@ -38,20 +40,32 @@ def fmt_table(rows, mesh_filter=None):
     return "\n".join(out)
 
 
-def main(dryrun_dir="experiments/dryrun"):
+def main(dryrun_dir="experiments/dryrun", json_out=None):
+    from _util import Csv
+
     rows = load(dryrun_dir)
+    csv = Csv()
     if not rows:
         print(f"roofline_table,0,no dryrun artifacts in {dryrun_dir} "
               "(run python -m repro.launch.dryrun first)")
-        return
-    print(fmt_table(rows, mesh_filter="pod256"))
-    for r in rows:
-        roof = r["roofline"]
-        dom_s = max(roof["compute_s"], roof["memory_s"], roof["collective_s"])
-        print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},"
-              f"{dom_s*1e6:.1f},dominant={roof['dominant']};"
-              f"useful={roof['useful_ratio']:.3f}")
+    else:
+        print(fmt_table(rows, mesh_filter="pod256"))
+        for r in rows:
+            roof = r["roofline"]
+            dom_s = max(roof["compute_s"], roof["memory_s"],
+                        roof["collective_s"])
+            csv.row(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                    dom_s * 1e6,
+                    f"dominant={roof['dominant']};"
+                    f"useful={roof['useful_ratio']:.3f}")
+    if json_out:
+        csv.save_json(json_out)
 
 
 if __name__ == "__main__":
-    main(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("dryrun_dir", nargs="?", default="experiments/dryrun")
+    ap.add_argument("--json", action="store_true",
+                    help=f"also write {JSON_OUT}")
+    args = ap.parse_args()
+    main(args.dryrun_dir, json_out=JSON_OUT if args.json else None)

@@ -32,6 +32,7 @@ BENCHES = [
     ("breakeven_model", []),
     ("sparse_pattern", []),
     ("hierarchy_sweep", []),
+    ("init_cost", []),
     ("moe_dispatch", []),
     ("compression", []),
     ("roofline_table", []),
@@ -39,13 +40,14 @@ BENCHES = [
 
 QUICK_ITERS = {"weak_scaling": None, "msg_sweep": "8", "breakeven_model": "8",
                "sparse_pattern": "8", "hierarchy_sweep": "8",
-               "moe_dispatch": "5", "compression": "5"}
+               "init_cost": "1", "moe_dispatch": "5", "compression": "5"}
 
 # Benchmarks with a native --json flag write their own BENCH_<name>.json
 # (structured rows); for the rest run.py scrapes the captured stdout.  One
 # writer per file — never both.
 JSON_NATIVE = {"msg_sweep", "sparse_pattern", "hierarchy_sweep",
-               "weak_scaling", "moe_dispatch"}
+               "weak_scaling", "moe_dispatch", "init_cost",
+               "breakeven_model", "compression", "roofline_table"}
 
 
 def main(argv=None) -> int:
@@ -55,12 +57,18 @@ def main(argv=None) -> int:
     p.add_argument("--json", action="store_true",
                    help="write per-benchmark us_per_call results to "
                         "experiments/bench/BENCH_<name>.json")
+    p.add_argument("--plan-store", default=None, metavar="DIR",
+                   help="persistent plan-store directory exported to every "
+                        "benchmark subprocess (REPRO_PLANSTORE_DIR): INITs "
+                        "warm-start from artifacts of previous runs")
     args = p.parse_args(argv)
 
     only = set(args.only.split(",")) if args.only else None
     env = dict(os.environ,
                PYTHONPATH=SRC + os.pathsep + HERE
                + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    if args.plan_store:
+        env["REPRO_PLANSTORE_DIR"] = os.path.abspath(args.plan_store)
     os.makedirs("experiments/bench", exist_ok=True)
 
     failures = []

@@ -41,6 +41,14 @@ def axis_size(name) -> int:
 HAS_RAGGED_ALL_TO_ALL = hasattr(jax.lax, "ragged_all_to_all")
 
 
+def ragged_alltoall_executes() -> bool:
+    """True when ``lax.ragged_all_to_all`` both exists in this jax AND can
+    execute on the active backend.  The primitive lowers on XLA:TPU only
+    (XLA:CPU has no ragged-all-to-all emitter), so the ``variant="auto"``
+    candidate set folds ragged in exactly under this predicate."""
+    return HAS_RAGGED_ALL_TO_ALL and jax.default_backend() == "tpu"
+
+
 def tpu_compiler_params(**kwargs):
     """``pltpu.CompilerParams`` (new) / ``pltpu.TPUCompilerParams`` (0.4.x)."""
     from jax.experimental.pallas import tpu as pltpu

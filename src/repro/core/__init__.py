@@ -7,14 +7,17 @@ Public surface:
     reference.alltoallv_global                             numpy oracle
 """
 
-from .api import alltoallv_init, global_plan_cache, reset_global_plan_cache
-from .plan import AlltoallvPlan, AlltoallvSpec, PlanCache, VARIANTS
+from .api import (alltoallv_init, global_plan_cache, init_stats,
+                  reset_global_plan_cache, reset_init_stats)
+from ._init_stats import INIT_STATS
+from .plan import AlltoallvPlan, AlltoallvSpec, PlanCache, VARIANTS, WarmStartError
 from .window import Window, WindowCache
 from . import autotune, baseline, breakeven, metadata, reference, variants
 
 __all__ = [
     "alltoallv_init", "global_plan_cache", "reset_global_plan_cache",
+    "init_stats", "reset_init_stats", "INIT_STATS",
     "AlltoallvPlan", "AlltoallvSpec", "PlanCache", "VARIANTS",
-    "Window", "WindowCache",
+    "WarmStartError", "Window", "WindowCache",
     "autotune", "baseline", "breakeven", "metadata", "reference", "variants",
 ]

@@ -1,0 +1,42 @@
+"""Process-wide INIT instrumentation.
+
+The paper's amortization argument is only auditable if the one-time costs
+are observable: these counters record, per process, how many INITs ran
+cold vs warm, how many host-side table bakes happened (``baked_index_tables``
+/ ``hier_two_stage_schedule`` — the expensive numpy loops), how many
+autotune measurement bursts executed, and how the plan store behaved.
+
+The warm-start contract asserted by tests and the CI smoke job is stated in
+these terms: *a second INIT of an identical pattern against a populated
+store performs zero autotune measurement bursts and zero table bakes.*
+
+Counters are cumulative per process; ``reset()`` zeroes them (tests and the
+``init_cost`` benchmark bracket measurements with it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class InitStats:
+    cold_inits: int = 0          # plans built by baking metadata on host
+    warm_inits: int = 0          # plans built from a store artifact
+    table_bakes: int = 0         # baked_index_tables / hier_two_stage_schedule runs
+    autotune_sweeps: int = 0     # variant="auto" measurement sweeps
+    autotune_bursts: int = 0     # timing bursts executed across all sweeps
+    store_hits: int = 0          # artifacts loaded and validated
+    store_misses: int = 0        # key not present on disk
+    store_puts: int = 0          # artifacts written
+    store_invalid: int = 0       # corrupt/mismatched entries treated as misses
+
+    def reset(self) -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, 0)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+INIT_STATS = InitStats()

@@ -47,10 +47,24 @@ from typing import Sequence
 import jax
 import numpy as np
 
+from ._init_stats import INIT_STATS
 from .plan import AlltoallvPlan, AlltoallvSpec, PlanCache
 from .window import WindowCache
 
 _GLOBAL_CACHE = PlanCache()
+
+
+def _resolve_store(store):
+    """None -> the process default (``repro.planstore.configure`` /
+    ``REPRO_PLANSTORE_DIR``), False -> explicitly disabled, anything else is
+    used as-is (duck-typed PlanStore)."""
+    if store is False:
+        return None
+    if store is not None:
+        return store
+    from repro import planstore
+
+    return planstore.default_store()
 
 
 def alltoallv_init(
@@ -66,6 +80,7 @@ def alltoallv_init(
     baked_metadata: bool = True,
     cache: PlanCache | None = None,
     autotune_iters: int = 12,
+    store=None,
 ) -> AlltoallvPlan:
     """Build (or fetch from cache) a persistent plan for a frozen pattern.
 
@@ -74,6 +89,13 @@ def alltoallv_init(
     variant and per-candidate timings land on ``plan.auto_choice``.
     ``baked_metadata=False`` reverts to in-graph index-map recomputation
     (the seed behavior) — kept for A/B benchmarking only.
+
+    ``store`` selects the persistent plan store (``repro.planstore``): None
+    uses the process default (opt-in via ``planstore.configure`` or
+    ``REPRO_PLANSTORE_DIR``), False disables it, or pass a ``PlanStore``.
+    With a populated store, INIT warm-starts: baked index tables, hierarchy
+    schedules, and ``variant="auto"`` decisions load from disk instead of
+    being re-baked/re-measured — observable via ``init_stats()``.
     """
     from . import metadata as md
 
@@ -98,11 +120,12 @@ def alltoallv_init(
         pack_impl=pack_impl,
         baked_metadata=baked_metadata,
     )
+    resolved_store = _resolve_store(store)
     if variant == "auto":
         from .autotune import autotune_variant
         return autotune_variant(spec, mesh, cache or _GLOBAL_CACHE,
-                                iters=autotune_iters)
-    return (cache or _GLOBAL_CACHE).get(spec, mesh)
+                                iters=autotune_iters, store=resolved_store)
+    return (cache or _GLOBAL_CACHE).get(spec, mesh, store=resolved_store)
 
 
 def global_plan_cache() -> PlanCache:
@@ -112,3 +135,14 @@ def global_plan_cache() -> PlanCache:
 def reset_global_plan_cache() -> None:
     global _GLOBAL_CACHE
     _GLOBAL_CACHE = PlanCache()
+
+
+def init_stats() -> dict:
+    """Snapshot of the process-wide INIT counters (see ``core._init_stats``):
+    cold vs warm INITs, table bakes, autotune measurement bursts, and plan-
+    store hit/miss/invalid/put counts."""
+    return INIT_STATS.as_dict()
+
+
+def reset_init_stats() -> None:
+    INIT_STATS.reset()

@@ -26,8 +26,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import compat
 from . import breakeven
 from . import metadata as md
+from ._init_stats import INIT_STATS
 from .plan import AlltoallvPlan, AlltoallvSpec, PlanCache
 
 
@@ -37,13 +39,18 @@ def candidate_variants(spec: AlltoallvSpec, mesh) -> list[str]:
     fence and lock always apply (over a 2-axis mesh they exchange on the
     linearized pair); the leader-combined hierarchy needs a genuine
     (outer, inner) factorization AND baked metadata (its two-stage tables
-    have no in-graph twins, so A/B mode excludes it).  ragged is excluded:
-    it only executes on real TPU and is opted into explicitly.
+    have no in-graph twins, so A/B mode excludes it).  ragged joins the set
+    only where it can actually run — ``lax.ragged_all_to_all`` exists in
+    this jax (``compat.HAS_RAGGED_ALL_TO_ALL``) and the backend can execute
+    it (XLA:TPU; CPU has no ragged emitter) — and only on a single-axis
+    exchange (the ragged spec takes one mesh axis).
     """
     cands = ["fence", "lock"]
     if (len(spec.axis) == 2 and int(mesh.shape[spec.axis[0]]) > 1
             and spec.baked_metadata):
         cands.append("fence_hierarchy")
+    if len(spec.axis) == 1 and compat.ragged_alltoall_executes():
+        cands.append("ragged")
     return cands
 
 
@@ -54,6 +61,7 @@ def autotune_variant(
     iters: int = 12,
     warmup: int = 2,
     bursts: int = 3,
+    store=None,
 ) -> AlltoallvPlan:
     """Measure every candidate for ``spec``'s pattern, return the winner.
 
@@ -61,6 +69,12 @@ def autotune_variant(
     other spec fields are forwarded to each candidate.  The measurement
     input is a zeros buffer — timing, not values, is under test, and a
     zeros epoch exercises the identical collective/gather program.
+
+    Decisions resolve through three tiers: the in-memory
+    ``cache.auto_choices`` (this process), then the plan ``store`` (a prior
+    process — the sweep was paid once per *deployment*, not per run), and
+    only then a fresh measurement sweep, whose verdict is published back to
+    both tiers.
     """
     sc = np.asarray(spec.send_counts)
     row_elems = int(np.prod(spec.feature_shape)) if spec.feature_shape else 1
@@ -72,17 +86,29 @@ def autotune_variant(
         axis_sizes=tuple(mesh.shape[a] for a in spec.axis))
 
     choice = cache.auto_choices.get(auto_sig)
+    if choice is None and store is not None:
+        choice = store.get_auto(auto_sig)
+        if choice is not None:
+            # A stored decision for a variant this host cannot build (e.g.
+            # ragged chosen on TPU, replayed on CPU) must not be trusted.
+            if choice.get("variant") in candidate_variants(spec, mesh):
+                cache.auto_choices[auto_sig] = choice
+            else:
+                choice = None
     if choice is not None:
-        plan = cache.get(_candidate_spec(spec, choice["variant"]), mesh)
+        plan = cache.get(_candidate_spec(spec, choice["variant"]), mesh,
+                         store=store)
         plan.auto_choice = choice
         return plan
 
     plans: dict[str, AlltoallvPlan] = {}
     for variant in candidate_variants(spec, mesh):
-        plan = cache.get(_candidate_spec(spec, variant), mesh)
+        plan = cache.get(_candidate_spec(spec, variant), mesh, store=store)
         plan.compile()
         plans[variant] = plan
 
+    INIT_STATS.autotune_sweeps += 1
+    INIT_STATS.autotune_bursts += bursts * len(plans)
     x = jax.device_put(
         jnp.zeros(next(iter(plans.values())).global_send_shape, spec.dtype),
         next(iter(plans.values()))._x_sharding)
@@ -98,6 +124,7 @@ def autotune_variant(
     ranked = sorted(times, key=times.get)
     if len(ranked) > 1 and times[ranked[1]] < 1.25 * times[ranked[0]]:
         finalists = {v: arms[v] for v in ranked[:2]}
+        INIT_STATS.autotune_bursts += max(bursts, 6) * len(finalists)
         refined = breakeven.measure_arms(
             finalists, iters=2 * iters, warmup=warmup, bursts=max(bursts, 6))
         for v, t in refined.items():
@@ -107,6 +134,11 @@ def autotune_variant(
     choice = {"variant": best,
               "times": {v: float(t) for v, t in times.items()}}
     cache.auto_choices[auto_sig] = choice
+    if store is not None:
+        try:
+            store.put_auto(auto_sig, choice)
+        except OSError:
+            pass                          # best-effort, same rule as put_plan
     plan = plans[best]
     plan.auto_choice = choice
     return plan
@@ -115,9 +147,10 @@ def autotune_variant(
 def _candidate_spec(spec: AlltoallvSpec, variant: str) -> AlltoallvSpec:
     kw = {}
     if spec.pack_impl == "fused" and (
-            variant == "lock"
+            variant in ("lock", "ragged")
             or (variant == "fence" and len(spec.axis) != 1)):
         # The fused kernel exists for the fence epoch (single axis) and the
-        # hierarchy leader stage; other candidates use the pallas gather.
+        # hierarchy leader stage; other candidates use the pallas gather
+        # (ragged bypasses pack entirely, but its spec must still validate).
         kw["pack_impl"] = "pallas"
     return dataclasses.replace(spec, variant=variant, **kw)

@@ -591,6 +591,9 @@ class PatternSignature:
     variant: str
     axis: tuple[str, ...]
     total_recv_bytes: int
+    # Mesh factorization, kept as an explicit field (not only inside the
+    # digest) so the plan store can key and validate entries on it.
+    axis_sizes: tuple[int, ...] = ()
 
     @staticmethod
     def build(
@@ -627,4 +630,5 @@ class PatternSignature:
             variant=variant,
             axis=tuple(axis),
             total_recv_bytes=int(c.sum()) * row_bytes,
+            axis_sizes=tuple(int(s) for s in axis_sizes),
         )

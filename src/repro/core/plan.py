@@ -42,9 +42,16 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from ..compat import shard_map
 from . import metadata as md
 from . import variants
+from ._init_stats import INIT_STATS
 from .window import Window, WindowCache
 
 VARIANTS = ("fence", "lock", "fence_hierarchy", "ragged")
+
+
+class WarmStartError(Exception):
+    """A store artifact does not fit the plan being built (shape or schedule
+    geometry mismatch).  ``PlanCache.get`` catches this and falls back to a
+    cold INIT — a defective warm artifact must never produce a wrong plan."""
 
 
 @dataclasses.dataclass(frozen=True, eq=False)  # eq=False: ndarray field
@@ -96,9 +103,15 @@ class AlltoallvPlan:
     """Persistent request object: metadata + window + compiled executable."""
 
     def __init__(self, spec: AlltoallvSpec, mesh: jax.sharding.Mesh,
-                 window_cache: WindowCache | None = None):
+                 window_cache: WindowCache | None = None, warm=None):
+        """``warm`` is an optional plan-store artifact (duck-typed: anything
+        with ``index_tables`` / ``hier_schedule`` attributes).  When it
+        carries the tables this spec needs, the expensive host-side bakes
+        are skipped and the artifact's tensors are uploaded instead; a
+        geometry mismatch raises WarmStartError (caller falls back cold)."""
         self.spec = spec
         self.mesh = mesh
+        self.warm_loaded = False
         t0 = time.perf_counter()
 
         sc = np.asarray(spec.send_counts, dtype=np.int64)
@@ -139,8 +152,23 @@ class AlltoallvPlan:
         # --- leader-combined two-stage schedule (hierarchy only) ---
         if spec.variant == "fence_hierarchy":
             self.p_outer, self.p_inner = axis_sizes
-            self.hier_schedule = md.hier_two_stage_schedule(
-                sc, self.p_outer, self.p_inner, self.recv_rows, spec.tile_rows)
+            warm_sched = getattr(warm, "hier_schedule", None)
+            if warm_sched is not None:
+                if (warm_sched.p_outer != self.p_outer
+                        or warm_sched.p_inner != self.p_inner
+                        or warm_sched.unpack_src.shape != (self.p, self.recv_rows)):
+                    raise WarmStartError(
+                        f"hier schedule geometry ({warm_sched.p_outer}x"
+                        f"{warm_sched.p_inner}, unpack {warm_sched.unpack_src.shape})"
+                        f" does not fit plan ({self.p_outer}x{self.p_inner},"
+                        f" recv_rows {self.recv_rows})")
+                self.hier_schedule = warm_sched
+                self.warm_loaded = True
+            else:
+                INIT_STATS.table_bakes += 1
+                self.hier_schedule = md.hier_two_stage_schedule(
+                    sc, self.p_outer, self.p_inner, self.recv_rows,
+                    spec.tile_rows)
             self.hierarchy_remote_needed = self.hier_schedule.remote_needed
             self.cross_group_puts = self.hier_schedule.cross_group_puts
         else:
@@ -188,7 +216,20 @@ class AlltoallvPlan:
                 jax.device_put(t, self._x_sharding)
                 for t in self.hier_schedule.tables)
         elif spec.baked_metadata and spec.variant != "ragged":
-            tables = md.baked_index_tables(sc, self.capacity, self.recv_rows)
+            warm_tables = getattr(warm, "index_tables", None)
+            if warm_tables is not None:
+                if (warm_tables.pack_src.shape != (self.p, self.p * self.capacity)
+                        or warm_tables.unpack_src.shape != (self.p, self.recv_rows)):
+                    raise WarmStartError(
+                        f"baked tables {warm_tables.pack_src.shape}/"
+                        f"{warm_tables.unpack_src.shape} do not fit plan "
+                        f"(P={self.p}, C={self.capacity}, "
+                        f"recv_rows={self.recv_rows})")
+                tables = warm_tables
+                self.warm_loaded = True
+            else:
+                INIT_STATS.table_bakes += 1
+                tables = md.baked_index_tables(sc, self.capacity, self.recv_rows)
             self.index_tables = tables
             # device_put straight from numpy: sharded host-to-device upload,
             # so no device ever holds more than its own O(P*C) row (a
@@ -207,6 +248,10 @@ class AlltoallvPlan:
         self.init_host_seconds = time.perf_counter() - t0
         self.init_compile_seconds = 0.0
         self.starts = 0
+        if self.warm_loaded:
+            INIT_STATS.warm_inits += 1
+        else:
+            INIT_STATS.cold_inits += 1
 
     # -- geometry ------------------------------------------------------------
     @property
@@ -378,6 +423,7 @@ class AlltoallvPlan:
             "window_generation": self.window.generation,
             "baked_metadata": self.spec.baked_metadata,
             "pack_impl": self.spec.pack_impl,
+            "warm_loaded": self.warm_loaded,
             "lock_rounds_active": self.lock_rounds_active,
             "lock_rounds_total": self.lock_rounds_total,
             "hierarchy_remote_needed": self.hierarchy_remote_needed,
@@ -401,7 +447,12 @@ class PlanCache:
         self.hits = 0
         self.misses = 0
 
-    def get(self, spec: AlltoallvSpec, mesh: jax.sharding.Mesh) -> AlltoallvPlan:
+    def get(self, spec: AlltoallvSpec, mesh: jax.sharding.Mesh,
+            store=None) -> AlltoallvPlan:
+        """Fetch-or-build.  ``store`` (a ``repro.planstore.PlanStore``, duck-
+        typed) is the disk tier behind this in-memory one: a miss here
+        consults it for a warm artifact before baking, and a cold build
+        publishes its artifacts back for the next process."""
         row_elems = int(np.prod(spec.feature_shape)) if spec.feature_shape else 1
         row_bytes = row_elems * jnp.dtype(spec.dtype).itemsize
         sig = md.PatternSignature.build(
@@ -415,7 +466,19 @@ class PlanCache:
             self.hits += 1
             return plan
         self.misses += 1
-        plan = AlltoallvPlan(spec, mesh, window_cache=self.window_cache)
+        warm = store.get(sig) if store is not None else None
+        try:
+            plan = AlltoallvPlan(spec, mesh, window_cache=self.window_cache,
+                                 warm=warm)
+        except WarmStartError:
+            # Stale-but-colliding artifact: cold INIT, never wrong tables.
+            INIT_STATS.store_invalid += 1
+            plan = AlltoallvPlan(spec, mesh, window_cache=self.window_cache)
+        if store is not None and not plan.warm_loaded:
+            try:
+                store.put_plan(sig, plan)
+            except OSError:
+                pass                      # full/read-only disk: store stays best-effort
         self._plans[sig] = plan
         return plan
 

@@ -19,6 +19,13 @@ def main(argv=None):
     p.add_argument("--max-seq", type=int, default=None)
     p.add_argument("--mesh", default="1,1")
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--plan-store", default=None, metavar="DIR",
+                   help="persistent plan-store directory, set as the process "
+                        "default (repro.planstore.configure): any "
+                        "alltoallv_init in this process warm-starts from "
+                        "artifacts of previous serving processes. NOTE: the "
+                        "built-in MoE dispatch currently exchanges in-graph "
+                        "and does not consult it (see ROADMAP)")
     args = p.parse_args(argv)
 
     import numpy as np
@@ -34,7 +41,8 @@ def main(argv=None):
     max_seq = args.max_seq or (args.prompt_len + args.tokens + 8)
 
     eng = ServeEngine(cfg, mesh, batch=args.batch, prompt_len=args.prompt_len,
-                      max_seq=max_seq, seed=args.seed)
+                      max_seq=max_seq, seed=args.seed,
+                      plan_store=args.plan_store)
     rng = np.random.default_rng(args.seed)
     prompts = rng.integers(0, cfg.vocab_size,
                            (args.batch, args.prompt_len)).astype(np.int32)

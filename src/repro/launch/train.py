@@ -39,10 +39,22 @@ def main(argv=None) -> dict:
     p.add_argument("--log-every", type=int, default=10)
     p.add_argument("--no-zero1", action="store_true")
     p.add_argument("--micro", type=int, default=1)
+    p.add_argument("--plan-store", default=None, metavar="DIR",
+                   help="persistent plan-store directory, set as the process "
+                        "default (repro.planstore.configure): any "
+                        "alltoallv_init in this process warm-starts from "
+                        "artifacts of previous runs. NOTE: the built-in MoE "
+                        "dispatch currently exchanges in-graph and does not "
+                        "consult it (see ROADMAP); custom persistent-plan "
+                        "dispatch paths do")
     args = p.parse_args(argv)
 
     logging.basicConfig(level=logging.INFO,
                         format="%(asctime)s %(name)s %(message)s")
+
+    if args.plan_store:
+        from repro import planstore
+        planstore.configure(args.plan_store)
 
     import dataclasses
 
@@ -82,6 +94,9 @@ def main(argv=None) -> dict:
         ckpt_every=args.ckpt_every, log_every=args.log_every))
     result = trainer.run()
     print("train finished:", result)
+    if args.plan_store:
+        from repro.core import init_stats
+        print("plan-store init stats:", init_stats())
     return result
 
 

@@ -1,0 +1,35 @@
+"""Persistent plan store: cross-process warm-start for INIT artifacts.
+
+The paper's INIT/EXECUTE split amortizes metadata cost over the iterations
+of one run; this package extends the amortization across *runs*.  A
+content-addressed on-disk store holds everything INIT computes that is
+expensive and pattern-frozen — baked pack/unpack index tables, two-stage
+hierarchy schedules, ``variant="auto"`` decisions, break-even fits — keyed
+on the ``PatternSignature`` digest plus schema/jax/repro versions and the
+mesh ``axis_sizes``.  A warm hit makes a second process's INIT skip the
+table bakes and the autotune measurement sweep entirely.
+
+    from repro.planstore import PlanStore
+    store = PlanStore("~/.cache/repro/planstore")
+    plan = alltoallv_init(counts, (256,), jnp.float32, mesh,
+                          axis=("o", "i"), variant="auto", store=store)
+
+or process-globally (what ``--plan-store`` launcher flags do):
+
+    from repro import planstore
+    planstore.configure("~/.cache/repro/planstore")
+
+CLI:  ``python -m repro.planstore {inspect,purge,warm-check} --dir DIR``
+"""
+
+from .schema import (ArtifactError, PlanArtifact, REPRO_VERSION,
+                     SCHEMA_VERSION, signature_meta, store_key)
+from .store import ENV_VAR, PlanStore, configure, default_store
+from . import codec, schema, store
+
+__all__ = [
+    "ArtifactError", "PlanArtifact", "PlanStore",
+    "REPRO_VERSION", "SCHEMA_VERSION", "ENV_VAR",
+    "codec", "configure", "default_store", "schema",
+    "signature_meta", "store", "store_key",
+]

@@ -1,0 +1,119 @@
+"""Plan-store CLI.
+
+    python -m repro.planstore inspect    --dir DIR
+    python -m repro.planstore purge      --dir DIR
+    python -m repro.planstore warm-check --dir DIR [--devices 8] [--assert-warm]
+
+``warm-check`` runs one ``variant="auto"`` INIT of a canonical skewed
+pattern on a grouped host-device mesh against the store and prints the
+``init_stats`` counters as JSON.  The first invocation against an empty
+directory is cold (it measures, bakes, and populates the store); any later
+invocation is warm.  ``--assert-warm`` turns the warm contract into an exit
+code: zero autotune measurement bursts and zero host-side table bakes, or
+failure — this is the CI warm-init smoke job.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _cmd_inspect(args) -> int:
+    from repro.planstore import PlanStore, codec
+
+    store = PlanStore(args.dir)
+    ents = store.entries()
+    rows = []
+    for e in ents:
+        try:
+            rows.append(dict(codec.load(e["path"]).summary(),
+                             key=e["key"], bytes=e["bytes"]))
+        except Exception as exc:
+            rows.append({"key": e["key"], "bytes": e["bytes"],
+                         "error": str(exc)})
+    print(json.dumps({"root": store.root, "entries": rows}, indent=2))
+    return 0
+
+
+def _cmd_purge(args) -> int:
+    from repro.planstore import PlanStore
+
+    n = PlanStore(args.dir).purge()
+    print(json.dumps({"removed": n}))
+    return 0
+
+
+def _warm_check_pattern(p: int):
+    """Canonical skewed pattern: dense-ish with one hot receiver — exercises
+    all three candidate variants (and their baked tables) meaningfully."""
+    import numpy as np
+
+    rng = np.random.default_rng(42)
+    counts = rng.integers(4, 24, size=(p, p)).astype(np.int64)
+    counts[:, 0] += 40          # receiver skew: lock's worst case
+    return counts
+
+
+def _cmd_warm_check(args) -> int:
+    # Device count must be pinned before jax initializes.
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={args.devices}")
+
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding  # noqa: F401  (jax init)
+
+    from repro.core import PlanCache, alltoallv_init, init_stats, reset_init_stats
+    from repro.launch.mesh import make_mesh
+    from repro.planstore import PlanStore
+
+    p = args.devices
+    if p % 2:
+        raise SystemExit("warm-check needs an even device count")
+    counts = _warm_check_pattern(p)
+    mesh = make_mesh((2, p // 2), ("o", "i"))
+    store = PlanStore(args.dir)
+
+    reset_init_stats()
+    plan = alltoallv_init(counts, (16,), jnp.float32, mesh, axis=("o", "i"),
+                          variant="auto", cache=PlanCache(), store=store,
+                          autotune_iters=args.iters)
+    stats = init_stats()
+    warm = stats["autotune_bursts"] == 0 and stats["table_bakes"] == 0
+    report = {
+        "warm": warm,
+        "chosen_variant": plan.spec.variant,
+        "auto_times": getattr(plan, "auto_choice", {}).get("times"),
+        "init_stats": stats,
+        "store": store.stats,
+    }
+    print(json.dumps(report, indent=2))
+    if args.assert_warm and not warm:
+        print("warm-check: expected a warm INIT (zero autotune bursts, zero "
+              "table bakes) but the store missed", file=sys.stderr)
+        return 1
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.planstore")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    for name, fn in (("inspect", _cmd_inspect), ("purge", _cmd_purge),
+                     ("warm-check", _cmd_warm_check)):
+        sp = sub.add_parser(name)
+        sp.add_argument("--dir", required=True, help="store directory")
+        sp.set_defaults(fn=fn)
+        if name == "warm-check":
+            sp.add_argument("--devices", type=int, default=8)
+            sp.add_argument("--iters", type=int, default=6,
+                            help="autotune iterations when cold")
+            sp.add_argument("--assert-warm", action="store_true")
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

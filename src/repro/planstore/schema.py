@@ -1,0 +1,202 @@
+"""Versioned schema for persisted INIT artifacts.
+
+One store entry = one ``PatternSignature`` worth of INIT output:
+
+  * the host-baked pack/unpack index tables (``metadata.BakedIndexTables``)
+    for the fence/lock variants,
+  * the leader-combined two-stage schedule (``metadata.HierSchedule``) for
+    ``fence_hierarchy`` — scalars, round permutations, and all eight gather
+    tables,
+  * a ``variant="auto"`` decision (winner + per-candidate timings),
+  * an optional break-even fit (Eq. 1-3 terms measured for the pattern).
+
+Entries are content-addressed: the store key hashes the signature digest
+(which already covers the counts matrix and every spec field that changes
+the compiled program) together with every environment component that could
+silently invalidate baked tables or measured decisions — ``SCHEMA_VERSION``,
+the jax version, the repro package version, the XLA backend (timings from a
+CPU process must never pin a variant for a TPU process sharing the store,
+or vice versa), and the mesh ``axis_sizes``.  Any of those changing
+yields a different key, so a stale artifact is simply never found; the
+loader additionally re-validates the same fields from the entry's own
+metadata (defense against hand-copied or corrupted files) and treats any
+mismatch as a miss.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from typing import Any
+
+import numpy as np
+
+from repro._version import __version__ as REPRO_VERSION
+from repro.core import metadata as md
+
+SCHEMA_VERSION = 1
+
+
+class ArtifactError(Exception):
+    """An on-disk entry cannot be trusted: corrupt, truncated, or written
+    under a different schema/jax/repro version or mesh factorization.  The
+    store converts this into a cache miss — a cold INIT — never a crash."""
+
+
+def jax_version() -> str:
+    import jax
+
+    return jax.__version__
+
+
+def backend_name() -> str:
+    """The active XLA backend ("cpu"/"tpu"/...).  Part of the store key:
+    autotune decisions and timings measured on one backend must never be
+    trusted — or overwritten — by processes running on another."""
+    import jax
+
+    return jax.default_backend()
+
+
+def store_key(
+    sig: "md.PatternSignature",
+    *,
+    jax_ver: str | None = None,
+    repro_ver: str | None = None,
+    backend: str | None = None,
+) -> str:
+    """Content address of one signature under the current environment."""
+    h = hashlib.sha256()
+    h.update(sig.digest.encode())
+    h.update(str((
+        SCHEMA_VERSION,
+        jax_ver if jax_ver is not None else jax_version(),
+        repro_ver if repro_ver is not None else REPRO_VERSION,
+        backend if backend is not None else backend_name(),
+        tuple(int(s) for s in sig.axis_sizes),
+        sig.variant,
+        sig.p,
+    )).encode())
+    # The digest prefix keeps filenames greppable by pattern; the sha256
+    # suffix carries the environment key components.
+    return f"{sig.digest}-{h.hexdigest()[:24]}"
+
+
+def signature_meta(sig: "md.PatternSignature") -> dict:
+    """JSON-serializable echo of the signature, stored for validation."""
+    return {
+        "digest": sig.digest,
+        "p": sig.p,
+        "feature_shape": list(sig.feature_shape),
+        "dtype": sig.dtype,
+        "variant": sig.variant,
+        "axis": list(sig.axis),
+        "total_recv_bytes": sig.total_recv_bytes,
+        "axis_sizes": [int(s) for s in sig.axis_sizes],
+    }
+
+
+@dataclasses.dataclass
+class PlanArtifact:
+    """Decoded store entry (see module docstring for the payload kinds)."""
+
+    signature: dict                                   # signature_meta() echo
+    schema_version: int = SCHEMA_VERSION
+    jax_version: str = ""
+    repro_version: str = REPRO_VERSION
+    backend: str = ""
+    created_at: float = 0.0
+    index_tables: "md.BakedIndexTables | None" = None
+    hier_schedule: "md.HierSchedule | None" = None
+    auto_choice: dict | None = None                   # {"variant", "times"}
+    breakeven: dict | None = None                     # Eq. 1-3 fit terms
+
+    def __post_init__(self):
+        if not self.jax_version:
+            self.jax_version = jax_version()
+        if not self.backend:
+            self.backend = backend_name()
+        if not self.created_at:
+            self.created_at = time.time()
+
+    @property
+    def payload_kind(self) -> str:
+        if self.hier_schedule is not None:
+            return "hier_schedule"
+        if self.index_tables is not None:
+            return "baked_tables"
+        return "meta_only"
+
+    @classmethod
+    def from_plan(cls, sig: "md.PatternSignature", plan: Any) -> "PlanArtifact":
+        return cls(
+            signature=signature_meta(sig),
+            index_tables=getattr(plan, "index_tables", None),
+            hier_schedule=getattr(plan, "hier_schedule", None),
+        )
+
+    @classmethod
+    def for_auto(cls, sig: "md.PatternSignature", choice: dict) -> "PlanArtifact":
+        return cls(signature=signature_meta(sig), auto_choice=dict(choice))
+
+    def validate_against(
+        self,
+        sig: "md.PatternSignature",
+        *,
+        jax_ver: str | None = None,
+        repro_ver: str | None = None,
+        backend: str | None = None,
+    ) -> None:
+        """Raise ArtifactError on any key-component mismatch.
+
+        The content address normally makes a mismatch unreachable; this
+        check catches entries copied between store directories, partial
+        writes that survived, and deliberate tampering in tests.
+        """
+        want_jax = jax_ver if jax_ver is not None else jax_version()
+        want_repro = repro_ver if repro_ver is not None else REPRO_VERSION
+        want_backend = backend if backend is not None else backend_name()
+        if self.schema_version != SCHEMA_VERSION:
+            raise ArtifactError(
+                f"schema_version {self.schema_version} != {SCHEMA_VERSION}")
+        if self.jax_version != want_jax:
+            raise ArtifactError(
+                f"jax version {self.jax_version!r} != {want_jax!r}")
+        if self.repro_version != want_repro:
+            raise ArtifactError(
+                f"repro version {self.repro_version!r} != {want_repro!r}")
+        if self.backend != want_backend:
+            raise ArtifactError(
+                f"backend {self.backend!r} != {want_backend!r}")
+        want = signature_meta(sig)
+        got = dict(self.signature)
+        if got != want:
+            raise ArtifactError(f"signature mismatch: {got} != {want}")
+
+    def summary(self) -> dict:
+        return {
+            "digest": self.signature.get("digest"),
+            "variant": self.signature.get("variant"),
+            "p": self.signature.get("p"),
+            "axis_sizes": self.signature.get("axis_sizes"),
+            "payload": self.payload_kind,
+            "auto_choice": (self.auto_choice or {}).get("variant"),
+            "has_breakeven": self.breakeven is not None,
+            "jax_version": self.jax_version,
+            "repro_version": self.repro_version,
+            "backend": self.backend,
+            "schema_version": self.schema_version,
+            "created_at": self.created_at,
+        }
+
+
+def tables_nbytes(art: PlanArtifact) -> int:
+    n = 0
+    if art.index_tables is not None:
+        t = art.index_tables
+        n += sum(np.asarray(a).nbytes for a in
+                 (t.pack_src, t.pack_valid, t.unpack_src, t.unpack_valid))
+    if art.hier_schedule is not None:
+        n += sum(t.nbytes for t in art.hier_schedule.tables)
+    return n

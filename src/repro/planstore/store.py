@@ -1,0 +1,262 @@
+"""On-disk plan store: the second tier behind the in-memory ``PlanCache``.
+
+Design constraints (the serving deployment this exists for):
+
+  * **Concurrent multi-process safety.**  Writers stage each entry in a
+    uniquely named temp file in the store directory and publish it with
+    ``os.replace`` — readers either see the old complete file, the new
+    complete file, or nothing; never a torn write.  Readers keep working on
+    an entry that eviction unlinks underneath them (POSIX fd semantics).
+  * **Corruption is a miss, never a crash.**  Any load failure — truncated
+    entry, garbage bytes, schema/jax/repro/backend or signature mismatch —
+    increments ``store_invalid``, removes the bad entry (best effort), and
+    returns ``None`` so INIT falls back to the cold bake path.  An entry
+    that simply vanished between the existence check and the load (another
+    process's eviction) counts as a plain miss.
+  * **Bounded size.**  LRU by file mtime: reads touch the entry, puts evict
+    the oldest entries beyond ``max_entries`` / ``max_bytes``.
+
+The default store is process-global and opt-in: ``configure(path)`` (wired
+to the ``--plan-store`` launcher flags) or the ``REPRO_PLANSTORE_DIR``
+environment variable.  When neither is set, ``default_store()`` is None and
+every INIT is cold — exactly the pre-planstore behavior.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+import uuid
+from typing import Any
+
+from repro.core import metadata as md
+from repro.core._init_stats import INIT_STATS
+
+from . import codec
+from .schema import (REPRO_VERSION, ArtifactError, PlanArtifact, backend_name,
+                     jax_version, signature_meta, store_key)
+
+# Entries use the RPRPLAN1 flat container from ``codec`` (NOT npz/zip).
+_ENTRY_SUFFIX = ".plan"
+_TMP_PREFIX = "tmp-"
+
+
+class PlanStore:
+    """Content-addressed directory of INIT artifacts (one ``.plan`` file
+    each, in the ``codec`` flat-container format)."""
+
+    def __init__(
+        self,
+        root: str | os.PathLike,
+        max_entries: int = 256,
+        max_bytes: int = 1 << 30,
+        jax_ver: str | None = None,
+        repro_ver: str | None = None,
+        backend: str | None = None,
+    ):
+        self.root = os.path.abspath(os.path.expanduser(os.fspath(root)))
+        os.makedirs(self.root, exist_ok=True)
+        self.max_entries = int(max_entries)
+        self.max_bytes = int(max_bytes)
+        # Overridable for tests (simulate a store written by another
+        # jax/repro build or backend); production code leaves these at the
+        # live values.
+        self.jax_ver = jax_ver if jax_ver is not None else jax_version()
+        self.repro_ver = repro_ver if repro_ver is not None else REPRO_VERSION
+        self.backend = backend if backend is not None else backend_name()
+        self.hits = 0
+        self.misses = 0
+        self.puts = 0
+        self.invalid = 0
+        self.evictions = 0
+
+    # -- addressing ---------------------------------------------------------
+    def path_for(self, sig: "md.PatternSignature") -> str:
+        key = store_key(sig, jax_ver=self.jax_ver, repro_ver=self.repro_ver,
+                        backend=self.backend)
+        return os.path.join(self.root, key + _ENTRY_SUFFIX)
+
+    # -- read side ----------------------------------------------------------
+    def get(self, sig: "md.PatternSignature") -> PlanArtifact | None:
+        """Load + validate the entry for ``sig``; None on miss or any defect."""
+        path = self.path_for(sig)
+        if not os.path.exists(path):
+            self.misses += 1
+            INIT_STATS.store_misses += 1
+            return None
+        try:
+            art = codec.load(path)
+            art.validate_against(sig, jax_ver=self.jax_ver,
+                                 repro_ver=self.repro_ver,
+                                 backend=self.backend)
+        except ArtifactError:
+            if not os.path.exists(path):
+                # Vanished underneath us (another process's eviction): a
+                # plain miss, not corruption.
+                self.misses += 1
+                INIT_STATS.store_misses += 1
+                return None
+            self.invalid += 1
+            INIT_STATS.store_invalid += 1
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+            return None
+        try:
+            os.utime(path)            # LRU touch
+        except OSError:
+            pass
+        self.hits += 1
+        INIT_STATS.store_hits += 1
+        return art
+
+    def get_auto(self, sig: "md.PatternSignature") -> dict | None:
+        art = self.get(sig)
+        return art.auto_choice if art is not None else None
+
+    # -- write side ---------------------------------------------------------
+    def put_artifact(self, sig: "md.PatternSignature",
+                     art: PlanArtifact) -> str:
+        """Atomically publish ``art`` under ``sig``'s key; returns the path."""
+        # Stamp the store's environment notion so key and metadata always
+        # agree (matters when jax_ver/repro_ver/backend are overridden in
+        # tests).
+        art.jax_version = self.jax_ver
+        art.repro_version = self.repro_ver
+        art.backend = self.backend
+        path = self.path_for(sig)
+        tmp = os.path.join(
+            self.root, f"{_TMP_PREFIX}{os.getpid()}-{uuid.uuid4().hex}{_ENTRY_SUFFIX}")
+        try:
+            with open(tmp, "wb") as f:
+                codec.dump(art, f)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                try:
+                    os.remove(tmp)
+                except OSError:
+                    pass
+        self.puts += 1
+        INIT_STATS.store_puts += 1
+        self._evict()
+        return path
+
+    def put_plan(self, sig: "md.PatternSignature", plan: Any) -> str | None:
+        """Persist a cold-built plan's baked artifacts (no-op when the plan
+        carries nothing reusable, e.g. ragged or in-graph A/B mode)."""
+        art = PlanArtifact.from_plan(sig, plan)
+        if art.payload_kind == "meta_only":
+            return None
+        return self.put_artifact(sig, art)
+
+    def put_auto(self, sig: "md.PatternSignature", choice: dict) -> str:
+        return self.put_artifact(sig, PlanArtifact.for_auto(sig, choice))
+
+    def attach_breakeven(self, sig: "md.PatternSignature", fit: dict) -> str:
+        """Merge an Eq. 1-3 fit into the pattern's entry; creates a
+        metadata-only entry when none exists.
+
+        Only the final publish is atomic — the read-modify-write as a whole
+        is last-writer-wins, so call this from the process that just built
+        the plan (the ``breakeven_model`` benchmark does), not concurrently
+        with another process's cold INIT of the same pattern."""
+        art = self.get(sig)
+        if art is None:
+            art = PlanArtifact(signature=signature_meta(sig))
+        art.breakeven = {k: float(v) for k, v in fit.items()}
+        return self.put_artifact(sig, art)
+
+    # -- maintenance --------------------------------------------------------
+    def entries(self) -> list[dict]:
+        out = []
+        for name in sorted(os.listdir(self.root)):
+            if not name.endswith(_ENTRY_SUFFIX) or name.startswith(_TMP_PREFIX):
+                continue
+            path = os.path.join(self.root, name)
+            try:
+                st = os.stat(path)
+            except OSError:
+                continue
+            out.append({"key": name[:-len(_ENTRY_SUFFIX)], "path": path,
+                        "bytes": st.st_size, "mtime": st.st_mtime})
+        return out
+
+    def purge(self) -> int:
+        n = 0
+        for e in self.entries():
+            try:
+                os.remove(e["path"])
+                n += 1
+            except OSError:
+                pass
+        return n
+
+    def _evict(self) -> None:
+        self._sweep_stale_tmp()
+        ents = sorted(self.entries(), key=lambda e: e["mtime"])
+        total = sum(e["bytes"] for e in ents)
+        while ents and (len(ents) > self.max_entries or total > self.max_bytes):
+            victim = ents.pop(0)
+            try:
+                os.remove(victim["path"])
+                self.evictions += 1
+            except OSError:
+                pass
+            total -= victim["bytes"]
+
+    def _sweep_stale_tmp(self, max_age_seconds: float = 600.0) -> None:
+        """Remove staging files left by writers that died between open and
+        publish (SIGKILL/OOM skips put_artifact's cleanup).  Age-gated so a
+        live writer's in-flight tmp file is never yanked away."""
+        cutoff = time.time() - max_age_seconds
+        for name in os.listdir(self.root):
+            if not name.startswith(_TMP_PREFIX):
+                continue
+            path = os.path.join(self.root, name)
+            try:
+                if os.stat(path).st_mtime < cutoff:
+                    os.remove(path)
+            except OSError:
+                pass
+
+    @property
+    def stats(self) -> dict:
+        return {"root": self.root, "hits": self.hits, "misses": self.misses,
+                "puts": self.puts, "invalid": self.invalid,
+                "evictions": self.evictions, "entries": len(self.entries())}
+
+
+# --- process-global default store (opt-in) ---------------------------------
+
+ENV_VAR = "REPRO_PLANSTORE_DIR"
+
+_default: PlanStore | None = None
+_configured = False
+
+
+def configure(root: "str | os.PathLike | PlanStore | None", **kw) -> PlanStore | None:
+    """Set the process default store (None disables).  Accepts a directory
+    path or an existing PlanStore.  Launcher ``--plan-store`` flags and
+    ``ServeEngine(plan_store=...)`` land here."""
+    global _default, _configured
+    _configured = True
+    if root is None:
+        _default = None
+    elif isinstance(root, PlanStore):
+        _default = root
+    else:
+        _default = PlanStore(root, **kw)
+    return _default
+
+
+def default_store() -> PlanStore | None:
+    """The configured default store, else one bootstrapped from
+    ``REPRO_PLANSTORE_DIR``, else None (warm-start disabled)."""
+    global _default, _configured
+    if not _configured:
+        _configured = True
+        root = os.environ.get(ENV_VAR)
+        _default = PlanStore(root) if root else None
+    return _default

@@ -31,11 +31,26 @@ class ServeEngine:
     """Prefill+decode for decoder-only and enc-dec families."""
 
     def __init__(self, cfg: ModelConfig, mesh, batch: int, prompt_len: int,
-                 max_seq: int, params=None, seed: int = 0):
+                 max_seq: int, params=None, seed: int = 0, plan_store=None):
+        """``plan_store`` (a directory path or ``repro.planstore.PlanStore``)
+        becomes the PROCESS-default plan store (a deliberate global side
+        effect — it outlives this engine and is seen by every subsequent
+        ``alltoallv_init``, including other engines constructed with
+        ``plan_store=None``; pass ``store=`` explicitly at call sites that
+        must not share it).  With it set, any persistent-plan dispatch path
+        in this process warm-starts from artifacts of previous serving
+        replicas: autotune sweeps and table bakes are skipped.  The
+        built-in MoE dispatch currently exchanges in-graph and does not
+        consult the store (see ROADMAP)."""
         self.cfg = cfg
         self.mesh = mesh
         self.batch = batch
         self.max_seq = max_seq
+        if plan_store is not None:
+            from repro import planstore
+            self.plan_store = planstore.configure(plan_store)
+        else:
+            self.plan_store = None
         shape_p = ShapeConfig("serve_prefill", "prefill", prompt_len, batch)
         shape_d = ShapeConfig("serve_decode", "decode", max_seq, batch)
         self.prefill_bundle = steps_mod.make_prefill_bundle(cfg, shape_p, mesh)

@@ -52,6 +52,14 @@ def test_auto_variant_dispatch(dist):
     dist("auto_variant_dispatch", devices=8)
 
 
+def test_auto_ragged_candidate(dist):
+    dist("auto_ragged_candidate", devices=8)
+
+
+def test_planstore_warm_start(dist):
+    dist("planstore_warm_start", devices=8)
+
+
 def test_gspmd_gather_miscompile_guard(dist):
     dist("gspmd_gather_miscompile_guard", devices=8)
 

@@ -1,0 +1,335 @@
+"""Plan-store unit tests: codec round-trips, corruption handling, version
+invalidation, LRU eviction.
+
+Everything here is host-side (numpy + files); the multi-device warm-start
+identity checks live in test_distributed.py (planstore_warm_start).
+"""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, strategies as st
+from repro.core import metadata as md
+from repro.planstore import (ArtifactError, PlanArtifact, PlanStore,
+                             SCHEMA_VERSION, codec, signature_meta, store_key)
+
+counts_matrices = st.integers(2, 10).flatmap(
+    lambda p: st.lists(
+        st.lists(st.integers(0, 50), min_size=p, max_size=p),
+        min_size=p, max_size=p).map(np.array))
+
+hier_counts = st.integers(1, 4).flatmap(
+    lambda p_inner: st.lists(
+        st.lists(st.integers(0, 30), min_size=2 * p_inner, max_size=2 * p_inner),
+        min_size=2 * p_inner, max_size=2 * p_inner).map(
+            lambda rows: (np.array(rows), p_inner)))
+
+
+def _sig(counts, variant="fence", axis=("x",), axis_sizes=None, **kw):
+    p = counts.shape[0]
+    return md.PatternSignature.build(
+        counts, (4,), "float32", variant, axis, 16,
+        axis_sizes=axis_sizes if axis_sizes is not None else (p,), **kw)
+
+
+def _baked_artifact(counts):
+    cap = md.global_capacity(counts)
+    recv_rows = max(md.round_up(md.max_total_recv(counts), 8), 8)
+    tables = md.baked_index_tables(counts, cap, recv_rows)
+    sig = _sig(counts)
+    return sig, PlanArtifact(signature=signature_meta(sig),
+                             index_tables=tables), tables
+
+
+@given(counts_matrices)
+def test_baked_tables_roundtrip(counts):
+    """signature -> save -> load under a fresh store handle -> identical
+    plan tensors, bit for bit."""
+    sig, art, tables = _baked_artifact(counts)
+    with tempfile.TemporaryDirectory() as d:
+        PlanStore(d).put_artifact(sig, art)
+        got = PlanStore(d).get(sig)
+        assert got is not None and got.payload_kind == "baked_tables"
+        for name in ("pack_src", "pack_valid", "unpack_src", "unpack_valid"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(got.index_tables, name)),
+                getattr(tables, name))
+
+
+@given(hier_counts)
+def test_hier_schedule_roundtrip(counts_and_inner):
+    counts, p_inner = counts_and_inner
+    p = counts.shape[0]
+    recv_rows = max(md.round_up(md.max_total_recv(counts), 8), 8)
+    sched = md.hier_two_stage_schedule(counts, 2, p_inner, recv_rows)
+    sig = _sig(counts, variant="fence_hierarchy", axis=("o", "i"),
+               axis_sizes=(2, p_inner))
+    art = PlanArtifact(signature=signature_meta(sig), hier_schedule=sched)
+    with tempfile.TemporaryDirectory() as d:
+        PlanStore(d).put_artifact(sig, art)
+        got = PlanStore(d).get(sig).hier_schedule
+        assert (got.p_outer, got.p_inner, got.n_macro, got.remote_needed,
+                got.s1_cap, got.s2_caps, got.s2_offs, got.total_s2,
+                got.s3_cap, got.round_perms, got.cross_group_puts) == (
+            sched.p_outer, sched.p_inner, sched.n_macro, sched.remote_needed,
+            sched.s1_cap, sched.s2_caps, sched.s2_offs, sched.total_s2,
+            sched.s3_cap, sched.round_perms, sched.cross_group_puts)
+        for a, b in zip(got.tables, sched.tables):
+            np.testing.assert_array_equal(np.asarray(a), b)
+        assert p == got.unpack_src.shape[0]
+
+
+def test_auto_choice_roundtrip():
+    counts = np.full((4, 4), 3)
+    sig = _sig(counts, variant="auto")
+    choice = {"variant": "lock", "times": {"fence": 1e-4, "lock": 5e-5}}
+    with tempfile.TemporaryDirectory() as d:
+        PlanStore(d).put_auto(sig, choice)
+        assert PlanStore(d).get_auto(sig) == choice
+
+
+def test_truncated_entry_is_miss_not_crash():
+    counts = np.full((4, 4), 7)
+    sig, art, _ = _baked_artifact(counts)
+    with tempfile.TemporaryDirectory() as d:
+        path = PlanStore(d).put_artifact(sig, art)
+        with open(path, "r+b") as f:
+            f.truncate(os.path.getsize(path) // 2)
+        store = PlanStore(d)
+        assert store.get(sig) is None
+        assert store.invalid == 1
+        assert not os.path.exists(path)        # bad entry removed
+        # and the slot is reusable: a fresh put round-trips again
+        store.put_artifact(sig, art)
+        assert store.get(sig) is not None
+
+
+def test_garbage_entry_is_miss_not_crash():
+    counts = np.full((4, 4), 5)
+    sig, art, _ = _baked_artifact(counts)
+    with tempfile.TemporaryDirectory() as d:
+        store = PlanStore(d)
+        with open(store.path_for(sig), "wb") as f:
+            f.write(os.urandom(512))
+        assert store.get(sig) is None and store.invalid == 1
+
+
+def test_jax_version_mismatch_falls_back_cold():
+    """An entry written under another jax version is keyed differently, so
+    the live store simply misses (cold INIT) — stale tables never load."""
+    counts = np.full((4, 4), 9)
+    sig, art, _ = _baked_artifact(counts)
+    with tempfile.TemporaryDirectory() as d:
+        other = PlanStore(d, jax_ver="9.9.9")
+        other.put_artifact(sig, art)
+        live = PlanStore(d)
+        assert live.path_for(sig) != other.path_for(sig)
+        assert live.get(sig) is None and live.misses == 1
+        # other-version store still finds its own entry
+        assert PlanStore(d, jax_ver="9.9.9").get(sig) is not None
+
+
+@pytest.mark.parametrize("field", ["jax", "repro", "schema"])
+def test_tampered_entry_fails_meta_validation(field):
+    """Key collisions cannot happen through the API, but a hand-copied file
+    at the right path must still be rejected by metadata validation."""
+    counts = np.full((4, 4), 4)
+    sig, art, _ = _baked_artifact(counts)
+    if field == "jax":
+        art.jax_version = "9.9.9"
+    elif field == "repro":
+        art.repro_version = "0.0.0-other"
+    else:
+        art.schema_version = SCHEMA_VERSION + 1
+    with tempfile.TemporaryDirectory() as d:
+        store = PlanStore(d)
+        with open(store.path_for(sig), "wb") as f:   # bypass put_artifact
+            codec.dump(art, f)
+        assert store.get(sig) is None and store.invalid == 1
+
+
+def test_backend_mismatch_falls_back_cold():
+    """Auto decisions measured on one backend must not be served to another
+    (CPU timings would pin the wrong variant for a TPU process)."""
+    counts = np.full((4, 4), 9)
+    sig = _sig(counts, variant="auto")
+    choice = {"variant": "ragged", "times": {"ragged": 1e-5}}
+    with tempfile.TemporaryDirectory() as d:
+        tpu_store = PlanStore(d, backend="tpu")
+        tpu_store.put_auto(sig, choice)
+        live = PlanStore(d)                     # cpu on this host
+        assert live.path_for(sig) != tpu_store.path_for(sig)
+        assert live.get_auto(sig) is None
+        # and each backend's store keeps its own decision intact
+        assert PlanStore(d, backend="tpu").get_auto(sig) == choice
+
+
+def test_axis_sizes_mismatch_is_a_different_key():
+    counts = np.full((8, 8), 3)
+    s24 = _sig(counts, variant="fence_hierarchy", axis=("o", "i"),
+               axis_sizes=(2, 4))
+    s42 = _sig(counts, variant="fence_hierarchy", axis=("o", "i"),
+               axis_sizes=(4, 2))
+    assert store_key(s24) != store_key(s42)
+    with tempfile.TemporaryDirectory() as d:
+        recv_rows = max(md.round_up(md.max_total_recv(counts), 8), 8)
+        sched = md.hier_two_stage_schedule(counts, 2, 4, recv_rows)
+        PlanStore(d).put_artifact(
+            s24, PlanArtifact(signature=signature_meta(s24),
+                              hier_schedule=sched))
+        store = PlanStore(d)
+        assert store.get(s42) is None          # (4,2) never sees (2,4) tables
+        assert store.get(s24) is not None
+
+
+def test_signature_tamper_rejected():
+    """Same file renamed under another signature's key: the signature echo
+    in the metadata does not match and validation treats it as a miss."""
+    a = np.full((4, 4), 3)
+    b = np.full((4, 4), 8)
+    sig_a, art_a, _ = _baked_artifact(a)
+    sig_b = _sig(b)
+    with tempfile.TemporaryDirectory() as d:
+        store = PlanStore(d)
+        src = store.put_artifact(sig_a, art_a)
+        os.replace(src, store.path_for(sig_b))
+        assert store.get(sig_b) is None and store.invalid == 1
+
+
+def test_lru_eviction_bounds_entries():
+    with tempfile.TemporaryDirectory() as d:
+        store = PlanStore(d, max_entries=3)
+        sigs = []
+        for i in range(5):
+            counts = np.full((4, 4), i + 1)
+            sig, art, _ = _baked_artifact(counts)
+            sigs.append(sig)
+            store.put_artifact(sig, art)
+            # distinct mtimes even on coarse-clock filesystems
+            os.utime(store.path_for(sig), (i, i))
+        assert len(store.entries()) <= 3
+        assert store.get(sigs[0]) is None      # oldest evicted
+        assert store.get(sigs[-1]) is not None  # newest kept
+
+
+def test_stale_tmp_files_swept_on_put():
+    """Staging files orphaned by killed writers get cleaned up by later
+    puts; a fresh (in-flight) tmp file is left alone."""
+    counts = np.full((4, 4), 6)
+    sig, art, _ = _baked_artifact(counts)
+    with tempfile.TemporaryDirectory() as d:
+        store = PlanStore(d)
+        stale = os.path.join(d, "tmp-999-deadbeef.plan")
+        fresh = os.path.join(d, "tmp-999-cafef00d.plan")
+        for p in (stale, fresh):
+            with open(p, "wb") as f:
+                f.write(b"partial write")
+        os.utime(stale, (0, 0))                 # ancient
+        store.put_artifact(sig, art)            # triggers the sweep
+        assert not os.path.exists(stale)
+        assert os.path.exists(fresh)
+
+
+def test_attach_breakeven_merges_into_entry():
+    counts = np.full((4, 4), 6)
+    sig, art, _ = _baked_artifact(counts)
+    with tempfile.TemporaryDirectory() as d:
+        store = PlanStore(d)
+        store.put_artifact(sig, art)
+        store.attach_breakeven(sig, {"t_init": 1e-3, "t_persist": 2e-5,
+                                     "t_mpi": 5e-5, "n_breakeven": 34})
+        got = store.get(sig)
+        assert got.breakeven["n_breakeven"] == 34
+        assert got.index_tables is not None    # tables survived the merge
+
+
+def test_dumps_loads_bytes_roundtrip():
+    counts = np.full((4, 4), 2)
+    _, art, tables = _baked_artifact(counts)
+    got = codec.loads(codec.dumps(art))
+    np.testing.assert_array_equal(got.index_tables.pack_src, tables.pack_src)
+
+
+def test_empty_and_meta_only_artifacts():
+    counts = np.zeros((4, 4), np.int64)
+    sig = _sig(counts, variant="auto")
+    art = PlanArtifact(signature=signature_meta(sig),
+                       auto_choice={"variant": "fence", "times": {}})
+    assert art.payload_kind == "meta_only"
+    with tempfile.TemporaryDirectory() as d:
+        PlanStore(d).put_artifact(sig, art)
+        got = PlanStore(d).get(sig)
+        assert got.index_tables is None and got.hier_schedule is None
+
+
+def _hammer_store(args):
+    """Worker for the concurrency test: alternate puts and gets of the same
+    entry; return how many valid loads and how many misses were observed."""
+    root, seed, rounds = args
+    rng = np.random.default_rng(seed)
+    counts = np.full((4, 4), 11)           # same signature for every worker
+    sig, art, tables = _baked_artifact(counts)
+    store = PlanStore(root)
+    loads = misses = 0
+    for _ in range(rounds):
+        if rng.random() < 0.5:
+            store.put_artifact(sig, art)
+        got = store.get(sig)
+        if got is None:
+            misses += 1
+        else:
+            loads += 1
+            np.testing.assert_array_equal(
+                np.asarray(got.index_tables.pack_src), tables.pack_src)
+    return loads, misses
+
+
+def test_concurrent_writers_never_corrupt():
+    """Many processes hammering one key: every successful read decodes to
+    the exact tables (torn writes would fail decode; decode failures would
+    delete the entry and show up as misses after the first put)."""
+    import multiprocessing as mp
+
+    with tempfile.TemporaryDirectory() as d:
+        with mp.get_context("spawn").Pool(4) as pool:
+            results = pool.map(_hammer_store,
+                               [(d, seed, 20) for seed in range(4)])
+        total_loads = sum(r[0] for r in results)
+        assert total_loads > 0
+        # the entry left behind is itself valid
+        counts = np.full((4, 4), 11)
+        sig, _, tables = _baked_artifact(counts)
+        final = PlanStore(d).get(sig)
+        assert final is not None
+        np.testing.assert_array_equal(
+            np.asarray(final.index_tables.pack_src), tables.pack_src)
+
+
+def test_plan_cache_warm_integration_single_device():
+    """Two-tier integration without multi-device: a 1-rank plan cold-builds
+    and publishes; a fresh cache + fresh store handle warm-loads the same
+    tensors with zero bakes (the full-mesh version is the dist case)."""
+    import jax.numpy as jnp
+
+    from repro.core import INIT_STATS, AlltoallvSpec, PlanCache
+    from repro.launch.mesh import make_host_mesh
+
+    counts = np.array([[24]])
+    mesh = make_host_mesh(1)
+    spec = AlltoallvSpec(send_counts=counts, feature_shape=(4,),
+                         dtype=jnp.float32, axis=("x",))
+    with tempfile.TemporaryDirectory() as d:
+        INIT_STATS.reset()
+        plan = PlanCache().get(spec, mesh, store=PlanStore(d))
+        assert not plan.warm_loaded and INIT_STATS.table_bakes == 1
+        INIT_STATS.reset()
+        plan2 = PlanCache().get(spec, mesh, store=PlanStore(d))
+        assert plan2.warm_loaded and INIT_STATS.table_bakes == 0
+        assert INIT_STATS.warm_inits == 1
+        for name in ("pack_src", "pack_valid", "unpack_src", "unpack_valid"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(plan2.index_tables, name)),
+                np.asarray(getattr(plan.index_tables, name)))
