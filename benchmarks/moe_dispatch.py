@@ -2,14 +2,28 @@
 persistent alltoallv engine.
 
 Times one MoE layer forward (reduced-olmoe geometry) on a (data, model) host
-mesh under the three dispatch implementations:
+mesh.  Two sections:
 
-    persistent_a2a     paper technique — static INIT-time metadata
-    nonpersistent_a2a  per-call counts exchange + in-graph displacement math
-    gspmd              scatter + compiler-inserted collectives (vendor path)
+  * legacy dispatch rows (persistent / nonpersistent / gspmd) — the MoE
+    rendition of the paper's per-iteration metadata-elimination claim,
+  * steady-state per-step rows across the per-peer payload sweep:
 
-Derived column reports the persistent-vs-nonpersistent saving — the MoE
-rendition of the paper's per-iteration metadata-elimination claim.
+        gspmd          scatter + compiler-inserted collectives
+        table_free     persistent_a2a with the table-free uniform exchange
+                       (the pre-plan-backed path, kept as the A/B axis)
+        plan_backed    persistent_a2a through the embedded AlltoallvPlan
+                       (INIT-baked tables, store-warm-startable)
+        plan_backed_ov persistent_a2a + chunked exchange/compute overlap
+                       (overlap_chunks=2)
+
+    All four arms go through the shared interleaved min-of-bursts estimator
+    (``core.breakeven.measure_arms``) so cross-arm deltas are comparable.
+
+    NOTE on the overlap arm: XLA:CPU executes collectives synchronously, so
+    on this host the chunked pipeline measures pure chunking overhead (more,
+    smaller exchanges) — the exchange/compute overlap it is built for needs
+    async collectives (TPU).  The row is recorded anyway so the trajectory
+    shows the CPU cost honestly; treat ``overlap_saving`` as a lower bound.
 """
 
 import argparse
@@ -18,6 +32,9 @@ from _util import Csv, set_host_devices, time_call
 
 MESH = (2, 4)   # (data, model)
 JSON_OUT = "experiments/bench/BENCH_moe_dispatch.json"
+# d_model sweep for the steady-state section; the derived column reports
+# the per-peer payload (peer_rows x d_model x 4B) each value induces.
+STEADY_D_MODELS = (16, 64, 256)
 
 
 def main(iters=20, tokens=2048, d_model=256,
@@ -31,6 +48,7 @@ def main(iters=20, tokens=2048, d_model=256,
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.configs.base import MoEConfig
+    from repro.core import breakeven
     from repro.launch.mesh import make_mesh
     from repro.models import moe as moe_mod
     from repro.parallel.sharding import DEFAULT_RULES, ParamFactory, axis_rules
@@ -40,34 +58,84 @@ def main(iters=20, tokens=2048, d_model=256,
     csv = Csv(out)
     results = {}
 
-    with axis_rules(DEFAULT_RULES, mesh):
+    def make_fwd(params, x, mcfg, plan):
+        jitted = jax.jit(lambda xx: moe_mod.apply_moe(params, xx, mcfg,
+                                                      plan)[0])
+        jitted(x).block_until_ready()      # compile outside the timing loop
+        return lambda: jitted(x)
+
+    def layer_inputs(d):
         f = ParamFactory(jax.random.key(0), jnp.float32)
-        moe_mod.init_moe(f.scope("moe"), d_model, base_moe)
+        moe_mod.init_moe(f.scope("moe"), d, base_moe)
         params = jax.device_put(
             f.params["moe"],
             jax.tree.map(lambda t: NamedSharding(mesh, P()), f.params["moe"]))
         x = jax.device_put(
             jnp.asarray(np.random.default_rng(0).standard_normal(
-                (MESH[0], tokens // MESH[0], d_model)), jnp.float32),
+                (MESH[0], tokens // MESH[0], d)), jnp.float32),
             NamedSharding(mesh, P("data", None, None)))
+        return params, x
 
+    with axis_rules(DEFAULT_RULES, mesh):
+        # --- legacy dispatch rows (kept for trajectory continuity) --------
+        params, x = layer_inputs(d_model)
         for dispatch in ("persistent_a2a", "nonpersistent_a2a", "gspmd"):
             mcfg = dataclasses.replace(base_moe, dispatch=dispatch)
-            plan = moe_mod.MoEDispatchPlan.build(mcfg, tokens // MESH[0], mesh)
-
-            def fwd(xx, mcfg=mcfg, plan=plan):
-                y, aux = moe_mod.apply_moe(params, xx, mcfg, plan)
-                return y
-
-            jitted = jax.jit(fwd)
-            t = time_call(lambda: jitted(x), iters)
+            plan = moe_mod.MoEDispatchPlan.build(
+                mcfg, tokens // MESH[0], mesh, d_model=d_model,
+                dtype=jnp.float32)
+            t = time_call(make_fwd(params, x, mcfg, plan), iters)
             results[dispatch] = t
             csv.row(f"moe_dispatch/{dispatch}", t * 1e6,
                     f"tokens={tokens};experts=16;ep={plan.ep_size};cap={plan.capacity}")
 
-    dt = results["nonpersistent_a2a"] - results["persistent_a2a"]
-    csv.row("moe_dispatch/persistent_saving", dt * 1e6,
-            f"savings={100*dt/results['nonpersistent_a2a']:.1f}%")
+        dt = results["nonpersistent_a2a"] - results["persistent_a2a"]
+        csv.row("moe_dispatch/persistent_saving", dt * 1e6,
+                f"savings={100*dt/results['nonpersistent_a2a']:.1f}%")
+
+        # --- steady-state per-step sweep (payload axis) -------------------
+        for d in STEADY_D_MODELS:
+            params, x = layer_inputs(d)
+            arms = {}
+            meta = {}
+            for mode, dispatch, kw in [
+                    ("gspmd", "gspmd", {}),
+                    ("table_free", "persistent_a2a", {"plan_backed": False}),
+                    ("plan_backed", "persistent_a2a",
+                     {"d_model": d, "dtype": jnp.float32}),
+                    ("plan_backed_ov", "persistent_a2a",
+                     {"d_model": d, "dtype": jnp.float32,
+                      "overlap_chunks": 2})]:
+                mcfg = dataclasses.replace(base_moe, dispatch=dispatch)
+                plan = moe_mod.MoEDispatchPlan.build(
+                    mcfg, tokens // MESH[0], mesh, **kw)
+                meta[mode] = plan
+                arms[mode] = make_fwd(params, x, mcfg, plan)
+            times = breakeven.measure_arms(arms, iters=max(iters, 8),
+                                           warmup=3, bursts=3)
+            peer_kib = meta["plan_backed"].peer_rows * d * 4 / 1024
+            for mode, t in times.items():
+                pl = meta[mode]
+                csv.row(f"moe_dispatch/steady/{mode}/d{d}", t * 1e6,
+                        f"peer_kib={peer_kib:.1f};ep={pl.ep_size};"
+                        f"cap={pl.capacity};chunks={pl.overlap_chunks}")
+            # With the fence variant the plan-backed (identity-map) epoch
+            # and the table-free epoch lower to the same exchange, so this
+            # row bounds host timing noise rather than claiming a per-step
+            # win; the plan-backed win is INIT amortization (store
+            # warm-start) plus variant choice (auto / hierarchy).
+            dt_tf = times["table_free"] - times["plan_backed"]
+            csv.row(f"moe_dispatch/steady/plan_backed_saving/d{d}",
+                    dt_tf * 1e6,
+                    f"peer_kib={peer_kib:.1f};"
+                    f"savings={100*dt_tf/times['table_free']:.1f}%;"
+                    f"note=fence_arms_hlo_identical_noise_bound")
+            dt_ov = times["plan_backed"] - times["plan_backed_ov"]
+            csv.row(f"moe_dispatch/steady/overlap_saving/d{d}",
+                    dt_ov * 1e6,
+                    f"peer_kib={peer_kib:.1f};"
+                    f"savings={100*dt_ov/times['plan_backed']:.1f}%")
+
     csv.save()
     if json_out:
         csv.save_json(json_out)

@@ -11,7 +11,9 @@ jax initializes) and prints ``name,us_per_call,derived`` CSV rows.
   sparse_pattern   paper Fig. 3/4 (hugetrace-like irregular patterns)
   hierarchy_sweep  leader-combined hierarchy vs flat fence on a grouped
                    mesh (cross-group message counts, variant="auto")
-  moe_dispatch     framework integration (persistent vs per-call vs gspmd)
+  moe_dispatch     framework integration (persistent vs per-call vs gspmd;
+                   steady-state payload sweep: gspmd vs table-free vs
+                   plan-backed vs plan-backed+overlap per-step rows)
   compression      int8 error-feedback gradient all-reduce
   roofline_table   renders experiments/dryrun artifacts (§Roofline)
 """

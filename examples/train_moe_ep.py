@@ -29,7 +29,9 @@ def main(n_steps: int = 60):
                              total_steps=n_steps, decay_steps=n_steps // 5))
     plan = bundle.meta["moe_plan"]
     print(f"MoE dispatch plan: EP={plan.ep_size}, {plan.e_local} experts/shard, "
-          f"capacity={plan.capacity}, variant={plan.variant}")
+          f"capacity={plan.capacity}, variant={plan.variant}, "
+          f"plan_backed={plan.plan_backed}"
+          + (f" (warm={plan.a2a.warm_loaded})" if plan.plan_backed else ""))
 
     with tempfile.TemporaryDirectory() as ckpt_dir:
         trainer = Trainer(bundle, TrainerConfig(

@@ -24,7 +24,15 @@ class MoEConfig:
     # dispatch implementation: persistent_a2a (paper technique) |
     # nonpersistent_a2a (per-call metadata baseline) | dense_einsum (GShard)
     dispatch: str = "persistent_a2a"
-    a2a_variant: str = "fence"    # fence | lock | fence_hierarchy
+    # fence | lock | fence_hierarchy | auto (measured at INIT, break-even
+    # fit recorded with the decision; resolves to a concrete variant)
+    a2a_variant: str = "fence"
+    # Chunked dispatch->expert-FFN->combine pipeline depth: the capacity
+    # axis is split into this many chunks so chunk m's exchange overlaps
+    # chunk m-1's expert compute.  1 = single-shot (today's behavior).
+    # Clamped at plan build to the largest depth the tile-aligned capacity
+    # supports; any depth is bit-identical to depth 1.
+    overlap_chunks: int = 1
 
 
 @dataclasses.dataclass(frozen=True)

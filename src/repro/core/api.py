@@ -37,7 +37,12 @@ Variant decision tree
                    padding at all, gated on ``compat.HAS_RAGGED_ALL_TO_ALL``.
 
 For embedding inside a larger shard_map program (MoE dispatch), use
-``plan.shard_fn`` or the traced helpers in ``repro.models.moe``.
+``plan.embed()`` — the traced epoch body driven by the same INIT-baked
+tables (compiled into the *host's* executable as constants), with an
+identity fast path for uniform bucketed patterns.  ``repro.models.moe``
+is the flagship consumer: every ``dispatch="persistent_a2a"`` MoE layer
+builds its backing plan through this API at model INIT, so EP dispatch
+warm-starts from the plan store like every other pattern.
 """
 
 from __future__ import annotations
@@ -81,6 +86,7 @@ def alltoallv_init(
     cache: PlanCache | None = None,
     autotune_iters: int = 12,
     store=None,
+    embeddable: bool = False,
 ) -> AlltoallvPlan:
     """Build (or fetch from cache) a persistent plan for a frozen pattern.
 
@@ -96,6 +102,11 @@ def alltoallv_init(
     With a populated store, INIT warm-starts: baked index tables, hierarchy
     schedules, and ``variant="auto"`` decisions load from disk instead of
     being re-baked/re-measured — observable via ``init_stats()``.
+
+    ``embeddable=True`` declares the plan will be consumed through
+    ``plan.embed()``: ``variant="auto"`` then excludes candidates the
+    embedded form cannot run (``ragged``, which puts into the plan-owned
+    window).
     """
     from . import metadata as md
 
@@ -124,7 +135,8 @@ def alltoallv_init(
     if variant == "auto":
         from .autotune import autotune_variant
         return autotune_variant(spec, mesh, cache or _GLOBAL_CACHE,
-                                iters=autotune_iters, store=resolved_store)
+                                iters=autotune_iters, store=resolved_store,
+                                embeddable=embeddable)
     return (cache or _GLOBAL_CACHE).get(spec, mesh, store=resolved_store)
 
 

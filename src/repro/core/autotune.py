@@ -20,6 +20,8 @@ anyway); callers that want them dropped can ``free()`` them via the cache.
 from __future__ import annotations
 
 import dataclasses
+import math
+import time
 from typing import Sequence
 
 import jax
@@ -62,6 +64,7 @@ def autotune_variant(
     warmup: int = 2,
     bursts: int = 3,
     store=None,
+    embeddable: bool = False,
 ) -> AlltoallvPlan:
     """Measure every candidate for ``spec``'s pattern, return the winner.
 
@@ -69,6 +72,12 @@ def autotune_variant(
     other spec fields are forwarded to each candidate.  The measurement
     input is a zeros buffer — timing, not values, is under test, and a
     zeros epoch exercises the identical collective/gather program.
+
+    ``embeddable=True`` restricts the candidate set to variants the
+    embedded form (``plan.embed()``) supports — i.e. drops ``ragged``,
+    which puts into the plan-owned window — so a winner chosen for an
+    embedding consumer (MoE dispatch) is always embeddable.  A stored
+    decision naming an excluded variant is ignored and re-measured.
 
     Decisions resolve through three tiers: the in-memory
     ``cache.auto_choices`` (this process), then the plan ``store`` (a prior
@@ -79,19 +88,32 @@ def autotune_variant(
     sc = np.asarray(spec.send_counts)
     row_elems = int(np.prod(spec.feature_shape)) if spec.feature_shape else 1
     row_bytes = row_elems * jnp.dtype(spec.dtype).itemsize
+    # The decision signature encodes the candidate-set restriction: an
+    # embeddable sweep (ragged excluded) must not share a cache/store key
+    # with an unrestricted one, or its winner would overwrite — and later
+    # be trusted as — a decision measured over a different candidate set.
     auto_sig = md.PatternSignature.build(
-        sc, spec.feature_shape, spec.dtype, "auto", spec.axis, row_bytes,
+        sc, spec.feature_shape, spec.dtype,
+        "auto_embed" if embeddable else "auto", spec.axis, row_bytes,
         lock_schedule=spec.lock_schedule, tile_rows=spec.tile_rows,
         pack_impl=spec.pack_impl, baked_metadata=spec.baked_metadata,
         axis_sizes=tuple(mesh.shape[a] for a in spec.axis))
 
+    cands = candidate_variants(spec, mesh)
+    if embeddable:
+        cands = [v for v in cands if v != "ragged"]
+
     choice = cache.auto_choices.get(auto_sig)
+    if choice is not None and choice.get("variant") not in cands:
+        choice = None          # cached winner excluded for this consumer
     if choice is None and store is not None:
         choice = store.get_auto(auto_sig)
         if choice is not None:
             # A stored decision for a variant this host cannot build (e.g.
-            # ragged chosen on TPU, replayed on CPU) must not be trusted.
-            if choice.get("variant") in candidate_variants(spec, mesh):
+            # ragged chosen on TPU, replayed on CPU) — or one excluded for
+            # this consumer (ragged for an embedding caller) — must not be
+            # trusted.
+            if choice.get("variant") in cands:
                 cache.auto_choices[auto_sig] = choice
             else:
                 choice = None
@@ -101,8 +123,9 @@ def autotune_variant(
         plan.auto_choice = choice
         return plan
 
+    t_sweep0 = time.perf_counter()
     plans: dict[str, AlltoallvPlan] = {}
-    for variant in candidate_variants(spec, mesh):
+    for variant in cands:
         plan = cache.get(_candidate_spec(spec, variant), mesh, store=store)
         plan.compile()
         plans[variant] = plan
@@ -131,8 +154,25 @@ def autotune_variant(
             times[v] = min(times[v], t)
 
     best = min(times, key=times.get)
+    # Eq. 1-3 applied to the *decision*: the sweep is the one-time INIT cost
+    # and the per-epoch saving is best-vs-runner-up, so n_amortize is how
+    # many epochs until measuring beat just picking the second-best variant.
+    # Persisted with the choice so warm processes inherit the fit for free.
+    sweep_seconds = time.perf_counter() - t_sweep0
+    ranked = sorted(times, key=times.get)
+    delta = (times[ranked[1]] - times[ranked[0]]) if len(ranked) > 1 else 0.0
     choice = {"variant": best,
-              "times": {v: float(t) for v, t in times.items()}}
+              "times": {v: float(t) for v, t in times.items()},
+              "breakeven": {
+                  "sweep_seconds": float(sweep_seconds),
+                  "t_best": float(times[best]),
+                  "t_second": float(times[ranked[1]]) if len(ranked) > 1
+                  else float(times[best]),
+                  # None = the sweep never amortizes (tie / single
+                  # candidate); kept JSON-strict for external store readers
+                  # (json.dumps would emit non-standard Infinity).
+                  "n_amortize": (int(math.ceil(sweep_seconds / delta))
+                                 if delta > 0 else None)}}
     cache.auto_choices[auto_sig] = choice
     if store is not None:
         try:

@@ -25,6 +25,25 @@ START then launches the compiled executable (JAX async dispatch returns
 immediately — genuine start semantics) and WAIT blocks on the result.
 ``start_pipelined`` alternates between two window slots so epoch k+1 can be
 dispatched while epoch k's output is still being consumed.
+
+Embedded-plan lifecycle
+-----------------------
+
+A plan has two consumption forms.  The *standalone* form above owns its own
+compiled executable and window.  The *embedded* form (``plan.embed()``)
+returns the traced epoch body itself — pack, exchange, unpack driven by the
+same INIT-baked metadata — for use INSIDE an enclosing ``shard_map``/``jit``
+program (MoE expert dispatch, Ulysses).  The embedding host compiles the
+plan's tables into its own executable as constants, so the INIT/EXECUTE
+split survives intact: the plan is built once at model INIT (warm-startable
+from the plan store), and every jitted train/serve step replays the baked
+schedule with zero per-step metadata work.  Uniform all-equal patterns
+(the MoE capacity-bucketed layout) are detected at INIT
+(``plan.identity_maps``) and skip the pack/unpack gathers entirely.
+An embedded plan never touches the window or its standalone executable —
+the host program owns buffers and donation — so embedding is free of the
+standalone form's device-table upload (which is deferred to the first
+``start``/``compile``).
 """
 
 from __future__ import annotations
@@ -212,9 +231,7 @@ class AlltoallvPlan:
             # The two-stage schedule carries its own gather/unpack tables
             # (s1 pack -> s2 slab build -> s3 scatter -> final unpack).
             self.index_tables = None
-            self._table_args = tuple(
-                jax.device_put(t, self._x_sharding)
-                for t in self.hier_schedule.tables)
+            self._table_host = self.hier_schedule.tables
         elif spec.baked_metadata and spec.variant != "ragged":
             warm_tables = getattr(warm, "index_tables", None)
             if warm_tables is not None:
@@ -231,19 +248,31 @@ class AlltoallvPlan:
                 INIT_STATS.table_bakes += 1
                 tables = md.baked_index_tables(sc, self.capacity, self.recv_rows)
             self.index_tables = tables
-            # device_put straight from numpy: sharded host-to-device upload,
-            # so no device ever holds more than its own O(P*C) row (a
-            # jnp.asarray first would commit the whole O(P^2*C) table to
-            # device 0 before resharding).
-            self._table_args = tuple(
-                jax.device_put(t, self._x_sharding)
-                for t in (tables.pack_src, tables.pack_valid,
-                          tables.unpack_src, tables.unpack_valid))
+            self._table_host = (tables.pack_src, tables.pack_valid,
+                                tables.unpack_src, tables.unpack_valid)
         else:
             self.index_tables = None
-            self._table_args = ()
+            self._table_host = ()
+
+        # Uniform all-equal patterns (every pair exchanges exactly the
+        # bucket capacity, tile-aligned) have identity pack/unpack maps:
+        # the ragged layout IS the bucketed layout.  The embedded form
+        # elides both gathers for them (MoE dispatch hits this path).
+        # Derived from the O(P^2) counts alone — uniform counts equal to
+        # the capacity imply identity by construction of
+        # ``baked_index_tables`` — NOT by scanning the tables themselves:
+        # on a warm start those are read-only memmaps whose bytes a
+        # one-header-read load must never page in.
+        self.identity_maps = bool(
+            self.index_tables is not None
+            and sc.size > 0
+            and (sc == self.capacity).all()
+            and self.send_rows == self.p * self.capacity
+            and self.recv_rows == self.p * self.capacity)
 
         self.shard_fn = self._build_shard_fn()
+        self._embedded = None
+        self._table_args_cached: tuple | None = None
         self._compiled = None
         self.init_host_seconds = time.perf_counter() - t0
         self.init_compile_seconds = 0.0
@@ -254,6 +283,20 @@ class AlltoallvPlan:
             INIT_STATS.cold_inits += 1
 
     # -- geometry ------------------------------------------------------------
+    @property
+    def _table_args(self) -> tuple:
+        """Axis-sharded device copies of the baked tables, uploaded lazily on
+        the first standalone ``compile``/``start``.  device_put straight from
+        numpy is a sharded host-to-device upload, so no device ever holds
+        more than its own O(P*C) row (a jnp.asarray first would commit the
+        whole O(P^2*C) table to device 0 before resharding).  Embedded-only
+        plans never trigger the upload — their tables enter the host
+        program as compile-time constants instead."""
+        if self._table_args_cached is None:
+            self._table_args_cached = tuple(
+                jax.device_put(t, self._x_sharding) for t in self._table_host)
+        return self._table_args_cached
+
     @property
     def global_send_shape(self) -> tuple[int, ...]:
         return (self.p * self.send_rows,) + self.spec.feature_shape
@@ -343,6 +386,99 @@ class AlltoallvPlan:
 
         return shard_fn
 
+    # -- embedded form --------------------------------------------------------
+    def embed(self) -> Callable:
+        """Traced epoch body for use INSIDE an enclosing shard_map program.
+
+        Returns ``fn(x) -> recv``: ``x`` is this shard's ragged send buffer
+        ``[send_rows, F...]`` and the result is the ragged recv buffer
+        ``[recv_rows, F...]`` (invalid padding rows zeroed — an embedded
+        plan has no window to write through).  The INIT-baked index tables
+        enter the host program as replicated constants, row-selected by
+        ``axis_index`` — they are compiled into the *host's* executable
+        once, which is the embedded rendition of the INIT/EXECUTE split.
+        Uniform identity patterns (``self.identity_maps``) skip the
+        pack/unpack gathers entirely, so the epoch is the bare exchange.
+
+        The enclosing shard_map must span (at least) ``spec.axis``; the
+        caller owns jit/compile/donation.  ``variant="ragged"`` cannot be
+        embedded (it puts into the plan-owned window) and A/B in-graph mode
+        has nothing baked to embed; both raise.
+        """
+        if self._embedded is not None:
+            return self._embedded
+        spec = self.spec
+        if spec.variant == "ragged":
+            raise ValueError("variant='ragged' puts into the plan-owned "
+                             "window and cannot be embedded")
+        if not spec.baked_metadata:
+            raise ValueError("embed() requires baked_metadata=True (the "
+                             "A/B in-graph mode has no tables to embed)")
+        p, cap = self.p, self.capacity
+        a2a_axis = spec.axis[0] if len(spec.axis) == 1 else tuple(spec.axis)
+
+        if spec.variant == "fence_hierarchy":
+            tbls = tuple(jnp.asarray(t) for t in self._table_host)
+            sched = self.hier_schedule
+            if spec.pack_impl == "fused":
+                from repro.kernels import ops as kops
+                stage2 = partial(
+                    kops.fused_hier_leader_exchange, schedule=sched,
+                    outer_axis=spec.axis[0], inner_axis=spec.axis[1],
+                    mesh_axes=tuple(self.mesh.axis_names))
+            else:
+                stage2 = None
+
+            def embedded(x: jax.Array) -> jax.Array:
+                i = self._axis_index()
+                rows = tuple(t[i] for t in tbls)
+                buckets = variants.hierarchy_exchange_combined(
+                    x, rows[:6], sched, spec.axis[0], spec.axis[1],
+                    stage2_impl=stage2)
+                return variants.unpack_rows(buckets, rows[6], rows[7])
+        elif self.identity_maps:
+            # Uniform identity pattern (the MoE bucket layout): both gathers
+            # vanish, no tables are ever materialized on device, and
+            # pack_impl is moot — the epoch IS the bare exchange.
+            def embedded(x: jax.Array) -> jax.Array:
+                if spec.variant == "fence":
+                    return variants.fence_exchange(x, a2a_axis)
+                return variants.lock_exchange(
+                    x, a2a_axis, p, cap,
+                    self.round_capacities, spec.lock_schedule)
+        else:
+            # Honor spec.pack_impl so the embedded epoch runs the same
+            # pack/unpack implementation the autotuner measured through the
+            # standalone shard_fn (fused = gather fused into the fence RMA
+            # kernel; pallas = kernel gathers; jnp = reference gathers).
+            tbls = tuple(jnp.asarray(t) for t in self._table_host)
+            if spec.pack_impl in ("pallas", "fused"):
+                from repro.kernels import ops as kops
+                pack_fn, unpack_fn = kops.pack, kops.unpack
+            else:
+                kops = None
+                pack_fn, unpack_fn = variants.pack_rows, variants.unpack_rows
+
+            def embedded(x: jax.Array) -> jax.Array:
+                i = self._axis_index()
+                if spec.pack_impl == "fused" and spec.variant == "fence":
+                    buckets = kops.fused_pack_alltoallv(
+                        x, tbls[0][i], tbls[1][i], p=p, capacity=cap,
+                        axis=a2a_axis,
+                        mesh_axes=tuple(self.mesh.axis_names))
+                else:
+                    packed = pack_fn(x, tbls[0][i], tbls[1][i])
+                    if spec.variant == "fence":
+                        buckets = variants.fence_exchange(packed, a2a_axis)
+                    else:  # lock
+                        buckets = variants.lock_exchange(
+                            packed, a2a_axis, p, cap,
+                            self.round_capacities, spec.lock_schedule)
+                return unpack_fn(buckets, tbls[2][i], tbls[3][i])
+
+        self._embedded = embedded
+        return embedded
+
     # -- AOT compile ----------------------------------------------------------
     def compile(self) -> "AlltoallvPlan":
         if self._compiled is not None:
@@ -424,6 +560,7 @@ class AlltoallvPlan:
             "baked_metadata": self.spec.baked_metadata,
             "pack_impl": self.spec.pack_impl,
             "warm_loaded": self.warm_loaded,
+            "identity_maps": self.identity_maps,
             "lock_rounds_active": self.lock_rounds_active,
             "lock_rounds_total": self.lock_rounds_total,
             "hierarchy_remote_needed": self.hierarchy_remote_needed,

@@ -328,6 +328,40 @@ def hierarchy_exchange(
     return out.reshape(p_outer * p_inner * c, *f)
 
 
+def uniform_bucketed_exchange(
+    packed: jax.Array,
+    variant: str,
+    axis: str | tuple[str, str],
+    capacity: int,
+    axis_sizes: Sequence[int],
+    lock_schedule: str = "ring",
+) -> jax.Array:
+    """Table-free variant dispatch for *uniform* bucketed layouts.
+
+    One switch shared by every consumer whose per-peer buckets all have one
+    static capacity (MoE expert dispatch's table-free fallback, the Ulysses
+    head exchange): ``packed`` is ``[P * capacity, F...]``, ``axis`` names
+    the exchange axis (or the (outer, inner) pair for a grouped mesh —
+    fence/lock then run over the linearized pair), and ``axis_sizes`` are
+    the corresponding mesh extents.  The plan-backed path
+    (``AlltoallvPlan.embed``) supersedes this where a real plan exists; this
+    helper survives for ad-hoc exchanges with no INIT stage to amortize.
+    """
+    p = int(np.prod(list(axis_sizes)))
+    a2a_axis = axis if isinstance(axis, str) else tuple(axis)
+    if variant == "lock":
+        return lock_exchange(packed, a2a_axis, p, capacity, None, lock_schedule)
+    if variant == "fence_hierarchy":
+        if isinstance(axis, str) or len(axis) != 2:
+            raise ValueError("fence_hierarchy needs axis=(outer, inner)")
+        return hierarchy_exchange(packed, axis[0], axis[1],
+                                  int(axis_sizes[0]), int(axis_sizes[1]),
+                                  capacity)
+    if variant != "fence":
+        raise ValueError(f"unknown uniform exchange variant {variant!r}")
+    return fence_exchange(packed, a2a_axis)
+
+
 # ---------------------------------------------------------------------------
 # Ragged: true variable-size exchange (TPU execution only)
 # ---------------------------------------------------------------------------

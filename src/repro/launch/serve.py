@@ -22,10 +22,9 @@ def main(argv=None):
     p.add_argument("--plan-store", default=None, metavar="DIR",
                    help="persistent plan-store directory, set as the process "
                         "default (repro.planstore.configure): any "
-                        "alltoallv_init in this process warm-starts from "
-                        "artifacts of previous serving processes. NOTE: the "
-                        "built-in MoE dispatch currently exchanges in-graph "
-                        "and does not consult it (see ROADMAP)")
+                        "alltoallv_init in this process — including the "
+                        "built-in plan-backed MoE EP dispatch — warm-starts "
+                        "from artifacts of previous serving processes")
     args = p.parse_args(argv)
 
     import numpy as np
@@ -55,6 +54,9 @@ def main(argv=None):
     print(f"generated {toks.shape}: prefill {stats.prefill_seconds*1e3:.1f} ms, "
           f"decode {stats.decode_seconds_per_token*1e3:.2f} ms/token")
     print(toks[:2])
+    if args.plan_store:
+        from repro.core import init_stats
+        print("plan-store init stats:", init_stats())
     return stats
 
 

@@ -26,12 +26,11 @@ from repro.models import api as model_api
 from repro.models import moe as moe_mod
 from repro.models import transformer, whisper
 from repro.parallel.sharding import (DECODE_RULES, DEFAULT_RULES,
-                                     LONG_CONTEXT_RULES, axis_rules, resolve,
-                                     specs_to_shardings)
+                                     LONG_CONTEXT_RULES, axis_rules,
+                                     batch_ways, resolve, specs_to_shardings)
 from repro.train import grad as grad_util
 from repro.train import optimizer as opt_mod
 from repro.train import schedule as sched_mod
-from .mesh import dp_size
 
 
 @dataclasses.dataclass
@@ -67,7 +66,11 @@ def _batch_shardings(cfg: ModelConfig, mesh, batch_abs: dict) -> dict:
 
 
 def _moe_tokens_per_shard(cfg: ModelConfig, shape: ShapeConfig, mesh) -> int:
-    b_loc = max(shape.global_batch // dp_size(mesh), 1)
+    # batch_ways, not dp_size: a rule profile may shard batch over fewer
+    # axes than pod x data (hier_ep puts experts on pod), and undercounting
+    # tokens here would undersize the MoE dispatch capacity and silently
+    # drop routed tokens.
+    b_loc = max(shape.global_batch // batch_ways(shape.global_batch, mesh), 1)
     if shape.kind == "decode":
         return b_loc
     seq = shape.seq_len
@@ -268,7 +271,7 @@ def make_prefill_bundle(
         params_abs, logical_specs = model_api.init_model(None, cfg, abstract=True)
         param_sh = specs_to_shardings(logical_specs, mesh, params_abs)
         moe_plan = model_api.build_moe_plan(
-            cfg, max(b // dp_size(mesh), 1) * s, mesh)
+            cfg, max(b // batch_ways(b, mesh), 1) * s, mesh)
 
         if cfg.family == "audio":
             self_len = min(cfg.max_seq, 448)

@@ -30,7 +30,18 @@ def main(argv=None) -> dict:
     p.add_argument("--dispatch", default=None,
                    choices=["persistent_a2a", "nonpersistent_a2a", "gspmd"])
     p.add_argument("--a2a-variant", default=None,
-                   choices=["fence", "lock", "fence_hierarchy"])
+                   choices=["fence", "lock", "fence_hierarchy", "auto"])
+    p.add_argument("--overlap-chunks", type=int, default=None,
+                   help="chunked dispatch->FFN->combine pipeline depth for "
+                        "MoE EP dispatch (1 = no overlap; clamped to the "
+                        "capacity geometry)")
+    p.add_argument("--rules", default="default",
+                   choices=["default", "long_context", "decode", "pure_dp",
+                            "hier_ep"],
+                   help="sharding-rule launch profile (parallel.sharding."
+                        "RULE_PROFILES); 'hier_ep' widens the experts rule "
+                        "to the (pod, model) axis pair for hierarchical "
+                        "expert parallelism")
     p.add_argument("--schedule", default=None,
                    choices=["cosine", "linear", "wsd", "constant"])
     p.add_argument("--lr", type=float, default=3e-4)
@@ -42,11 +53,15 @@ def main(argv=None) -> dict:
     p.add_argument("--plan-store", default=None, metavar="DIR",
                    help="persistent plan-store directory, set as the process "
                         "default (repro.planstore.configure): any "
-                        "alltoallv_init in this process warm-starts from "
-                        "artifacts of previous runs. NOTE: the built-in MoE "
-                        "dispatch currently exchanges in-graph and does not "
-                        "consult it (see ROADMAP); custom persistent-plan "
-                        "dispatch paths do")
+                        "alltoallv_init in this process — including the "
+                        "built-in plan-backed MoE EP dispatch — warm-starts "
+                        "from artifacts of previous runs (zero table bakes, "
+                        "zero autotune bursts on a warm hit)")
+    p.add_argument("--assert-warm-init", action="store_true",
+                   help="exit non-zero unless every INIT in this run was "
+                        "warm: zero autotune measurement bursts, zero table "
+                        "bakes, at least one store hit (the CI warm-EP "
+                        "contract for a second --plan-store run)")
     args = p.parse_args(argv)
 
     logging.basicConfig(level=logging.INFO,
@@ -64,12 +79,13 @@ def main(argv=None) -> dict:
     from repro.train import ScheduleConfig, Trainer, TrainerConfig
 
     cfg = get_reduced(args.arch) if args.reduced else get(args.arch)
-    if args.dispatch or args.a2a_variant:
+    if args.dispatch or args.a2a_variant or args.overlap_chunks:
         assert cfg.moe is not None, f"{cfg.name} has no MoE layers"
         moe = dataclasses.replace(
             cfg.moe,
             dispatch=args.dispatch or cfg.moe.dispatch,
-            a2a_variant=args.a2a_variant or cfg.moe.a2a_variant)
+            a2a_variant=args.a2a_variant or cfg.moe.a2a_variant,
+            overlap_chunks=args.overlap_chunks or cfg.moe.overlap_chunks)
         cfg = dataclasses.replace(cfg, moe=moe)
 
     base_shape = SHAPES[args.shape]
@@ -86,17 +102,27 @@ def main(argv=None) -> dict:
                            warmup_steps=max(args.steps // 10, 1),
                            total_steps=args.steps,
                            decay_steps=max(args.steps // 5, 1))
+    from repro.parallel.sharding import RULE_PROFILES
     bundle = steps_mod.make_train_bundle(
         cfg, shape, mesh, sched=sched, zero1=not args.no_zero1,
-        n_micro=args.micro)
+        n_micro=args.micro, rules=RULE_PROFILES[args.rules])
     trainer = Trainer(bundle, TrainerConfig(
         n_steps=args.steps, ckpt_dir=args.ckpt_dir,
         ckpt_every=args.ckpt_every, log_every=args.log_every))
     result = trainer.run()
     print("train finished:", result)
-    if args.plan_store:
+    if args.plan_store or args.assert_warm_init:
         from repro.core import init_stats
-        print("plan-store init stats:", init_stats())
+        stats = init_stats()
+        print("plan-store init stats:", stats)
+        if args.assert_warm_init:
+            cold = {k: stats[k] for k in ("autotune_bursts", "table_bakes")
+                    if stats[k] != 0}
+            if cold or stats["store_hits"] == 0:
+                print("ASSERT-WARM-INIT FAILED:", stats)
+                raise SystemExit(3)
+            print("ASSERT-WARM-INIT OK: zero bursts, zero bakes, "
+                  f"{stats['store_hits']} store hits")
     return result
 
 

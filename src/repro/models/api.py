@@ -21,10 +21,20 @@ def init_model(key: Optional[jax.Array], cfg: ModelConfig,
     return transformer.init_lm(key, cfg, abstract=abstract)
 
 
-def build_moe_plan(cfg: ModelConfig, tokens_per_dp_shard: int, mesh):
+def build_moe_plan(cfg: ModelConfig, tokens_per_dp_shard: int, mesh,
+                   store=None):
+    """One plan-backed EP dispatch plan per (config geometry, mesh).
+
+    This is the model-INIT half of the persistent MoE dispatch: the backing
+    ``AlltoallvPlan`` is built (or warm-started from the plan ``store`` —
+    None means the process default, i.e. the launchers' ``--plan-store``
+    flag) here, once, and every jitted step replays it."""
     if cfg.moe is None:
         return None
-    return moe_mod.MoEDispatchPlan.build(cfg.moe, tokens_per_dp_shard, mesh)
+    dtype = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+    return moe_mod.MoEDispatchPlan.build(
+        cfg.moe, tokens_per_dp_shard, mesh,
+        d_model=cfg.d_model, dtype=dtype, store=store)
 
 
 def model_loss(params, cfg: ModelConfig, batch: dict, *,

@@ -6,11 +6,18 @@ the paper's technique embedded as a first-class framework feature — the
 dispatch path is selectable:
 
   persistent_a2a     (paper) explicit shard_map alltoallv over the expert
-                     axis using a *persistent dispatch plan*: the capacity
-                     schedule, bucket geometry, and pack/unpack index maps
-                     are frozen at layer-build time (INIT) and baked into the
-                     executable; per-step work is routing + data movement
-                     only.  a2a variant: fence / lock / fence_hierarchy.
+                     axis through a *plan-backed persistent dispatch*: at
+                     layer build (INIT) a real table-backed
+                     ``core.AlltoallvPlan`` is constructed for the frozen
+                     capacity-bucketed pattern — via the PlanCache and the
+                     on-disk plan store, so a second process warm-starts
+                     with zero table bakes and zero autotune bursts — and
+                     its *embedded* form (``plan.embed()``) runs the
+                     exchange inside the jitted step.  The capacity
+                     schedule is static per plan; only the routing overflow
+                     mask stays in-graph.  a2a variant: fence / lock /
+                     fence_hierarchy / auto (measured at INIT, break-even
+                     fit recorded with the decision).
   nonpersistent_a2a  same data path, but re-derives the metadata every call:
                      an extra int32 counts all_to_all plus in-graph
                      displacement/index-map computation (what a generic
@@ -18,6 +25,21 @@ dispatch path is selectable:
   gspmd              scatter into an expert-sharded bucket tensor and let
                      GSPMD insert the collectives (the vendor-collective
                      baseline).
+
+``moe.overlap_chunks > 1`` splits the capacity axis into chunks and
+software-pipelines dispatch -> expert FFN -> combine (the in-graph
+rendition of ``AlltoallvPlan.start_pipelined``): chunk m's exchange is
+issued before chunk m-1's expert compute, so the collectives overlap the
+FFN on hardware with async collectives.  Any depth is bit-identical to
+depth 1 — the FFN is row-independent and chunks partition the capacity
+axis.
+
+Embedded-plan lifecycle: one backing ``AlltoallvPlan`` per (layer
+geometry, mesh, chunk geometry), built once at model INIT, shared by every
+MoE layer and every step through the process-global PlanCache, and
+published to / warm-started from the plan store (``--plan-store`` /
+``REPRO_PLANSTORE_DIR``).  The dispatch and combine hops reuse the same
+plan (the uniform pattern is symmetric).
 
 Routing is Switch/GShard-style top-k with capacity factor, aux load-balance
 loss and router z-loss.
@@ -28,7 +50,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from functools import partial
-from typing import Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -38,8 +60,8 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map
 from repro.configs.base import MoEConfig
 from repro.core import variants as core_variants
-from repro.parallel.sharding import (ScopedFactory, cs, current_mesh,
-                                     normal_init, resolve)
+from repro.parallel.sharding import (ScopedFactory, active_rules, batch_ways,
+                                     cs, current_mesh, normal_init, resolve)
 
 
 # ---------------------------------------------------------------------------
@@ -73,7 +95,12 @@ class MoEDispatchPlan:
     """Frozen INIT-time metadata for one MoE layer's alltoallv.
 
     Built once at model construction; every train/serve step reuses it.
-    A non-persistent call re-derives the dynamic parts in-graph instead.
+    With ``a2a`` set (the plan-backed form) the exchange runs through the
+    embedded shard-fn of a real table-backed ``core.AlltoallvPlan`` —
+    INIT-baked capacity tables, store warm-start, autotuned variant; the
+    ``a2a is None`` form keeps the table-free uniform exchange (used by the
+    A/B benchmark axis and when no layer geometry is known).  A
+    non-persistent call re-derives the dynamic parts in-graph instead.
     """
 
     n_experts: int
@@ -87,29 +114,85 @@ class MoEDispatchPlan:
     # hierarchical EP factorization), or None (no EP axis in mesh).
     axis: str | tuple[str, str] | None
     hier_axes: tuple[str, str] | None = None
+    # dispatch->FFN->combine pipeline depth (chunks of the capacity axis);
+    # clamped at build to what the tile-aligned capacity supports.
+    overlap_chunks: int = 1
+    # Backing persistent plan (core.AlltoallvPlan) for the chunk-geometry
+    # pattern; excluded from identity/hash (it is derived state).
+    a2a: Any = dataclasses.field(default=None, compare=False, repr=False)
 
     @property
     def peer_rows(self) -> int:
         return self.e_local * self.capacity
 
+    @property
+    def chunk_capacity(self) -> int:
+        return self.capacity // self.overlap_chunks
+
+    @property
+    def chunk_peer_rows(self) -> int:
+        return self.e_local * self.chunk_capacity
+
+    @property
+    def plan_backed(self) -> bool:
+        return self.a2a is not None
+
+    @staticmethod
+    def _ep_axes(mesh) -> tuple[str, ...]:
+        """EP mesh axes under the active sharding rules: whatever the
+        ``experts`` rule maps to (size-1 axes dropped).  Under
+        ``DEFAULT_RULES`` that is ``("model",)``; under ``HIER_EP_RULES``
+        the ``("pod", "model")`` pair — which is how the hierarchical EP
+        launch profile reaches this plan without a test-local mesh."""
+        if mesh is None:
+            return ()
+        rule = active_rules().get("experts") or ()
+        rule = (rule,) if isinstance(rule, str) else tuple(rule)
+        return tuple(a for a in rule
+                     if a in mesh.axis_names and int(mesh.shape[a]) > 1)
+
     @staticmethod
     def build(moe: MoEConfig, n_tokens: int, mesh, tile: int = 8,
-              hier_axes: tuple[str, str] | None = None) -> "MoEDispatchPlan":
-        """``hier_axes=(outer, inner)`` spans EP over a 2-axis mesh
-        factorization (e.g. ``("pod", "model")`` with the ``experts``
-        sharding rule widened to match): the alltoallv then runs over the
-        linearized pair, and ``a2a_variant="fence_hierarchy"`` dispatches
-        through the leader-combined exchange — O((EP/g)^2) cross-pod
-        messages per MoE layer instead of O(EP^2/g)."""
+              hier_axes: tuple[str, str] | None = None, *,
+              d_model: int | None = None, dtype=None,
+              plan_backed: bool = True, store=None, cache=None,
+              pack_impl: str = "jnp", autotune_iters: int = 8,
+              overlap_chunks: int | None = None) -> "MoEDispatchPlan":
+        """Build the INIT-time dispatch plan for one layer geometry.
+
+        The EP axis (or (outer, inner) pair) is derived from the active
+        ``experts`` sharding rule; ``hier_axes=(outer, inner)`` overrides
+        it explicitly.  Over a pair, the alltoallv runs linearized and
+        ``a2a_variant="fence_hierarchy"`` dispatches through the
+        leader-combined exchange — O((EP/g)^2) cross-pod messages per MoE
+        layer instead of O(EP^2/g).
+
+        Passing ``d_model`` (the row feature width) makes the dispatch
+        *plan-backed*: a real ``AlltoallvPlan`` for the uniform
+        chunk-geometry pattern is fetched or built through the PlanCache
+        and the plan ``store`` (None = the process default, i.e. the
+        launchers' ``--plan-store``), so EP INIT warm-starts across
+        processes and ``a2a_variant="auto"`` resolves through the
+        measured + stored decision.  ``plan_backed=False`` keeps the
+        table-free exchange (the benchmark's A/B axis).
+        """
         if hier_axes is not None and mesh is not None \
                 and all(a in mesh.axis_names for a in hier_axes):
             axis: str | tuple[str, str] | None = tuple(hier_axes)
             ep = int(np.prod([mesh.shape[a] for a in hier_axes]))
         else:
             hier_axes = None
-            axis = "model" if (mesh is not None
-                               and "model" in mesh.axis_names) else None
-            ep = int(mesh.shape[axis]) if axis else 1
+            ep_axes = MoEDispatchPlan._ep_axes(mesh)
+            if len(ep_axes) >= 2:
+                hier_axes = tuple(ep_axes[:2])
+                axis = hier_axes
+                ep = int(np.prod([mesh.shape[a] for a in hier_axes]))
+            elif len(ep_axes) == 1:
+                axis = ep_axes[0]
+                ep = int(mesh.shape[axis])
+            else:
+                axis = None
+                ep = 1
         if moe.n_experts % ep:
             raise ValueError(f"{moe.n_experts} experts not divisible by EP={ep}")
         t_loc = max(-(-n_tokens // ep), tile)
@@ -117,11 +200,48 @@ class MoEDispatchPlan:
         cap = max(int(math.ceil(t_loc * moe.top_k * moe.capacity_factor
                                 / moe.n_experts)), tile)
         cap = -(-cap // tile) * tile
+
+        # Pipeline depth: largest k <= requested that partitions the
+        # capacity evenly AND keeps each chunk's per-peer bucket
+        # (e_local * cap/k rows) tile-aligned — chunking never changes the
+        # capacity schedule, so any depth is bit-identical to depth 1.
+        k_req = max(int(overlap_chunks if overlap_chunks is not None
+                        else moe.overlap_chunks), 1)
+        e_loc = moe.n_experts // ep
+        k = max(kk for kk in range(1, min(k_req, cap) + 1)
+                if cap % kk == 0 and (e_loc * (cap // kk)) % tile == 0)
+
+        variant = moe.a2a_variant
+        if variant == "fence_hierarchy" and hier_axes is None:
+            variant = "fence"          # no (outer, inner) pair to group over
+        a2a = None
+        if (plan_backed and d_model is not None and axis is not None
+                and ep > 1 and moe.dispatch == "persistent_a2a"):
+            from repro.core import api as core_api
+            chunk_rows = (moe.n_experts // ep) * (cap // k)
+            counts = np.full((ep, ep), chunk_rows, np.int64)
+            a2a = core_api.alltoallv_init(
+                counts, (int(d_model),),
+                dtype if dtype is not None else jnp.float32,
+                mesh, axis=axis, variant=variant, tile_rows=tile,
+                pack_impl=pack_impl, cache=cache, store=store,
+                autotune_iters=autotune_iters, embeddable=True)
+            variant = a2a.spec.variant   # "auto" resolved to the winner
+        elif variant == "auto":
+            if (moe.dispatch == "persistent_a2a" and axis is not None
+                    and ep > 1):
+                raise ValueError(
+                    "a2a_variant='auto' needs the plan-backed dispatch "
+                    "(build with d_model=... so the autotuner has a "
+                    "pattern to measure)")
+            # No EP exchange to tune (ep == 1 / gspmd / nonpersistent):
+            # resolve to the dense-uniform default instead of failing.
+            variant = "fence"
         return MoEDispatchPlan(
             n_experts=moe.n_experts, top_k=moe.top_k, ep_size=ep,
             e_local=moe.n_experts // ep, tokens_per_shard=t_loc,
-            capacity=cap, variant=moe.a2a_variant, axis=axis,
-            hier_axes=hier_axes)
+            capacity=cap, variant=variant, axis=axis,
+            hier_axes=hier_axes, overlap_chunks=k, a2a=a2a)
 
 
 # ---------------------------------------------------------------------------
@@ -186,6 +306,31 @@ def _expert_ffn(h, w_gate, w_up, w_down):
 # ---------------------------------------------------------------------------
 
 
+def _shard_exchange_fn(plan: MoEDispatchPlan):
+    """The per-chunk exchange callable for the shard body.
+
+    Plan-backed dispatch embeds the backing ``AlltoallvPlan``'s shard fn
+    (INIT-baked tables, identity fast path); otherwise the table-free
+    uniform exchange runs with the plan's static chunk capacity.  Either
+    way the callable maps the bucketed ``[EP * chunk_peer_rows, D]`` layout
+    to itself.  Returns None when there is no EP axis (local FFN only).
+    """
+    if plan.axis is None or plan.ep_size == 1:
+        return None
+    if plan.a2a is not None:
+        return plan.a2a.embed()
+    # build() guarantees variant == "fence_hierarchy" implies hier_axes;
+    # a hand-built inconsistent plan fails loudly inside the exchange.
+    variant = plan.variant
+    if isinstance(plan.axis, tuple):
+        mesh = current_mesh()
+        sizes = tuple(int(mesh.shape[a]) for a in plan.axis)
+    else:
+        sizes = (plan.ep_size,)
+    return lambda b: core_variants.uniform_bucketed_exchange(
+        b, variant, plan.axis, plan.chunk_peer_rows, sizes)
+
+
 def _a2a_shard_body(tokens, router_w, w_gate, w_up, w_down,
                     *, plan: MoEDispatchPlan, persistent: bool,
                     mesh_axes: tuple[str, ...]):
@@ -193,6 +338,13 @@ def _a2a_shard_body(tokens, router_w, w_gate, w_up, w_down,
 
     tokens: [T_shard, D] this (pod, data) shard's tokens, replicated over the
     model axis; the body first chunks them across the EP axis.
+
+    With ``plan.overlap_chunks > 1`` the capacity axis is split into chunks
+    and the three hops are software-pipelined (the in-graph analogue of
+    ``AlltoallvPlan.start_pipelined``): chunk m+1's dispatch exchange is
+    issued *before* chunk m's expert FFN, so async collectives overlap the
+    compute.  The chunks partition the capacity axis and the FFN is
+    row-independent, so any depth is bit-identical to depth 1.
     """
     d = tokens.shape[1]
     ep, e_loc, cap = plan.ep_size, plan.e_local, plan.capacity
@@ -224,43 +376,41 @@ def _a2a_shard_body(tokens, router_w, w_gate, w_up, w_down,
         one = (rdispls[-1] >= 0).astype(packed.dtype)
         packed = packed * one
 
-    # alltoallv over the EP axis.  The per-peer bucket is e_local slots of C
-    # rows = plan.peer_rows rows — the uniform capacity every exchange
-    # schedule below shares.
-    if axis is None or ep == 1:
-        exchanged = packed
-    elif plan.variant == "lock":
-        exchanged = core_variants.lock_exchange(packed, axis, ep,
-                                                plan.peer_rows, None, "ring")
-    elif plan.variant == "fence_hierarchy" and plan.hier_axes:
-        o_ax, i_ax = plan.hier_axes
-        mesh = current_mesh()
-        exchanged = core_variants.hierarchy_exchange(
-            packed, o_ax, i_ax, int(mesh.shape[o_ax]), int(mesh.shape[i_ax]),
-            plan.peer_rows)
-    else:
-        exchanged = core_variants.fence_exchange(packed, axis)
+    # alltoallv over the EP axis.  Each per-peer chunk bucket is e_local
+    # slots of chunk_capacity rows = plan.chunk_peer_rows rows — the uniform
+    # capacity the exchange (and the backing plan's pattern) is built on.
+    exchange = _shard_exchange_fn(plan)
+    n_chunks = plan.overlap_chunks if exchange is not None else 1
+    ck = cap // n_chunks
+    packed4 = packed.reshape(ep, e_loc, cap, d)
 
-    # regroup: [ep, e_loc, cap, D] -> [e_loc, ep*cap, D]
-    h = exchanged.reshape(ep, e_loc, cap, d).transpose(1, 0, 2, 3)
-    h = h.reshape(e_loc, ep * cap, d)
-    h = _expert_ffn(h, w_gate, w_up, w_down)
+    def dispatch_chunk(c):
+        blk = jax.lax.slice_in_dim(packed4, c * ck, (c + 1) * ck, axis=2)
+        blk = blk.reshape(ep * e_loc * ck, d)
+        return exchange(blk) if exchange is not None else blk
 
-    # reverse path (all_to_all is an involution on the bucket layout)
-    back = h.reshape(e_loc, ep, cap, d).transpose(1, 0, 2, 3).reshape(ep * e_loc * cap, d)
-    if axis is None or ep == 1:
-        returned = back
-    elif plan.variant == "lock":
-        returned = core_variants.lock_exchange(back, axis, ep,
-                                               plan.peer_rows, None, "ring")
-    elif plan.variant == "fence_hierarchy" and plan.hier_axes:
-        o_ax, i_ax = plan.hier_axes
-        mesh = current_mesh()
-        returned = core_variants.hierarchy_exchange(
-            back, o_ax, i_ax, int(mesh.shape[o_ax]), int(mesh.shape[i_ax]),
-            plan.peer_rows)
-    else:
-        returned = core_variants.fence_exchange(back, axis)
+    def ffn_combine_chunk(xch):
+        # regroup: [ep, e_loc, ck, D] -> [e_loc, ep*ck, D], expert FFN,
+        # then the reverse exchange (all_to_all is an involution on the
+        # bucket layout).
+        h = xch.reshape(ep, e_loc, ck, d).transpose(1, 0, 2, 3)
+        h = h.reshape(e_loc, ep * ck, d)
+        h = _expert_ffn(h, w_gate, w_up, w_down)
+        back = h.reshape(e_loc, ep, ck, d).transpose(1, 0, 2, 3)
+        back = back.reshape(ep * e_loc * ck, d)
+        out = exchange(back) if exchange is not None else back
+        return out.reshape(ep, e_loc, ck, d)
+
+    # Software pipeline: issue chunk c+1's dispatch before chunk c's FFN.
+    dispatched = [None] * n_chunks
+    dispatched[0] = dispatch_chunk(0)
+    outs = []
+    for c in range(n_chunks):
+        if c + 1 < n_chunks:
+            dispatched[c + 1] = dispatch_chunk(c + 1)
+        outs.append(ffn_combine_chunk(dispatched[c]))
+    returned = (outs[0] if n_chunks == 1
+                else jnp.concatenate(outs, axis=2)).reshape(ep * e_loc * cap, d)
 
     # combine: gather my entries back out of the returned buckets
     padded = jnp.concatenate([returned, jnp.zeros((8, d), returned.dtype)], axis=0)
@@ -314,15 +464,10 @@ def apply_moe(params: dict, x: jax.Array, moe: MoEConfig,
     mesh = current_mesh()
 
     if plan is None:
-        # tokens per (pod, data) shard under the active batch rules
-        dp = 1
-        if mesh is not None:
-            spec = resolve(("batch",), (b * s,))
-            axes = spec[0] if len(spec) else None
-            if axes:
-                for a in ((axes,) if isinstance(axes, str) else axes):
-                    dp *= int(mesh.shape[a])
-        plan = MoEDispatchPlan.build(moe, max((b * s) // dp, 1), mesh)
+        # tokens per batch shard under the active batch rules
+        dp = batch_ways(b * s, mesh)
+        plan = MoEDispatchPlan.build(moe, max((b * s) // dp, 1), mesh,
+                                     d_model=d, dtype=x2d.dtype)
 
     if moe.dispatch == "gspmd" or plan.axis is None or mesh is None:
         y, aux = _gspmd_dispatch(x2d, b * s, params, moe, plan)

@@ -67,14 +67,19 @@ def _head_exchange(packed: jax.Array, plan: UlyssesPlan) -> jax.Array:
     """Bucketed [P*B, ...] exchange: flat fence epoch, or the
     leader-combined hierarchical schedule on a grouped (outer, inner) mesh
     (bit-identical output; the cross-group message count drops from
-    O(P * P_outer) to O(P_outer^2))."""
+    O(P * P_outer) to O(P_outer^2)).  Routed through the shared
+    uniform-bucket exchange switch (``core.variants``) — the same table-free
+    path MoE dispatch falls back to when it has no backing plan; the
+    feature shape here varies per call site (seq x head slices), so there
+    is no frozen pattern for a table-backed plan to key on."""
+    variant = "fence_hierarchy" if plan.hier else "fence"
     if plan.hier:
         mesh = current_mesh()
-        o_ax, i_ax = plan.axis
-        return core_variants.hierarchy_exchange(
-            packed, o_ax, i_ax, int(mesh.shape[o_ax]), int(mesh.shape[i_ax]),
-            packed.shape[0] // plan.p)
-    return core_variants.fence_exchange(packed, plan.axis)
+        sizes = tuple(int(mesh.shape[a]) for a in plan.axis)
+    else:
+        sizes = (plan.p,)
+    return core_variants.uniform_bucketed_exchange(
+        packed, variant, plan.axis, packed.shape[0] // plan.p, sizes)
 
 
 def _seq_to_heads(x: jax.Array, plan: UlyssesPlan) -> jax.Array:

@@ -70,6 +70,24 @@ PURE_DP_RULES = dict(
     experts=None, d_inner=None,
 )
 
+# Hierarchical expert parallelism: experts widen to the (pod, model) axis
+# pair so EP spans pods, and the MoE dispatch plan derives its axis pair
+# from this rule (``a2a_variant="fence_hierarchy"`` then routes the
+# exchange through the leader-combined schedule: O((EP/g)^2) cross-pod
+# messages per layer instead of O(EP^2/g)).  Batch stays on the data axis
+# only — the pod axis now carries experts, not data parallelism.
+HIER_EP_RULES = dict(DEFAULT_RULES, experts=("pod", "model"),
+                     batch=("data",))
+
+# Launch-profile registry (``--rules`` on the launchers).
+RULE_PROFILES: dict[str, dict] = {
+    "default": DEFAULT_RULES,
+    "long_context": LONG_CONTEXT_RULES,
+    "decode": DECODE_RULES,
+    "pure_dp": PURE_DP_RULES,
+    "hier_ep": HIER_EP_RULES,
+}
+
 
 class _Ctx(threading.local):
     def __init__(self):
@@ -104,6 +122,11 @@ def use_mesh(mesh: Optional[Mesh]):
 
 def current_mesh() -> Optional[Mesh]:
     return _CTX.mesh
+
+
+def active_rules() -> dict:
+    """The logical-axis rule table currently in effect (a copy)."""
+    return dict(_CTX.rules)
 
 
 def resolve(logical_axes: Sequence[Optional[str]],
@@ -143,6 +166,26 @@ def resolve(logical_axes: Sequence[Optional[str]],
     while out and out[-1] is None:
         out.pop()
     return P(*out)
+
+
+def batch_ways(n: int, mesh: Optional[Mesh] = None) -> int:
+    """Ways a batch dim of size ``n`` actually shards under the ACTIVE
+    rules (divisibility-aware).  The single source of truth for MoE
+    capacity sizing: both the bundle builders and the plan-less
+    ``apply_moe`` fallback divide token counts by this, so a rule profile
+    that moves batch off an axis (hier_ep puts experts on pod) or a batch
+    dim that cannot split an axis can never desynchronize the two."""
+    mesh = mesh if mesh is not None else _CTX.mesh
+    if mesh is None:
+        return 1
+    with use_mesh(mesh):
+        spec = resolve(("batch",), (n,))
+    axes = spec[0] if len(spec) else None
+    ways = 1
+    if axes:
+        for a in ((axes,) if isinstance(axes, str) else axes):
+            ways *= int(mesh.shape[a])
+    return ways
 
 
 def cs(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:

@@ -39,9 +39,11 @@ class ServeEngine:
         ``plan_store=None``; pass ``store=`` explicitly at call sites that
         must not share it).  With it set, any persistent-plan dispatch path
         in this process warm-starts from artifacts of previous serving
-        replicas: autotune sweeps and table bakes are skipped.  The
-        built-in MoE dispatch currently exchanges in-graph and does not
-        consult the store (see ROADMAP)."""
+        replicas: autotune sweeps and table bakes are skipped.  That
+        includes the built-in MoE dispatch — the prefill and decode bundles
+        below build plan-backed EP dispatch plans whose backing
+        ``AlltoallvPlan``s consult the store at INIT (``self.moe_plan``
+        exposes the decode bundle's plan for inspection)."""
         self.cfg = cfg
         self.mesh = mesh
         self.batch = batch
@@ -55,6 +57,10 @@ class ServeEngine:
         shape_d = ShapeConfig("serve_decode", "decode", max_seq, batch)
         self.prefill_bundle = steps_mod.make_prefill_bundle(cfg, shape_p, mesh)
         self.decode_bundle = steps_mod.make_decode_bundle(cfg, shape_d, mesh)
+        # EP dispatch plan ownership (None for non-MoE families): the
+        # decode bundle's plan-backed MoE dispatch plan, built above after
+        # the store was configured, so its INIT saw the warm tier.
+        self.moe_plan = self.decode_bundle.meta.get("moe_plan")
         with self.decode_bundle.trace_context():
             if params is None:
                 params, _ = model_api.init_model(jax.random.key(seed), cfg)

@@ -225,8 +225,57 @@ def pallas_pack_in_plan():
 
 
 @case
+def embedded_plan_parity():
+    """plan.embed() — the epoch body hosted inside a foreign shard_map —
+    produces the same bytes as the standalone START path for every
+    (variant, pack_impl) combination on a ragged (non-identity) pattern,
+    with padding zeroed (embedded plans have no window to write through)."""
+    from repro.core import alltoallv_init
+    from repro.launch.mesh import make_host_mesh
+
+    p = len(jax.devices())
+    counts, bufs, expect, rc, send_rows, recv_rows = _setup_pattern(p, seed=31,
+                                                                    max_count=11)
+    mesh = make_host_mesh(p)
+    x = jax.device_put(jnp.asarray(bufs.reshape(p * send_rows, 4)),
+                       NamedSharding(mesh, P("x")))
+    for variant, impl in [("fence", "jnp"), ("fence", "pallas"),
+                          ("fence", "fused"), ("lock", "jnp"),
+                          ("lock", "pallas")]:
+        plan = alltoallv_init(counts, (4,), jnp.float32, mesh, axis="x",
+                              variant=variant, pack_impl=impl)
+        assert not plan.identity_maps
+        want = np.asarray(plan.wait(plan.start(x))).reshape(p, recv_rows, 4)
+        fn = shard_map(plan.embed(), mesh=mesh, in_specs=P("x"),
+                       out_specs=P("x"), check_vma=False)
+        got = np.asarray(jax.jit(fn)(x)).reshape(p, recv_rows, 4)
+        for r in range(p):
+            n = int(rc[r].sum())
+            np.testing.assert_array_equal(got[r, :n], want[r, :n],
+                                          err_msg=f"{variant}/{impl}")
+            assert not np.abs(got[r, n:]).any(), (variant, impl)
+
+    if p % 2 == 0:
+        from repro.launch.mesh import make_mesh
+        mesh2 = make_mesh((2, p // 2), ("o", "i"))
+        x2 = jax.device_put(jnp.asarray(bufs.reshape(p * send_rows, 4)),
+                            NamedSharding(mesh2, P(("o", "i"))))
+        plan = alltoallv_init(counts, (4,), jnp.float32, mesh2,
+                              axis=("o", "i"), variant="fence_hierarchy")
+        want = np.asarray(plan.wait(plan.start(x2))).reshape(p, recv_rows, 4)
+        fn = shard_map(plan.embed(), mesh=mesh2, in_specs=P(("o", "i")),
+                       out_specs=P(("o", "i")), check_vma=False)
+        got = np.asarray(jax.jit(fn)(x2)).reshape(p, recv_rows, 4)
+        for r in range(p):
+            n = int(rc[r].sum())
+            np.testing.assert_array_equal(got[r, :n], want[r, :n],
+                                          err_msg="fence_hierarchy")
+
+
+@case
 def moe_dispatch_distributed():
-    """persistent_a2a == nonpersistent_a2a == gspmd on a (data, model) mesh."""
+    """persistent_a2a (plan-backed) == nonpersistent_a2a == gspmd on a
+    (data, model) mesh."""
     import dataclasses
 
     from repro.configs.base import MoEConfig
@@ -248,7 +297,10 @@ def moe_dispatch_distributed():
         outs = {}
         for dispatch in ("gspmd", "persistent_a2a", "nonpersistent_a2a"):
             mcfg = dataclasses.replace(base, dispatch=dispatch)
-            plan = moe_mod.MoEDispatchPlan.build(mcfg, tokens // 2, mesh)
+            plan = moe_mod.MoEDispatchPlan.build(mcfg, tokens // 2, mesh,
+                                                 d_model=d_model,
+                                                 dtype=jnp.float32)
+            assert plan.plan_backed == (dispatch == "persistent_a2a")
             y, aux = jax.jit(lambda xx, m=mcfg, pl=plan:
                              moe_mod.apply_moe(params, xx, m, pl))(x)
             outs[dispatch] = np.asarray(y)
@@ -257,6 +309,205 @@ def moe_dispatch_distributed():
         np.testing.assert_allclose(outs["persistent_a2a"],
                                    outs["nonpersistent_a2a"],
                                    rtol=2e-4, atol=2e-5)
+
+
+def _routed_moe_setup(pattern, d_model, tokens, n_experts, seed=0):
+    """MoE params + inputs whose *routing* follows a controlled pattern.
+
+    The router weight is (scaled) identity over the first ``n_experts``
+    feature dims, so spiking ``x[t, pref(t)]`` steers token t to expert
+    pref(t): ``dense`` spreads tokens uniformly, ``banded`` sends each
+    token block to its own expert neighborhood (banded peer counts),
+    ``skewed`` funnels 70% of tokens to expert 0 (hot-receiver skew).
+    """
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((tokens, d_model)) * 0.1).astype(np.float32)
+    if pattern == "dense":
+        pref = rng.integers(0, n_experts, tokens)
+    elif pattern == "banded":
+        pref = ((np.arange(tokens) * n_experts) // tokens
+                + rng.integers(0, 2, tokens)) % n_experts
+    elif pattern == "skewed":
+        pref = np.where(rng.random(tokens) < 0.7, 0,
+                        rng.integers(0, n_experts, tokens))
+    else:
+        raise ValueError(pattern)
+    x[np.arange(tokens), pref] += 4.0
+    router = (rng.standard_normal((d_model, n_experts)) * 0.05).astype(np.float32)
+    router[:n_experts, :n_experts] += 5.0 * np.eye(n_experts, dtype=np.float32)
+    return x, router
+
+
+@case
+def moe_plan_backed_parity():
+    """Plan-backed persistent dispatch vs the gspmd oracle under controlled
+    dense / banded / skewed routing, on both (2, 4) and (4, 2)
+    (data, model) meshes — and bit-identical to the table-free
+    persistent path (the embedded identity plan compiles to the same
+    exchange)."""
+    import dataclasses
+
+    from repro.configs.base import MoEConfig
+    from repro.launch.mesh import make_mesh
+    from repro.models import moe as moe_mod
+    from repro.parallel.sharding import DEFAULT_RULES, ParamFactory, axis_rules
+
+    d_model, tokens, e = 64, 256, 8
+    # capacity_factor large enough that neither router drops under the 70%
+    # skew pattern: gspmd routes globally (capacity C*ep) while persistent
+    # routes per EP chunk (capacity C each) — with drops the two
+    # implementations legitimately keep different tokens, so drop-free
+    # capacity keeps this a parity test of the *exchange*.
+    base = MoEConfig(n_experts=e, top_k=2, d_expert=32, capacity_factor=16.0)
+    for shape in [(2, 4), (4, 2)]:
+        mesh = make_mesh(shape, ("data", "model"))
+        with axis_rules(DEFAULT_RULES, mesh):
+            f = ParamFactory(jax.random.key(0), jnp.float32)
+            moe_mod.init_moe(f.scope("moe"), d_model, base)
+            params = f.params["moe"]
+            for pattern in ("dense", "banded", "skewed"):
+                xnp, router = _routed_moe_setup(pattern, d_model,
+                                                tokens, e, seed=3)
+                params = dict(params, router=jnp.asarray(router))
+                x = jax.device_put(
+                    jnp.asarray(xnp.reshape(shape[0], tokens // shape[0],
+                                            d_model)),
+                    NamedSharding(mesh, P("data", None, None)))
+                outs = {}
+                for name, dispatch, kw in [
+                        ("gspmd", "gspmd", {}),
+                        ("plan_backed", "persistent_a2a",
+                         {"d_model": d_model, "dtype": jnp.float32}),
+                        ("table_free", "persistent_a2a",
+                         {"plan_backed": False})]:
+                    mcfg = dataclasses.replace(base, dispatch=dispatch)
+                    plan = moe_mod.MoEDispatchPlan.build(
+                        mcfg, tokens // shape[0], mesh, **kw)
+                    y, _ = jax.jit(lambda xx, m=mcfg, pl=plan:
+                                   moe_mod.apply_moe(params, xx, m, pl))(x)
+                    outs[name] = np.asarray(y)
+                assert plan.ep_size == shape[1]
+                np.testing.assert_allclose(
+                    outs["plan_backed"], outs["gspmd"], rtol=2e-4, atol=2e-5,
+                    err_msg=f"{pattern} mesh={shape}")
+                np.testing.assert_array_equal(
+                    outs["plan_backed"], outs["table_free"],
+                    err_msg=f"{pattern} mesh={shape}")
+
+
+@case
+def moe_overlap_invariance():
+    """The chunked dispatch->FFN->combine pipeline is BIT-identical across
+    overlap depths (the chunks partition the capacity axis and the expert
+    FFN is row-independent), and each depth's backing plan is a uniform
+    identity-map pattern with the chunk geometry."""
+    import dataclasses
+
+    from repro.configs.base import MoEConfig
+    from repro.launch.mesh import make_mesh
+    from repro.models import moe as moe_mod
+    from repro.parallel.sharding import DEFAULT_RULES, ParamFactory, axis_rules
+
+    mesh = make_mesh((2, 4), ("data", "model"))
+    d_model, tokens = 64, 256
+    base = MoEConfig(n_experts=8, top_k=2, d_expert=32, capacity_factor=8.0,
+                     dispatch="persistent_a2a")
+    with axis_rules(DEFAULT_RULES, mesh):
+        f = ParamFactory(jax.random.key(0), jnp.float32)
+        moe_mod.init_moe(f.scope("moe"), d_model, base)
+        params = f.params["moe"]
+        x = jax.device_put(
+            jnp.asarray(np.random.default_rng(7).standard_normal(
+                (2, tokens // 2, d_model)), jnp.float32),
+            NamedSharding(mesh, P("data", None, None)))
+        outs = {}
+        for k in (1, 2, 4):
+            plan = moe_mod.MoEDispatchPlan.build(
+                base, tokens // 2, mesh, d_model=d_model, dtype=jnp.float32,
+                overlap_chunks=k)
+            assert plan.overlap_chunks == k, (k, plan.overlap_chunks)
+            assert plan.plan_backed and plan.a2a.identity_maps
+            assert plan.a2a.p == plan.ep_size
+            assert plan.a2a.capacity == plan.chunk_peer_rows
+            y, _ = jax.jit(lambda xx, pl=plan:
+                           moe_mod.apply_moe(params, xx, base, pl))(x)
+            outs[k] = np.asarray(y)
+        np.testing.assert_array_equal(outs[1], outs[2])
+        np.testing.assert_array_equal(outs[1], outs[4])
+    print("overlap invariance: depths bit-identical, cap =", plan.capacity)
+
+
+@case
+def moe_planstore_warm_start():
+    """The ROADMAP '--plan-store dead flag' contract, closed: a second
+    process's EP dispatch INIT (emulated with a fresh PlanCache + fresh
+    store handle over the same directory) is warm — store hits > 0, ZERO
+    autotune measurement bursts, ZERO host-side table bakes — and resolves
+    to the same autotuned variant with an identical dispatch result."""
+    import dataclasses
+    import tempfile
+
+    from repro.configs.base import MoEConfig
+    from repro.core import INIT_STATS, PlanCache
+    from repro.launch.mesh import make_mesh
+    from repro.models import moe as moe_mod
+    from repro.parallel.sharding import DEFAULT_RULES, ParamFactory, axis_rules
+    from repro.planstore import PlanStore
+
+    mesh = make_mesh((2, 4), ("data", "model"))
+    d_model, tokens = 64, 256
+    base = MoEConfig(n_experts=8, top_k=2, d_expert=32, capacity_factor=8.0,
+                     dispatch="persistent_a2a", a2a_variant="auto")
+    # "auto" on a REAL persistent EP exchange demands the plan-backed form
+    # (there is a pattern to measure and no way to resolve it table-free).
+    with axis_rules(DEFAULT_RULES, mesh):
+        try:
+            moe_mod.MoEDispatchPlan.build(base, tokens // 2, mesh,
+                                          plan_backed=False)
+            raise AssertionError("a2a_variant='auto' without plan backing "
+                                 "must raise on a live EP exchange")
+        except ValueError:
+            pass
+    with tempfile.TemporaryDirectory() as d, axis_rules(DEFAULT_RULES, mesh):
+        f = ParamFactory(jax.random.key(0), jnp.float32)
+        moe_mod.init_moe(f.scope("moe"), d_model, base)
+        params = f.params["moe"]
+        x = jax.device_put(
+            jnp.asarray(np.random.default_rng(0).standard_normal(
+                (2, tokens // 2, d_model)), jnp.float32),
+            NamedSharding(mesh, P("data", None, None)))
+
+        # --- process 1: cold EP INIT (autotunes, bakes, publishes) -------
+        INIT_STATS.reset()
+        plan = moe_mod.MoEDispatchPlan.build(
+            base, tokens // 2, mesh, d_model=d_model, dtype=jnp.float32,
+            store=PlanStore(d), cache=PlanCache(), autotune_iters=4)
+        s1 = INIT_STATS.as_dict()
+        assert plan.plan_backed and plan.variant in ("fence", "lock")
+        assert s1["autotune_bursts"] > 0, s1
+        assert s1["table_bakes"] > 0, s1
+        assert s1["store_puts"] > 0 and s1["warm_inits"] == 0, s1
+        bk = plan.a2a.auto_choice["breakeven"]
+        assert bk["sweep_seconds"] > 0 and bk["t_best"] <= bk["t_second"]
+        y1, _ = jax.jit(lambda xx, pl=plan:
+                        moe_mod.apply_moe(params, xx, base, pl))(x)
+
+        # --- process 2: warm EP INIT (fresh in-memory tiers, same disk) --
+        INIT_STATS.reset()
+        plan2 = moe_mod.MoEDispatchPlan.build(
+            base, tokens // 2, mesh, d_model=d_model, dtype=jnp.float32,
+            store=PlanStore(d), cache=PlanCache(), autotune_iters=4)
+        s2 = INIT_STATS.as_dict()
+        assert s2["autotune_bursts"] == 0, s2
+        assert s2["table_bakes"] == 0, s2
+        assert s2["store_hits"] > 0 and s2["warm_inits"] >= 1, s2
+        assert plan2.a2a.warm_loaded and plan2.variant == plan.variant
+        assert plan2.a2a.auto_choice["variant"] == \
+            plan.a2a.auto_choice["variant"]
+        y2, _ = jax.jit(lambda xx, pl=plan2:
+                        moe_mod.apply_moe(params, xx, base, pl))(x)
+        np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    print("moe planstore warm-start:", s2)
 
 
 @case
@@ -809,21 +1060,25 @@ def gspmd_gather_miscompile_guard():
 
 @case
 def moe_hier_dispatch():
-    """MoE expert parallelism spanning a (pod, model) axis pair: flat-fence
-    EP, leader-combined hierarchical EP, and gspmd all agree."""
+    """MoE expert parallelism spanning a (pod, model) axis pair *via the
+    first-class launch profile* (``sharding.HIER_EP_RULES``, the
+    ``--rules hier_ep`` registry entry — no test-local rule table): the
+    dispatch plan derives its EP axis pair from the active experts rule,
+    and flat-fence EP, leader-combined hierarchical EP (plan-backed,
+    INIT-baked two-stage tables), and gspmd all agree."""
     import dataclasses
 
     from repro.configs.base import MoEConfig
     from repro.launch.mesh import make_mesh
     from repro.models import moe as moe_mod
-    from repro.parallel.sharding import DEFAULT_RULES, ParamFactory, axis_rules
+    from repro.parallel.sharding import (HIER_EP_RULES, RULE_PROFILES,
+                                         ParamFactory, axis_rules)
 
     mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
-    # EP spans (pod, model): widen the experts rule; batch stays on data.
-    rules = dict(DEFAULT_RULES, experts=("pod", "model"), batch=("data",))
+    assert RULE_PROFILES["hier_ep"] is HIER_EP_RULES
     d_model, tokens = 64, 256
     base = MoEConfig(n_experts=8, top_k=2, d_expert=32, capacity_factor=8.0)
-    with axis_rules(rules, mesh):
+    with axis_rules(HIER_EP_RULES, mesh):
         f = ParamFactory(jax.random.key(0), jnp.float32)
         moe_mod.init_moe(f.scope("moe"), d_model, base)
         params = f.params["moe"]
@@ -838,11 +1093,17 @@ def moe_hier_dispatch():
                                          "fence_hierarchy")]:
             mcfg = dataclasses.replace(base, dispatch=dispatch,
                                        a2a_variant=variant)
+            # EP axis pair comes from the profile's experts rule, not a
+            # hier_axes override.
             plan = moe_mod.MoEDispatchPlan.build(
-                mcfg, tokens // 2, mesh, hier_axes=("pod", "model"))
+                mcfg, tokens // 2, mesh, d_model=d_model, dtype=jnp.float32)
             assert plan.ep_size == 4 and plan.axis == ("pod", "model")
-            if name == "hier":
-                assert plan.hier_axes == ("pod", "model")
+            assert plan.hier_axes == ("pod", "model")
+            if dispatch == "persistent_a2a":
+                assert plan.plan_backed
+                assert plan.a2a.spec.variant == variant
+                if name == "hier":
+                    assert plan.a2a.hier_schedule is not None
             y, aux = jax.jit(lambda xx, m=mcfg, pl=plan:
                              moe_mod.apply_moe(params, xx, m, pl))(x)
             outs[name] = np.asarray(y)
@@ -850,6 +1111,18 @@ def moe_hier_dispatch():
                                    rtol=2e-4, atol=2e-5)
         np.testing.assert_allclose(outs["hier"], outs["flat"],
                                    rtol=2e-4, atol=2e-5)
+
+        # Fused leader stage inside the embedded plan (Pallas kernel on TPU,
+        # its jnp ppermute reference here) is bit-identical to the jnp path.
+        mcfg = dataclasses.replace(base, dispatch="persistent_a2a",
+                                   a2a_variant="fence_hierarchy")
+        plan_f = moe_mod.MoEDispatchPlan.build(
+            mcfg, tokens // 2, mesh, d_model=d_model, dtype=jnp.float32,
+            pack_impl="fused")
+        assert plan_f.a2a.spec.pack_impl == "fused"
+        y_f, _ = jax.jit(lambda xx, m=mcfg, pl=plan_f:
+                         moe_mod.apply_moe(params, xx, m, pl))(x)
+        np.testing.assert_array_equal(np.asarray(y_f), outs["hier"])
 
 
 @case

@@ -43,6 +43,16 @@ class Trainer:
         self.cfg = bundle.meta["cfg"]
         self.shape = bundle.meta["shape"]
         self.mesh = bundle.mesh
+        # The trainer owns the EP dispatch plan for reporting: with a
+        # plan-backed MoE dispatch the backing AlltoallvPlan was built (or
+        # warm-started from the plan store) during bundle construction.
+        self.moe_plan = bundle.meta.get("moe_plan")
+        if self.moe_plan is not None and getattr(self.moe_plan, "a2a", None) \
+                is not None:
+            log.info("EP dispatch plan-backed: variant=%s warm=%s "
+                     "overlap_chunks=%d",
+                     self.moe_plan.variant, self.moe_plan.a2a.warm_loaded,
+                     self.moe_plan.overlap_chunks)
         self.pipe = DataPipeline(self.cfg, self.shape.seq_len,
                                  self.shape.global_batch, self.mesh,
                                  seed=1234 + tcfg.seed)
@@ -91,7 +101,10 @@ class Trainer:
     # -- driving -------------------------------------------------------------
     def _run_one(self, step: int) -> dict:
         self.straggler.start()
-        batch = self.pipe.batch_at(step)
+        # Resolve batch shardings under the bundle's rule profile (a
+        # non-default profile, e.g. hier_ep, maps "batch" differently).
+        with self.bundle.trace_context():
+            batch = self.pipe.batch_at(step)
         self.params, self.opt_state, metrics = self.bundle.jitted(
             self.params, self.opt_state, batch, jnp.int32(step))
         jax.block_until_ready(metrics)
@@ -132,4 +145,22 @@ class Trainer:
             self.ckpt.wait()
         return {"final_step": final,
                 "last_metrics": self.history[-1] if self.history else {},
-                "stragglers": len(self.straggler.flagged)}
+                "stragglers": len(self.straggler.flagged),
+                "ep_dispatch": self.ep_dispatch_report()}
+
+    def ep_dispatch_report(self) -> dict | None:
+        """INIT provenance of the EP dispatch plan (None for non-MoE runs):
+        whether it is plan-backed, which variant won, and whether the
+        backing plan warm-started from the store — the observable half of
+        the ``--plan-store`` contract the CI warm-EP job asserts on."""
+        if self.moe_plan is None:
+            return None
+        a2a = getattr(self.moe_plan, "a2a", None)
+        return {
+            "plan_backed": a2a is not None,
+            "variant": self.moe_plan.variant,
+            "overlap_chunks": self.moe_plan.overlap_chunks,
+            "warm_loaded": bool(a2a.warm_loaded) if a2a is not None else False,
+            "auto_choice": getattr(a2a, "auto_choice", None)
+            if a2a is not None else None,
+        }

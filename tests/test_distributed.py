@@ -84,6 +84,22 @@ def test_moe_dispatch_distributed(dist):
     dist("moe_dispatch_distributed", devices=8)
 
 
+def test_embedded_plan_parity(dist):
+    dist("embedded_plan_parity", devices=4)
+
+
+def test_moe_plan_backed_parity(dist):
+    dist("moe_plan_backed_parity", devices=8)
+
+
+def test_moe_overlap_invariance(dist):
+    dist("moe_overlap_invariance", devices=8)
+
+
+def test_moe_planstore_warm_start(dist):
+    dist("moe_planstore_warm_start", devices=8)
+
+
 def test_compression_distributed(dist):
     dist("compression_distributed", devices=4)
 
