@@ -66,9 +66,12 @@ def main(iters=30, out="experiments/bench/breakeven.csv", json_out=None):
         from repro.planstore import default_store
         store = default_store()
         if store is not None:
-            store.attach_breakeven(plan.signature, {
-                "t_init": be.t_init, "t_persist": be.t_persist,
-                "t_mpi": be.t_mpi, "n_breakeven": be.n_breakeven})
+            try:
+                store.attach_breakeven(plan.signature, {
+                    "t_init": be.t_init, "t_persist": be.t_persist,
+                    "t_mpi": be.t_mpi, "n_breakeven": be.n_breakeven})
+            except OSError as e:      # flaky remote / CAS churn: best-effort
+                print(f"# breakeven fit not persisted: {e}", flush=True)
     csv.save()
     if json_out:
         csv.save_json(json_out)

@@ -59,10 +59,11 @@ def main(argv=None) -> int:
     p.add_argument("--json", action="store_true",
                    help="write per-benchmark us_per_call results to "
                         "experiments/bench/BENCH_<name>.json")
-    p.add_argument("--plan-store", default=None, metavar="DIR",
-                   help="persistent plan-store directory exported to every "
-                        "benchmark subprocess (REPRO_PLANSTORE_DIR): INITs "
-                        "warm-start from artifacts of previous runs")
+    p.add_argument("--plan-store", default=None, metavar="DIR_OR_URL",
+                   help="persistent plan store exported to every benchmark "
+                        "subprocess (REPRO_PLANSTORE_DIR): a directory, "
+                        "fsremote://PATH, or tiered:local=DIR,remote=URL; "
+                        "INITs warm-start from artifacts of previous runs")
     args = p.parse_args(argv)
 
     only = set(args.only.split(",")) if args.only else None
@@ -70,7 +71,12 @@ def main(argv=None) -> int:
                PYTHONPATH=SRC + os.pathsep + HERE
                + os.pathsep + os.environ.get("PYTHONPATH", ""))
     if args.plan_store:
-        env["REPRO_PLANSTORE_DIR"] = os.path.abspath(args.plan_store)
+        # Store URLs pass through verbatim; a plain directory gets anchored
+        # against benchmark subprocess cwds.
+        is_url = args.plan_store.startswith(("fsremote://", "tiered:",
+                                             "file://"))
+        env["REPRO_PLANSTORE_DIR"] = (
+            args.plan_store if is_url else os.path.abspath(args.plan_store))
     os.makedirs("experiments/bench", exist_ok=True)
 
     failures = []

@@ -9,7 +9,8 @@ Public surface:
 
 from .api import (alltoallv_init, global_plan_cache, init_stats,
                   reset_global_plan_cache, reset_init_stats)
-from ._init_stats import INIT_STATS
+from ._init_stats import (INIT_STATS, capture_init_requests,
+                          start_init_capture, stop_init_capture)
 from .plan import AlltoallvPlan, AlltoallvSpec, PlanCache, VARIANTS, WarmStartError
 from .window import Window, WindowCache
 from . import autotune, baseline, breakeven, metadata, reference, variants
@@ -17,6 +18,7 @@ from . import autotune, baseline, breakeven, metadata, reference, variants
 __all__ = [
     "alltoallv_init", "global_plan_cache", "reset_global_plan_cache",
     "init_stats", "reset_init_stats", "INIT_STATS",
+    "capture_init_requests", "start_init_capture", "stop_init_capture",
     "AlltoallvPlan", "AlltoallvSpec", "PlanCache", "VARIANTS",
     "WarmStartError", "Window", "WindowCache",
     "autotune", "baseline", "breakeven", "metadata", "reference", "variants",

@@ -16,6 +16,7 @@ Counters are cumulative per process; ``reset()`` zeroes them (tests and the
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 
 
@@ -40,3 +41,49 @@ class InitStats:
 
 
 INIT_STATS = InitStats()
+
+
+# --- INIT-request capture ----------------------------------------------------
+#
+# The deploy-time prewarm pipeline (``repro.planstore.prewarm``) needs the
+# *requests* behind a run's INITs, not just their counts: every
+# ``alltoallv_init`` call, serialized well enough to be replayed on another
+# host (counts matrix, feature/dtype/axis geometry, variant + knobs,
+# embeddable restriction).  Capture is opt-in and process-global, mirroring
+# the counters above; ``launch/dryrun.py`` brackets each cell with it and
+# writes the records into the cell's JSON artifact.
+
+_CAPTURE: list | None = None
+
+
+def start_init_capture() -> None:
+    """Begin recording ``alltoallv_init`` requests (clears prior capture)."""
+    global _CAPTURE
+    _CAPTURE = []
+
+
+def stop_init_capture() -> list:
+    """Stop recording; returns the captured request records."""
+    global _CAPTURE
+    out, _CAPTURE = (_CAPTURE or []), None
+    return out
+
+
+def capturing_inits() -> bool:
+    return _CAPTURE is not None
+
+
+def record_init_request(rec: dict) -> None:
+    if _CAPTURE is not None:
+        _CAPTURE.append(rec)
+
+
+@contextlib.contextmanager
+def capture_init_requests():
+    """``with capture_init_requests() as reqs: ...`` — ``reqs`` is the live
+    list; it is fully populated when the block exits."""
+    start_init_capture()
+    try:
+        yield _CAPTURE
+    finally:
+        stop_init_capture()

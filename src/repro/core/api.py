@@ -52,7 +52,7 @@ from typing import Sequence
 import jax
 import numpy as np
 
-from ._init_stats import INIT_STATS
+from ._init_stats import INIT_STATS, capturing_inits, record_init_request
 from .plan import AlltoallvPlan, AlltoallvSpec, PlanCache
 from .window import WindowCache
 
@@ -131,6 +131,24 @@ def alltoallv_init(
         pack_impl=pack_impl,
         baked_metadata=baked_metadata,
     )
+    if capturing_inits():
+        # Everything a prewarm host needs to replay this INIT verbatim
+        # (``planstore.prewarm``): the exchange mesh is reconstructible from
+        # axis names + sizes alone — the signature never covers other axes.
+        record_init_request({
+            "send_counts": spec.send_counts.tolist(),
+            "feature_shape": list(spec.feature_shape),
+            "dtype": str(jax.numpy.dtype(dtype)),
+            "axis": list(axis_t),
+            "axis_sizes": [int(mesh.shape[a]) for a in axis_t],
+            "variant": variant,
+            "lock_schedule": spec.lock_schedule,
+            "tile_rows": spec.tile_rows,
+            "pack_impl": spec.pack_impl,
+            "baked_metadata": spec.baked_metadata,
+            "embeddable": bool(embeddable),
+            "autotune_iters": int(autotune_iters),
+        })
     resolved_store = _resolve_store(store)
     if variant == "auto":
         from .autotune import autotune_variant

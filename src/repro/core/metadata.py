@@ -616,9 +616,15 @@ class PatternSignature:
         # factorizations that share axis *names* — a (2, 4) and a (4, 2)
         # grouped mesh bake entirely different two-stage schedules.
         c = _as_counts(send_counts)
+        # Canonical dtype spelling: jnp.float32 (a scalar class), "float32",
+        # and np.dtype("float32") must key identically — the prewarm
+        # pipeline replays captured requests from their JSON form, and a
+        # spelling-sensitive digest would make every replayed artifact
+        # invisible to the process it was prewarmed for.
+        dtype_str = str(np.dtype(dtype))
         h = hashlib.sha1()
         h.update(c.tobytes())
-        h.update(str((tuple(feature_shape), str(dtype), variant, tuple(axis),
+        h.update(str((tuple(feature_shape), dtype_str, variant, tuple(axis),
                       lock_schedule, int(tile_rows), pack_impl,
                       bool(baked_metadata),
                       tuple(int(s) for s in axis_sizes))).encode())
@@ -626,7 +632,7 @@ class PatternSignature:
             digest=h.hexdigest()[:16],
             p=c.shape[0],
             feature_shape=tuple(int(s) for s in feature_shape),
-            dtype=str(dtype),
+            dtype=dtype_str,
             variant=variant,
             axis=tuple(axis),
             total_recv_bytes=int(c.sum()) * row_bytes,

@@ -102,7 +102,10 @@ class WindowCache:
 
     def free(self) -> None:
         for w in self._windows.values():
-            w.buffer = None
+            # release(), not `buffer = None`: the latter only drops slot 0,
+            # leaving every other slot a depth>1 pipelined run materialized
+            # still pinning its device buffer after the cache is "freed".
+            w.release()
         self._windows.clear()
 
     @property

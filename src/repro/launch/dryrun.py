@@ -1,22 +1,34 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (arch x shape) on the production
 meshes, prove memory/sharding coherence, and capture roofline inputs.
 
-The two lines above run before ANY other import — jax locks the device
-count at first init.  512 fake host devices back both the (16,16)
-single-pod mesh (first 256) and the (2,16,16) multi-pod mesh (all 512).
+The ``os.environ`` statement right below the imports runs before ANY jax
+import — jax locks the device count at first init.  512 fake host devices
+(override: ``REPRO_DRYRUN_DEVICES``) back both the (16,16) single-pod mesh
+(first 256) and the (2,16,16) multi-pod mesh (all 512).
 
     PYTHONPATH=src python -m repro.launch.dryrun --mesh both --out experiments/dryrun
     PYTHONPATH=src python -m repro.launch.dryrun --cell olmo-1b:train_4k
+    REPRO_DRYRUN_DEVICES=8 PYTHONPATH=src python -m repro.launch.dryrun \\
+        --cell olmoe-1b-7b:train_4k --reduced --mesh-shape 2,4 \\
+        --seq-len 64 --global-batch 8   # CI prewarm capture
 
 Per cell, writes <out>/<arch>__<shape>__<mesh>.json with:
   memory_analysis (bytes per device), cost_analysis (FLOPs / bytes),
-  per-collective counts + wire bytes, and the derived roofline terms.
+  per-collective counts + wire bytes, the derived roofline terms, and
+  plan_inits — every ``alltoallv_init`` request the cell's bundle issued
+  (``core.capture_init_requests``), the input ``repro.planstore.prewarm``
+  replays at deploy time to prewarm a fleet store.
 Failures (sharding mismatch, compile OOM, unsupported collective) are
 bugs — the run exits nonzero listing them.
 """
+
+import os
+
+# Before ANY jax import (the module docstring above is the only earlier
+# statement, and it touches nothing): jax locks the device count at first
+# init, so the fake-device override must already be in the environment.
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                           + os.environ.get("REPRO_DRYRUN_DEVICES", "512"))
 
 import argparse
 import json
@@ -45,6 +57,14 @@ def _mem_analysis_dict(compiled):
     return out
 
 
+def _cost_analysis_dict(compiled) -> dict:
+    """jax >= 0.5 returns a flat dict; 0.4.x wraps it in a one-element list."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca or {})
+
+
 def dataclasses_replace_wire(colls, wire_corrected: float):
     import dataclasses as _dc
     return _dc.replace(colls, total_wire_bytes=int(wire_corrected))
@@ -68,7 +88,7 @@ def _costs_of(cfg, shape, mesh, bundle_kw=None):
     kw = dict(bundle_kw or {})
     kw.pop("n_micro", None)   # shallow cost variants are exact at n_micro=1
     compiled = steps_mod.make_bundle(cfg, shape, mesh, **kw).compile()
-    cost = {k: float(v) for k, v in dict(compiled.cost_analysis() or {}).items()
+    cost = {k: float(v) for k, v in _cost_analysis_dict(compiled).items()
             if isinstance(v, (int, float))}
     colls = parse_collectives(compiled.as_text())
     return (cost.get("flops", 0.0), cost.get("bytes accessed", 0.0),
@@ -102,13 +122,20 @@ HBM_BUDGET = 15.5 * 2**30   # leave headroom under the 16 GiB v5e HBM
 
 def run_cell(cfg, shape, mesh, mesh_name, out_dir, perf_variant=None,
              bundle_kw=None):
+    from repro.core import start_init_capture, stop_init_capture
     from repro.launch import steps as steps_mod
+    from repro.planstore.prewarm import dedupe_requests
     from repro.roofline import analyze as roofline_mod
     from repro.roofline.hlo import parse_collectives
 
     bundle_kw = dict(bundle_kw or {})
     micro_ladder = [bundle_kw.pop("n_micro", 1), 4, 8] if shape.kind == "train" \
         else [None]
+
+    # Record every alltoallv_init the cell's bundles issue (including the
+    # shallow scan-correction variants — dedup collapses repeats): the
+    # prewarm pipeline replays these at deploy time.
+    start_init_capture()
 
     t_lower = t_compile = 0.0
     compiled = None
@@ -135,8 +162,7 @@ def run_cell(cfg, shape, mesh, mesh_name, out_dir, perf_variant=None,
         bundle_kw["n_micro"] = n_micro_used
 
     mem = _mem_analysis_dict(compiled)
-    cost = dict(compiled.cost_analysis() or {})
-    cost = {k: float(v) for k, v in cost.items()
+    cost = {k: float(v) for k, v in _cost_analysis_dict(compiled).items()
             if isinstance(v, (int, float))}
     colls = parse_collectives(compiled.as_text())
     chips = 1
@@ -145,6 +171,7 @@ def run_cell(cfg, shape, mesh, mesh_name, out_dir, perf_variant=None,
 
     flops_c, bytes_c, wire_c, corr = scan_corrected_costs(
         cfg, shape, mesh, cost, float(colls.total_wire_bytes), bundle_kw)
+    plan_inits = dedupe_requests(stop_init_capture())
     cost_corrected = dict(cost)
     cost_corrected["flops"] = flops_c
     cost_corrected["bytes accessed"] = bytes_c
@@ -168,6 +195,7 @@ def run_cell(cfg, shape, mesh, mesh_name, out_dir, perf_variant=None,
         "collectives": colls.to_json(),
         "collective_wire_bytes_corrected": wire_c,
         "roofline": roof.to_json(),
+        "plan_inits": plan_inits,
     }
     if perf_variant:
         record["perf_variant"] = perf_variant
@@ -182,26 +210,47 @@ def run_cell(cfg, shape, mesh, mesh_name, out_dir, perf_variant=None,
 
 
 def main(argv=None):
-    p = argparse.ArgumentParser()
+    p = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     p.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    p.add_argument("--mesh-shape", default=None, metavar="D,D[,D]",
+                   help="explicit mesh dims instead of the production "
+                        "meshes — axes named like launch/train.py "
+                        "((pod,)data,model), so a reduced cell's captured "
+                        "plan_inits match a --mesh D,D train run exactly")
     p.add_argument("--cell", default="all",
                    help="all | comma list of arch:shape")
+    p.add_argument("--reduced", action="store_true",
+                   help="smoke-scale configs (CPU-runnable; pairs with "
+                        "REPRO_DRYRUN_DEVICES for small fake-device counts)")
+    p.add_argument("--seq-len", type=int, default=None)
+    p.add_argument("--global-batch", type=int, default=None)
     p.add_argument("--out", default="experiments/dryrun")
     p.add_argument("--list", action="store_true")
     args = p.parse_args(argv)
 
-    from repro.configs import SHAPES, cells, get
-    from repro.launch.mesh import make_production_mesh
+    from repro.configs import SHAPES, ShapeConfig, cells, get, get_reduced
+    from repro.launch.mesh import make_mesh, make_production_mesh
 
+    arch_of = get_reduced if args.reduced else get
     if args.cell == "all":
         todo = [(c, s) for c, s, skip in cells(include_skipped=False)]
         skipped = [(c, s, skip) for c, s, skip in cells(include_skipped=True)
                    if skip]
+        if args.reduced:
+            todo = [(get_reduced(c.name), s) for c, s in todo]
     else:
         todo, skipped = [], []
         for spec in args.cell.split(","):
             a, s = spec.split(":")
-            todo.append((get(a), SHAPES[s]))
+            todo.append((arch_of(a), SHAPES[s]))
+    if args.seq_len or args.global_batch or args.reduced:
+        todo = [(c, ShapeConfig(s.name, s.kind,
+                                args.seq_len or (256 if args.reduced else s.seq_len),
+                                args.global_batch or (8 if args.reduced
+                                                      else s.global_batch)))
+                for c, s in todo]
 
     if args.list:
         for c, s in todo:
@@ -209,10 +258,16 @@ def main(argv=None):
         return 0
 
     meshes = []
-    if args.mesh in ("single", "both"):
-        meshes.append(("pod256", make_production_mesh(multi_pod=False)))
-    if args.mesh in ("multi", "both"):
-        meshes.append(("pods2x256", make_production_mesh(multi_pod=True)))
+    if args.mesh_shape:
+        dims = tuple(int(d) for d in args.mesh_shape.split(","))
+        axes = ("pod", "data", "model")[-len(dims):]
+        meshes.append((f"mesh{'x'.join(str(d) for d in dims)}",
+                       make_mesh(dims, axes)))
+    else:
+        if args.mesh in ("single", "both"):
+            meshes.append(("pod256", make_production_mesh(multi_pod=False)))
+        if args.mesh in ("multi", "both"):
+            meshes.append(("pods2x256", make_production_mesh(multi_pod=True)))
 
     failures = []
     n_total = len(todo) * len(meshes)

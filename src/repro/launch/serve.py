@@ -19,12 +19,15 @@ def main(argv=None):
     p.add_argument("--max-seq", type=int, default=None)
     p.add_argument("--mesh", default="1,1")
     p.add_argument("--seed", type=int, default=0)
-    p.add_argument("--plan-store", default=None, metavar="DIR",
-                   help="persistent plan-store directory, set as the process "
-                        "default (repro.planstore.configure): any "
-                        "alltoallv_init in this process — including the "
-                        "built-in plan-backed MoE EP dispatch — warm-starts "
-                        "from artifacts of previous serving processes")
+    p.add_argument("--plan-store", default=None, metavar="DIR_OR_URL",
+                   help="persistent plan store, set as the process default "
+                        "(repro.planstore.configure): a directory, "
+                        "fsremote://PATH, or tiered:local=DIR,remote=URL — "
+                        "a fresh replica pointed at a prewarmed fleet store "
+                        "warm-starts its very first INIT; any alltoallv_init "
+                        "in this process — including the built-in "
+                        "plan-backed MoE EP dispatch — reuses artifacts of "
+                        "previous serving processes")
     args = p.parse_args(argv)
 
     import numpy as np

@@ -50,13 +50,16 @@ def main(argv=None) -> dict:
     p.add_argument("--log-every", type=int, default=10)
     p.add_argument("--no-zero1", action="store_true")
     p.add_argument("--micro", type=int, default=1)
-    p.add_argument("--plan-store", default=None, metavar="DIR",
-                   help="persistent plan-store directory, set as the process "
-                        "default (repro.planstore.configure): any "
-                        "alltoallv_init in this process — including the "
-                        "built-in plan-backed MoE EP dispatch — warm-starts "
-                        "from artifacts of previous runs (zero table bakes, "
-                        "zero autotune bursts on a warm hit)")
+    p.add_argument("--plan-store", default=None, metavar="DIR_OR_URL",
+                   help="persistent plan store, set as the process default "
+                        "(repro.planstore.configure): a directory, "
+                        "fsremote://PATH (remote object-store semantics), or "
+                        "tiered:local=DIR,remote=URL (local cache in front "
+                        "of a fleet-shared remote).  Any alltoallv_init in "
+                        "this process — including the built-in plan-backed "
+                        "MoE EP dispatch — warm-starts from artifacts of "
+                        "previous runs or a deploy-time prewarm (zero table "
+                        "bakes, zero autotune bursts on a warm hit)")
     p.add_argument("--assert-warm-init", action="store_true",
                    help="exit non-zero unless every INIT in this run was "
                         "warm: zero autotune measurement bursts, zero table "

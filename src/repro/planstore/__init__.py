@@ -1,35 +1,53 @@
 """Persistent plan store: cross-process warm-start for INIT artifacts.
 
 The paper's INIT/EXECUTE split amortizes metadata cost over the iterations
-of one run; this package extends the amortization across *runs*.  A
-content-addressed on-disk store holds everything INIT computes that is
+of one run; this package extends the amortization across *runs* and across
+*hosts*.  A content-addressed store holds everything INIT computes that is
 expensive and pattern-frozen — baked pack/unpack index tables, two-stage
 hierarchy schedules, ``variant="auto"`` decisions, break-even fits — keyed
 on the ``PatternSignature`` digest plus schema/jax/repro versions and the
 mesh ``axis_sizes``.  A warm hit makes a second process's INIT skip the
 table bakes and the autotune measurement sweep entirely.
 
-    from repro.planstore import PlanStore
-    store = PlanStore("~/.cache/repro/planstore")
+Storage is pluggable (``backend.StoreBackend``): a local directory (memmap
+warm loads), a remote object store (``fsremote://`` is the in-repo
+emulated double), or both tiered (``TieredPlanStore``: local cache
+read-through, write-back publish) for fleet-shared deployments:
+
+    from repro.planstore import PlanStore, parse_store_url
+    store = PlanStore("~/.cache/repro/planstore")          # local dir
+    store = parse_store_url("tiered:local=.planstore,"
+                            "remote=fsremote:///shared/planstore")
     plan = alltoallv_init(counts, (256,), jnp.float32, mesh,
                           axis=("o", "i"), variant="auto", store=store)
 
-or process-globally (what ``--plan-store`` launcher flags do):
+or process-globally (what ``--plan-store`` launcher flags do — they accept
+the same URL schemes):
 
     from repro import planstore
     planstore.configure("~/.cache/repro/planstore")
 
-CLI:  ``python -m repro.planstore {inspect,purge,warm-check} --dir DIR``
+Deploy-time prewarm (``prewarm`` module): enumerate INIT requests from
+dryrun cell records or launch profiles, replay them host-side against a
+store, and publish — a fresh replica's very first INIT is then warm.
+
+CLI:  ``python -m repro.planstore {inspect,purge,warm-check,prewarm}``
 """
 
+from .backend import (ABSENT, FsRemoteBackend, GenerationConflict,
+                      LocalDirBackend, RemoteBackend, RemoteUnavailable,
+                      StoreBackend)
 from .schema import (ArtifactError, PlanArtifact, REPRO_VERSION,
                      SCHEMA_VERSION, signature_meta, store_key)
-from .store import ENV_VAR, PlanStore, configure, default_store
-from . import codec, schema, store
+from .store import (ENV_VAR, PlanStore, TieredPlanStore, configure,
+                    default_store, parse_store_url)
+from . import backend, codec, schema, store
 
 __all__ = [
-    "ArtifactError", "PlanArtifact", "PlanStore",
-    "REPRO_VERSION", "SCHEMA_VERSION", "ENV_VAR",
-    "codec", "configure", "default_store", "schema",
-    "signature_meta", "store", "store_key",
+    "ABSENT", "ArtifactError", "FsRemoteBackend", "GenerationConflict",
+    "LocalDirBackend", "PlanArtifact", "PlanStore", "RemoteBackend",
+    "RemoteUnavailable", "REPRO_VERSION", "SCHEMA_VERSION", "ENV_VAR",
+    "StoreBackend", "TieredPlanStore",
+    "backend", "codec", "configure", "default_store", "parse_store_url",
+    "schema", "signature_meta", "store", "store_key",
 ]

@@ -1,16 +1,34 @@
 """Plan-store CLI.
 
-    python -m repro.planstore inspect    --dir DIR
-    python -m repro.planstore purge      --dir DIR
-    python -m repro.planstore warm-check --dir DIR [--devices 8] [--assert-warm]
+    python -m repro.planstore inspect    (--dir DIR | --store URL)
+    python -m repro.planstore purge      (--dir DIR | --store URL)
+    python -m repro.planstore warm-check (--dir DIR | --store URL)
+                                         [--devices 8] [--assert-warm]
+    python -m repro.planstore prewarm    --store URL
+                                         [--from-dryrun PATH ...]
+                                         [--profile arch:shape:DxD[:rules] ...]
+                                         [--reduced] [--seq-len N]
+                                         [--global-batch N] [--devices N]
+
+Every subcommand accepts a plain directory (``--dir``) or a store URL
+(``--store``: a path, ``fsremote://…``, or ``tiered:local=…,remote=…`` —
+see ``planstore.parse_store_url``).
 
 ``warm-check`` runs one ``variant="auto"`` INIT of a canonical skewed
 pattern on a grouped host-device mesh against the store and prints the
 ``init_stats`` counters as JSON.  The first invocation against an empty
-directory is cold (it measures, bakes, and populates the store); any later
-invocation is warm.  ``--assert-warm`` turns the warm contract into an exit
-code: zero autotune measurement bursts and zero host-side table bakes, or
-failure — this is the CI warm-init smoke job.
+store is cold (it measures, bakes, and populates); any later invocation is
+warm.  ``--assert-warm`` turns the warm contract into an exit code: zero
+autotune measurement bursts and zero host-side table bakes, or failure —
+this is the CI warm-init smoke job.
+
+``prewarm`` is the deploy-time pipeline (``planstore.prewarm``): it
+enumerates INIT requests from dryrun cell records (``--from-dryrun``, the
+``plan_inits`` capture ``launch/dryrun.py`` writes) and/or launch profiles
+(``--profile``), replays them host-side, and publishes the artifacts into
+``--store`` — so a fresh replica pointed at that store (typically as the
+remote tier of a ``tiered:`` URL) warm-starts its very first INIT.  The CI
+prewarm job asserts exactly that end to end.
 """
 
 from __future__ import annotations
@@ -21,15 +39,32 @@ import os
 import sys
 
 
-def _cmd_inspect(args) -> int:
-    from repro.planstore import PlanStore, codec
+def _open_store(args):
+    from repro.planstore import parse_store_url
 
-    store = PlanStore(args.dir)
-    ents = store.entries()
-    rows = []
-    for e in ents:
+    return parse_store_url(args.store or args.dir)
+
+
+def _load_entry(store, key):
+    """Decode one entry by key from either tier of ``store``."""
+    from repro.planstore.store import TieredPlanStore
+
+    tiers = (store.local, store.remote) if isinstance(store, TieredPlanStore) \
+        else (store,)
+    for tier in tiers:
         try:
-            rows.append(dict(codec.load(e["path"]).summary(),
+            return tier._load_key(key)
+        except FileNotFoundError:
+            continue
+    raise FileNotFoundError(key)
+
+
+def _cmd_inspect(args) -> int:
+    store = _open_store(args)
+    rows = []
+    for e in store.entries():
+        try:
+            rows.append(dict(_load_entry(store, e["key"]).summary(),
                              key=e["key"], bytes=e["bytes"]))
         except Exception as exc:
             rows.append({"key": e["key"], "bytes": e["bytes"],
@@ -39,9 +74,7 @@ def _cmd_inspect(args) -> int:
 
 
 def _cmd_purge(args) -> int:
-    from repro.planstore import PlanStore
-
-    n = PlanStore(args.dir).purge()
+    n = _open_store(args).purge()
     print(json.dumps({"removed": n}))
     return 0
 
@@ -68,14 +101,13 @@ def _cmd_warm_check(args) -> int:
 
     from repro.core import PlanCache, alltoallv_init, init_stats, reset_init_stats
     from repro.launch.mesh import make_mesh
-    from repro.planstore import PlanStore
 
     p = args.devices
     if p % 2:
         raise SystemExit("warm-check needs an even device count")
     counts = _warm_check_pattern(p)
     mesh = make_mesh((2, p // 2), ("o", "i"))
-    store = PlanStore(args.dir)
+    store = _open_store(args)
 
     reset_init_stats()
     plan = alltoallv_init(counts, (16,), jnp.float32, mesh, axis=("o", "i"),
@@ -98,20 +130,101 @@ def _cmd_warm_check(args) -> int:
     return 0
 
 
+def _parse_profile(spec: str):
+    parts = spec.split(":")
+    if len(parts) not in (3, 4):
+        raise SystemExit(f"--profile must be arch:shape:DxD[:rules], got {spec!r}")
+    arch, shape, mesh = parts[:3]
+    dims = tuple(int(d) for d in mesh.replace("x", ",").split(","))
+    rules = parts[3] if len(parts) == 4 else "default"
+    return arch, shape, dims, rules
+
+
+def _cmd_prewarm(args) -> int:
+    from repro.planstore import prewarm as pw
+
+    if not args.from_dryrun and not args.profile:
+        raise SystemExit("prewarm needs --from-dryrun and/or --profile")
+    # Dryrun records are plain JSON — collect them before jax initializes so
+    # the fake-device count can cover the largest captured mesh.
+    reqs: list[dict] = []
+    for path in args.from_dryrun or []:
+        reqs.extend(pw.requests_from_dryrun(path))
+    profiles = [_parse_profile(s) for s in args.profile or []]
+    need = 1
+    for r in reqs:
+        n = 1
+        for s in r["axis_sizes"]:
+            n *= int(s)
+        need = max(need, n)
+    for _, _, dims, _ in profiles:
+        n = 1
+        for d in dims:
+            n *= d
+        need = max(need, n)
+    devices = args.devices or need
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={devices}")
+
+    store = _open_store(args)
+    # Profile capture publishes as it builds (cold INITs see the store), so
+    # configure it process-wide before constructing any bundle.
+    from repro import planstore as planstore_mod
+    planstore_mod.configure(store)
+    for arch, shape, dims, rules in profiles:
+        reqs.extend(pw.requests_from_profile(
+            arch, shape, dims, rules=rules, reduced=args.reduced,
+            seq_len=args.seq_len, global_batch=args.global_batch))
+
+    report = pw.prewarm(reqs, store, autotune_iters=args.iters)
+    print(json.dumps(report, indent=2))
+    if not report["prewarmed"] and not args.allow_empty:
+        print("prewarm: no requests were replayed (empty capture or all "
+              "skipped) — pass --allow-empty to accept", file=sys.stderr)
+        return 1
+    return 0
+
+
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(prog="python -m repro.planstore")
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.planstore", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     sub = ap.add_subparsers(dest="cmd", required=True)
     for name, fn in (("inspect", _cmd_inspect), ("purge", _cmd_purge),
-                     ("warm-check", _cmd_warm_check)):
+                     ("warm-check", _cmd_warm_check),
+                     ("prewarm", _cmd_prewarm)):
         sp = sub.add_parser(name)
-        sp.add_argument("--dir", required=True, help="store directory")
+        sp.add_argument("--dir", default=None, help="store directory")
+        sp.add_argument("--store", default=None,
+                        help="store URL (path, fsremote://…, or "
+                             "tiered:local=…,remote=…)")
         sp.set_defaults(fn=fn)
         if name == "warm-check":
             sp.add_argument("--devices", type=int, default=8)
             sp.add_argument("--iters", type=int, default=6,
                             help="autotune iterations when cold")
             sp.add_argument("--assert-warm", action="store_true")
+        if name == "prewarm":
+            sp.add_argument("--from-dryrun", action="append", metavar="PATH",
+                            help="dryrun cell JSON file or directory of them "
+                                 "(plan_inits capture); repeatable")
+            sp.add_argument("--profile", action="append",
+                            metavar="ARCH:SHAPE:DxD[:RULES]",
+                            help="launch profile to capture+publish; repeatable")
+            sp.add_argument("--reduced", action="store_true",
+                            help="profiles use the smoke-scale configs")
+            sp.add_argument("--seq-len", type=int, default=None)
+            sp.add_argument("--global-batch", type=int, default=None)
+            sp.add_argument("--devices", type=int, default=None,
+                            help="fake host-device count (default: largest "
+                                 "mesh among the requests)")
+            sp.add_argument("--iters", type=int, default=None,
+                            help="override autotune iterations for replays")
+            sp.add_argument("--allow-empty", action="store_true")
     args = ap.parse_args(argv)
+    if not args.store and not args.dir:
+        ap.error("one of --dir / --store is required")
     return args.fn(args)
 
 

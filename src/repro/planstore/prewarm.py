@@ -1,0 +1,157 @@
+"""Deploy-time plan-store prewarm: a fresh replica's first INIT is warm.
+
+The store amortizes INIT across runs, but the *first* run of every pattern
+on a fresh deployment still pays the cold sweep + bakes.  This module
+closes that gap: it enumerates the INIT requests a deployment will issue —
+from dryrun cell records (``launch/dryrun.py`` captures every
+``alltoallv_init`` behind each compiled cell into the cell JSON) or by
+building a launch profile's bundle under capture — replays them host-side
+against a store, and publishes the artifacts.  Point serving replicas at
+that store (directly, or as the remote tier of a
+``tiered:local=…,remote=…`` URL) and their very first INIT performs zero
+autotune bursts and zero table bakes.
+
+The replay runs real INITs (autotune sweeps measure on *this* host), so a
+prewarm host must match the fleet's XLA backend — the store key enforces
+it: artifacts prewarmed on CPU are invisible to TPU processes and vice
+versa.
+
+    PYTHONPATH=src python -m repro.planstore prewarm \\
+        --store fsremote://.planstore-fleet --from-dryrun experiments/dryrun
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import Iterable
+
+#: Record field order is irrelevant; this canonical form keys deduplication.
+_REQ_FIELDS = ("send_counts", "feature_shape", "dtype", "axis", "axis_sizes",
+               "variant", "lock_schedule", "tile_rows", "pack_impl",
+               "baked_metadata", "embeddable")
+
+
+def request_key(req: dict) -> str:
+    """Canonical dedup key of one captured INIT request (everything that
+    changes the stored artifact; ``autotune_iters`` only shapes the cold
+    sweep, so two requests differing there are one prewarm)."""
+    return json.dumps([req.get(f) for f in _REQ_FIELDS], sort_keys=True)
+
+
+def dedupe_requests(requests: Iterable[dict]) -> list[dict]:
+    seen: dict[str, dict] = {}
+    for r in requests:
+        seen.setdefault(request_key(r), r)
+    return list(seen.values())
+
+
+def requests_from_dryrun(path: str) -> list[dict]:
+    """Collect captured INIT requests from dryrun artifacts: ``path`` is a
+    cell-record JSON file or a directory of them (``plan_inits`` field,
+    written by ``launch/dryrun.py``)."""
+    files = ([path] if os.path.isfile(path)
+             else sorted(glob.glob(os.path.join(path, "*.json"))))
+    out: list[dict] = []
+    for f in files:
+        try:
+            with open(f) as fh:
+                rec = json.load(fh)
+        except (OSError, json.JSONDecodeError) as e:
+            # A truncated cell record means that cell's patterns won't be
+            # prewarmed — say so instead of silently cold-starting them.
+            print(f"prewarm: skipping unreadable dryrun record {f}: {e}",
+                  file=sys.stderr)
+            continue
+        out.extend(rec.get("plan_inits") or [])
+    return dedupe_requests(out)
+
+
+def requests_from_profile(arch: str, shape_name: str, mesh_dims,
+                          rules: str = "default", reduced: bool = True,
+                          seq_len: int | None = None,
+                          global_batch: int | None = None) -> list[dict]:
+    """Capture the INIT requests behind one launch profile by building its
+    step bundle (the same construction ``launch/train.py`` / dryrun use) —
+    requires ``prod(mesh_dims)`` visible devices."""
+    from repro.configs import SHAPES, ShapeConfig, get, get_reduced
+    from repro.core import capture_init_requests
+    from repro.launch import steps as steps_mod
+    from repro.launch.mesh import make_mesh
+    from repro.parallel.sharding import RULE_PROFILES
+
+    cfg = get_reduced(arch) if reduced else get(arch)
+    base = SHAPES[shape_name]
+    shape = ShapeConfig(shape_name, base.kind,
+                        seq_len or (256 if reduced else base.seq_len),
+                        global_batch or (8 if reduced else base.global_batch))
+    dims = tuple(int(d) for d in mesh_dims)
+    axes = ("pod", "data", "model")[-len(dims):]
+    mesh = make_mesh(dims, axes)
+    with capture_init_requests() as reqs:
+        steps_mod.make_bundle(cfg, shape, mesh, rules=RULE_PROFILES[rules])
+    return dedupe_requests(reqs)
+
+
+def replay_request(req: dict, store, cache=None,
+                   autotune_iters: int | None = None) -> dict:
+    """Run one captured INIT against ``store`` (cold builds publish, warm
+    hits verify).  Returns a per-request report row."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import PlanCache, alltoallv_init
+    from repro.launch.mesh import make_mesh
+
+    sizes = tuple(int(s) for s in req["axis_sizes"])
+    need = 1
+    for s in sizes:
+        need *= s
+    avail = len(jax.devices())
+    if need > avail:
+        return {"skipped": f"needs {need} devices, have {avail}",
+                "axis_sizes": list(sizes), "variant": req["variant"]}
+    mesh = make_mesh(sizes, tuple(req["axis"]))
+    plan = alltoallv_init(
+        np.asarray(req["send_counts"], np.int64),
+        tuple(req["feature_shape"]),
+        jnp.dtype(req["dtype"]),
+        mesh,
+        axis=tuple(req["axis"]),
+        variant=req["variant"],
+        lock_schedule=req.get("lock_schedule", "ring"),
+        tile_rows=req.get("tile_rows"),
+        pack_impl=req.get("pack_impl", "jnp"),
+        baked_metadata=req.get("baked_metadata", True),
+        cache=cache if cache is not None else PlanCache(),
+        store=store,
+        autotune_iters=(autotune_iters if autotune_iters is not None
+                        else req.get("autotune_iters", 8)),
+        embeddable=req.get("embeddable", False),
+    )
+    return {"digest": plan.signature.digest,
+            "variant": plan.spec.variant,
+            "requested_variant": req["variant"],
+            "p": plan.p, "axis_sizes": list(sizes),
+            "warm": bool(plan.warm_loaded)}
+
+
+def prewarm(requests: Iterable[dict], store,
+            autotune_iters: int | None = None) -> dict:
+    """Replay every request against ``store`` through one shared
+    ``PlanCache`` (duplicate patterns across cells bake once) and return a
+    publish report.  Requests needing more devices than this host exposes
+    are reported as skipped, never dropped silently."""
+    from repro.core import PlanCache, init_stats
+
+    cache = PlanCache()
+    rows, skipped = [], []
+    for req in dedupe_requests(requests):
+        row = replay_request(req, store, cache=cache,
+                             autotune_iters=autotune_iters)
+        (skipped if "skipped" in row else rows).append(row)
+    return {"prewarmed": rows, "skipped": skipped,
+            "init_stats": init_stats(), "store": store.stats}

@@ -28,7 +28,6 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import time
-from typing import Any
 
 import numpy as np
 
@@ -127,18 +126,6 @@ class PlanArtifact:
         if self.index_tables is not None:
             return "baked_tables"
         return "meta_only"
-
-    @classmethod
-    def from_plan(cls, sig: "md.PatternSignature", plan: Any) -> "PlanArtifact":
-        return cls(
-            signature=signature_meta(sig),
-            index_tables=getattr(plan, "index_tables", None),
-            hier_schedule=getattr(plan, "hier_schedule", None),
-        )
-
-    @classmethod
-    def for_auto(cls, sig: "md.PatternSignature", choice: dict) -> "PlanArtifact":
-        return cls(signature=signature_meta(sig), auto_choice=dict(choice))
 
     def validate_against(
         self,

@@ -32,7 +32,9 @@ class ServeEngine:
 
     def __init__(self, cfg: ModelConfig, mesh, batch: int, prompt_len: int,
                  max_seq: int, params=None, seed: int = 0, plan_store=None):
-        """``plan_store`` (a directory path or ``repro.planstore.PlanStore``)
+        """``plan_store`` (a directory path, a store URL —
+        ``fsremote://…`` / ``tiered:local=…,remote=…``, see
+        ``planstore.parse_store_url`` — or a ``repro.planstore.PlanStore``)
         becomes the PROCESS-default plan store (a deliberate global side
         effect — it outlives this engine and is seen by every subsequent
         ``alltoallv_init``, including other engines constructed with
@@ -44,9 +46,15 @@ class ServeEngine:
         below build plan-backed EP dispatch plans whose backing
         ``AlltoallvPlan``s consult the store at INIT (``self.moe_plan``
         exposes the decode bundle's plan for inspection)."""
+        if prompt_len > max_seq:
+            raise ValueError(
+                f"prompt_len {prompt_len} exceeds max_seq {max_seq}: the "
+                f"decode caches are sized max_seq, so the prefill prefix "
+                f"would not fit (growing them would need negative padding)")
         self.cfg = cfg
         self.mesh = mesh
         self.batch = batch
+        self.prompt_len = prompt_len
         self.max_seq = max_seq
         if plan_store is not None:
             from repro import planstore
@@ -71,6 +79,12 @@ class ServeEngine:
                  frames: Optional[np.ndarray] = None):
         """prompts: [B, prompt_len] int32. Returns (tokens [B, n], stats)."""
         cfg = self.cfg
+        prompt_len = int(prompts.shape[1])
+        if prompt_len + n_tokens > self.max_seq:
+            raise ValueError(
+                f"prompt_len {prompt_len} + n_tokens {n_tokens} exceeds "
+                f"max_seq {self.max_seq}: decode would write past the KV "
+                f"caches — raise max_seq or generate fewer tokens")
         t0 = time.perf_counter()
         with self.prefill_bundle.trace_context():
             if cfg.family == "audio":
@@ -109,6 +123,14 @@ class ServeEngine:
                 if src.shape == tgt.shape:
                     return src
                 pads = [(0, t - s) for s, t in zip(src.shape, tgt.shape)]
+                if any(p < 0 for _, p in pads):
+                    # Belt and braces: __init__ validates prompt_len <=
+                    # max_seq, so a negative pad here means the bundles
+                    # disagree about cache geometry — fail with the shapes,
+                    # not a cryptic jnp.pad error.
+                    raise ValueError(
+                        f"prefill cache shape {src.shape} exceeds decode "
+                        f"cache shape {tgt.shape}")
                 return jnp.pad(src, pads)
 
             grown = jax.tree.map(grow, prefill_caches, target)

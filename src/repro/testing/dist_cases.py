@@ -987,6 +987,75 @@ def planstore_warm_start():
 
 
 @case
+def planstore_fleet_prewarm():
+    """Fleet-shared store end to end: INIT requests captured on one "dryrun
+    host" (``core.capture_init_requests``), prewarmed host-side into a
+    remote-semantics store (``planstore.prewarm``), then a "fresh replica"
+    — empty local cache tiered in front of that remote — performs a fully
+    warm INIT for the prewarmed pattern: zero autotune bursts, zero table
+    bakes, store hits > 0, output matches the oracle.  The promotion also
+    leaves the local tier serving memmapped entries with the remote down."""
+    import tempfile
+
+    from repro.core import (INIT_STATS, PlanCache, alltoallv_init,
+                            capture_init_requests)
+    from repro.launch.mesh import make_mesh
+    from repro.planstore import FsRemoteBackend, PlanStore, TieredPlanStore
+    from repro.planstore import prewarm as pw
+
+    p = len(jax.devices())
+    assert p % 2 == 0, "fleet-prewarm case needs an even device count"
+    counts, bufs, expect, rc, send_rows, recv_rows = _setup_pattern(p, seed=33)
+    mesh = make_mesh((2, p // 2), ("o", "i"))
+    x = jax.device_put(jnp.asarray(bufs.reshape(p * send_rows, 4)),
+                       NamedSharding(mesh, P(("o", "i"))))
+
+    with tempfile.TemporaryDirectory() as remote_dir, \
+            tempfile.TemporaryDirectory() as local_dir:
+        # --- "dryrun host": capture the request, no store involved -------
+        with capture_init_requests() as reqs:
+            alltoallv_init(counts, (4,), jnp.float32, mesh, axis=("o", "i"),
+                           variant="auto", cache=PlanCache(), store=False,
+                           autotune_iters=4)
+        assert len(reqs) == 1 and reqs[0]["variant"] == "auto"
+
+        # --- "deploy host": prewarm the remote store from the records ----
+        report = pw.prewarm(
+            reqs, PlanStore(FsRemoteBackend(remote_dir, latency_ms=0.2)),
+            autotune_iters=4)
+        assert report["prewarmed"] and not report["skipped"]
+        assert report["store"]["puts"] > 0
+
+        # --- "fresh replica": empty local cache, remote-only artifacts ---
+        INIT_STATS.reset()
+        tiered = TieredPlanStore(PlanStore(local_dir),
+                                 PlanStore(FsRemoteBackend(remote_dir)))
+        plan = alltoallv_init(counts, (4,), jnp.float32, mesh,
+                              axis=("o", "i"), variant="auto",
+                              cache=PlanCache(), store=tiered,
+                              autotune_iters=4)
+        assert INIT_STATS.autotune_bursts == 0, INIT_STATS.as_dict()
+        assert INIT_STATS.table_bakes == 0, INIT_STATS.as_dict()
+        assert plan.warm_loaded and INIT_STATS.store_hits > 0
+        assert tiered.promotions >= 1
+        got = np.asarray(plan.wait(plan.start(x))).reshape(p, recv_rows, 4)
+        _check(got, expect, rc, p)
+
+        # --- tier promotion: local cache now serves memmaps, remote down -
+        down = TieredPlanStore(
+            PlanStore(local_dir),
+            PlanStore(FsRemoteBackend(remote_dir, fail_rate=1.0)))
+        art = down.get(plan.signature)
+        assert art is not None and down.remote_errors == 0
+        tables = art.index_tables or art.hier_schedule
+        first = next(t for t in (getattr(tables, "pack_src", None),
+                                 getattr(tables, "s1_src", None))
+                     if t is not None)
+        assert isinstance(first, np.memmap)
+    print("planstore fleet prewarm:", INIT_STATS.as_dict())
+
+
+@case
 def gspmd_gather_miscompile_guard():
     """Regression for the ROADMAP "gspmd = data_axis_size x a2a" defect.
 

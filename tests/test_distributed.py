@@ -60,6 +60,10 @@ def test_planstore_warm_start(dist):
     dist("planstore_warm_start", devices=8)
 
 
+def test_planstore_fleet_prewarm(dist):
+    dist("planstore_fleet_prewarm", devices=8)
+
+
 def test_gspmd_gather_miscompile_guard(dist):
     dist("gspmd_gather_miscompile_guard", devices=8)
 

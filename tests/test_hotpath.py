@@ -1,4 +1,5 @@
-"""Hot-path metadata: host-baked index maps, round elision, signature keys.
+"""Hot-path metadata: host-baked index maps, round elision, signature keys,
+window lifecycle.
 
 These are the single-device halves of the persistent-path overhaul; the
 multi-device output-identity checks live in test_distributed.py
@@ -6,6 +7,7 @@ multi-device output-identity checks live in test_distributed.py
 pipelined_epochs).
 """
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -102,3 +104,43 @@ def test_signature_separates_compile_relevant_fields():
     s24 = md.PatternSignature.build(c, **base, axis_sizes=(2, 4))
     assert s24 != md.PatternSignature.build(c, **base, axis_sizes=(4, 2))
     assert s24 != s0
+
+
+def test_signature_dtype_spelling_is_canonical():
+    """jnp.float32 (a scalar class), "float32", and np.dtype("float32") are
+    one pattern: the prewarm pipeline replays captured requests from JSON,
+    so a spelling-sensitive digest would hide every prewarmed artifact."""
+    c = np.array([[1, 2], [3, 4]])
+    base = dict(feature_shape=(4,), variant="fence", axis=("x",),
+                row_bytes=16, axis_sizes=(2,))
+    sigs = {md.PatternSignature.build(c, dtype=d, **base)
+            for d in (jnp.float32, "float32", np.dtype("float32"), np.float32)}
+    assert len(sigs) == 1
+    assert sigs.pop().dtype == "float32"
+
+
+def test_window_cache_free_drops_every_pipelined_slot():
+    """Regression: WindowCache.free() used to drop only slot 0, so the
+    extra buffers a depth>1 pipelined run materialized stayed alive on
+    device after the cache was freed."""
+    from repro.core import AlltoallvSpec, PlanCache
+    from repro.launch.mesh import make_host_mesh
+
+    cache = PlanCache()
+    spec = AlltoallvSpec(send_counts=np.array([[24]]), feature_shape=(4,),
+                         dtype=jnp.float32, axis=("x",))
+    plan = cache.get(spec, make_host_mesh(1))
+    x = jax.device_put(jnp.zeros(plan.global_send_shape, jnp.float32),
+                       plan._x_sharding)
+    for _ in range(4):
+        plan.wait(plan.start_pipelined(x, depth=4))
+    assert len(plan.window._slots) == 4
+    cache.window_cache.free()
+    assert len(plan.window._slots) == 0           # every slot, not just #0
+
+    # plan.free() after a fresh depth-4 run also drops every slot
+    for _ in range(4):
+        plan.wait(plan.start_pipelined(x, depth=4))
+    assert len(plan.window._slots) == 4
+    plan.free()
+    assert len(plan.window._slots) == 0

@@ -13,8 +13,11 @@ import pytest
 
 from _hypothesis_compat import given, strategies as st
 from repro.core import metadata as md
-from repro.planstore import (ArtifactError, PlanArtifact, PlanStore,
-                             SCHEMA_VERSION, codec, signature_meta, store_key)
+from repro.planstore import (ABSENT, ArtifactError, FsRemoteBackend,
+                             GenerationConflict, LocalDirBackend, PlanArtifact,
+                             PlanStore, RemoteUnavailable, SCHEMA_VERSION,
+                             TieredPlanStore, codec, parse_store_url,
+                             signature_meta, store_key)
 
 counts_matrices = st.integers(2, 10).flatmap(
     lambda p: st.lists(
@@ -306,6 +309,319 @@ def test_concurrent_writers_never_corrupt():
         assert final is not None
         np.testing.assert_array_equal(
             np.asarray(final.index_tables.pack_src), tables.pack_src)
+
+
+# --- backends: generation tokens, remote semantics, tiering -----------------
+
+
+def test_conditional_put_generation_tokens():
+    """Backend CAS contract: a put conditioned on a stale token conflicts;
+    ABSENT means create-only."""
+    with tempfile.TemporaryDirectory() as d:
+        be = LocalDirBackend(d)
+        be.put_bytes("k", b"v1", if_generation=ABSENT)       # create-only ok
+        with pytest.raises(GenerationConflict):
+            be.put_bytes("k", b"v2", if_generation=ABSENT)   # already exists
+        data, gen = be.get_with_generation("k")
+        assert data == b"v1" and gen != ABSENT
+        be.put_bytes("k", b"v2", if_generation=gen)          # fresh token ok
+        with pytest.raises(GenerationConflict):
+            be.put_bytes("k", b"v3", if_generation=gen)      # token now stale
+        assert be.get_bytes("k") == b"v2"
+        assert be.get_with_generation("missing") == (None, ABSENT)
+
+
+def test_fsremote_is_bytes_only_roundtrip():
+    """The remote backend round-trips through codec.loads — no local path,
+    no memmap; tables come back as plain in-memory arrays."""
+    sig, art, tables = _baked_artifact(np.full((4, 4), 3))
+    with tempfile.TemporaryDirectory() as d:
+        store = PlanStore(FsRemoteBackend(d))
+        store.put_artifact(sig, art)
+        assert store.path_for(sig) is None
+        got = PlanStore(FsRemoteBackend(d)).get(sig)
+        assert got is not None and got.payload_kind == "baked_tables"
+        assert not isinstance(got.index_tables.pack_src, np.memmap)
+        np.testing.assert_array_equal(
+            np.asarray(got.index_tables.pack_src), tables.pack_src)
+
+
+@pytest.mark.parametrize("defect", ["truncate", "garbage", "tamper"])
+def test_fsremote_corruption_is_miss_through_bytes_path(defect):
+    """The corruption-is-a-miss property holds for remote entries decoded
+    via codec.loads exactly as it does for memmapped local files."""
+    counts = np.full((4, 4), 7)
+    sig, art, _ = _baked_artifact(counts)
+    with tempfile.TemporaryDirectory() as d:
+        writer = PlanStore(FsRemoteBackend(d))
+        writer.put_artifact(sig, art)
+        obj = os.path.join(d, writer.key_for(sig) + ".plan")
+        if defect == "truncate":
+            with open(obj, "r+b") as f:
+                f.truncate(os.path.getsize(obj) // 2)
+        elif defect == "garbage":
+            with open(obj, "wb") as f:
+                f.write(os.urandom(256))
+        else:
+            art.jax_version = "9.9.9"          # metadata no longer matches
+            with open(obj, "wb") as f:
+                codec.dump(art, f)
+        store = PlanStore(FsRemoteBackend(d))
+        assert store.get(sig) is None
+        assert store.invalid == 1
+        assert not os.path.exists(obj)          # bad entry removed remotely
+
+
+def test_fsremote_failure_injection_degrades_to_miss():
+    """A flaky remote never crashes INIT: reads count as misses (errors
+    tracked), writes surface RemoteUnavailable (an OSError) for the
+    best-effort layer above."""
+    counts = np.full((4, 4), 5)
+    sig, art, _ = _baked_artifact(counts)
+    with tempfile.TemporaryDirectory() as d:
+        down = PlanStore(FsRemoteBackend(d, fail_rate=1.0))
+        assert down.get(sig) is None
+        assert down.errors == 1 and down.misses == 1
+        with pytest.raises(RemoteUnavailable):
+            down.put_artifact(sig, art)
+        assert isinstance(RemoteUnavailable("x"), OSError)
+
+
+def test_tiered_promotion_memmaps_locally():
+    """Remote hit populates the local cache (raw entry bytes), the promoted
+    artifact memmaps off the local file, and the second get never touches
+    the remote."""
+    sig, art, tables = _baked_artifact(np.full((4, 4), 9))
+    with tempfile.TemporaryDirectory() as remote_dir, \
+            tempfile.TemporaryDirectory() as local_dir:
+        PlanStore(FsRemoteBackend(remote_dir)).put_artifact(sig, art)
+        remote_be = FsRemoteBackend(remote_dir)
+        tiered = TieredPlanStore(PlanStore(local_dir),
+                                 PlanStore(remote_be))
+        got = tiered.get(sig)
+        assert got is not None and tiered.promotions == 1
+        assert isinstance(got.index_tables.pack_src, np.memmap)
+        np.testing.assert_array_equal(
+            np.asarray(got.index_tables.pack_src), tables.pack_src)
+        ops_after_first = remote_be.ops
+        again = tiered.get(sig)                  # local tier now owns it
+        assert isinstance(again.index_tables.pack_src, np.memmap)
+        assert remote_be.ops == ops_after_first  # no remote round trip
+        assert tiered.local.hits == 1
+
+
+def test_tiered_writeback_publish_and_remote_down():
+    """Puts land in both tiers; with the remote down, gets fall back to the
+    local cache and puts stay best-effort (remote_errors counts)."""
+    sig, art, _ = _baked_artifact(np.full((4, 4), 6))
+    with tempfile.TemporaryDirectory() as remote_dir, \
+            tempfile.TemporaryDirectory() as local_dir:
+        tiered = TieredPlanStore(PlanStore(local_dir),
+                                 PlanStore(FsRemoteBackend(remote_dir)))
+        tiered.put_artifact(sig, art)
+        assert PlanStore(FsRemoteBackend(remote_dir)).get(sig) is not None
+        assert PlanStore(local_dir).get(sig) is not None
+
+        broken = TieredPlanStore(
+            PlanStore(local_dir),
+            PlanStore(FsRemoteBackend(remote_dir, fail_rate=1.0)))
+        assert broken.get(sig) is not None       # local hit, remote untouched
+        broken.put_artifact(sig, art)            # no raise
+        assert broken.remote_errors == 1
+        # empty local + dead remote = miss, never a crash
+        with tempfile.TemporaryDirectory() as empty:
+            dead = TieredPlanStore(
+                PlanStore(empty),
+                PlanStore(FsRemoteBackend(remote_dir, fail_rate=1.0)))
+            assert dead.get(sig) is None and dead.remote_errors == 1
+
+
+def test_tiered_eviction_under_reader():
+    """Local-tier eviction unlinking a promoted entry does not disturb a
+    reader already holding its memmapped tables (POSIX fd semantics)."""
+    sig, art, tables = _baked_artifact(np.full((4, 4), 8))
+    with tempfile.TemporaryDirectory() as remote_dir, \
+            tempfile.TemporaryDirectory() as local_dir:
+        PlanStore(FsRemoteBackend(remote_dir)).put_artifact(sig, art)
+        tiered = TieredPlanStore(PlanStore(local_dir),
+                                 PlanStore(FsRemoteBackend(remote_dir)))
+        got = tiered.get(sig)
+        assert isinstance(got.index_tables.pack_src, np.memmap)
+        assert tiered.local.purge() == 1          # evicted under the reader
+        np.testing.assert_array_equal(
+            np.asarray(got.index_tables.pack_src), tables.pack_src)
+
+
+def test_parse_store_url():
+    with tempfile.TemporaryDirectory() as d:
+        local = parse_store_url(os.path.join(d, "a"))
+        assert isinstance(local, PlanStore)
+        assert isinstance(local.store_backend, LocalDirBackend)
+        filed = parse_store_url("file://" + os.path.join(d, "b"))
+        assert isinstance(filed.store_backend, LocalDirBackend)
+        rem = parse_store_url(
+            f"fsremote://{d}/r?latency_ms=1.5&fail_rate=0.25&seed=7")
+        assert isinstance(rem.store_backend, FsRemoteBackend)
+        assert rem.store_backend.latency_ms == 1.5
+        assert rem.store_backend.fail_rate == 0.25
+        tiered = parse_store_url(
+            f"tiered:local={d}/cache,remote=fsremote://{d}/shared")
+        assert isinstance(tiered, TieredPlanStore)
+        assert isinstance(tiered.local.store_backend, LocalDirBackend)
+        assert isinstance(tiered.remote.store_backend, FsRemoteBackend)
+        for bad in ("tiered:remote=x", "tiered:local=a", "fsremote://",
+                    f"fsremote://{d}/r?bogus=1"):
+            with pytest.raises(ValueError):
+                parse_store_url(bad)
+
+
+class _RacingBackend(LocalDirBackend):
+    """Injects one competing put_auto between a merge's read and its
+    conditional put — the exact interleave that used to drop the decision."""
+
+    def __init__(self, root, store_factory, sig, choice):
+        super().__init__(root)
+        self._store_factory = store_factory
+        self._sig = sig
+        self._choice = choice
+        self._raced = False
+
+    def get_with_generation(self, key):
+        out = super().get_with_generation(key)
+        if not self._raced:
+            self._raced = True
+            self._store_factory().put_auto(self._sig, self._choice)
+        return out
+
+
+def test_attach_breakeven_merges_with_concurrent_auto_publish():
+    """Deterministic interleave: another process publishes an auto decision
+    after attach_breakeven reads the entry.  The conditional put detects
+    the generation change, re-reads, and merges — the decision survives
+    (last-writer-wins silently dropped it)."""
+    counts = np.full((4, 4), 12)
+    sig = _sig(counts, variant="auto")
+    choice = {"variant": "lock", "times": {"lock": 5e-5}}
+    with tempfile.TemporaryDirectory() as d:
+        be = _RacingBackend(d, lambda: PlanStore(d), sig, choice)
+        store = PlanStore(be)
+        store.attach_breakeven(sig, {"t_init": 1e-3, "n_breakeven": 21})
+        final = PlanStore(d).get(sig)
+        assert final.auto_choice == choice              # not dropped
+        assert final.breakeven["n_breakeven"] == 21     # and merged
+
+
+def test_tiered_merge_refreshes_local_from_remote():
+    """A tiered merge runs against the authoritative remote and mirrors the
+    merged entry into the local cache — an independent local merge used to
+    create a meta-only local entry that shadowed the remote's tables on
+    every later get (defeating the fleet warm start)."""
+    sig, art, _ = _baked_artifact(np.full((4, 4), 4))
+    with tempfile.TemporaryDirectory() as remote_dir, \
+            tempfile.TemporaryDirectory() as local_dir:
+        PlanStore(FsRemoteBackend(remote_dir)).put_artifact(sig, art)
+        tiered = TieredPlanStore(PlanStore(local_dir),
+                                 PlanStore(FsRemoteBackend(remote_dir)))
+        tiered.attach_breakeven(sig, {"t_init": 2e-3})
+        local_art = PlanStore(local_dir).get(sig)
+        assert local_art.payload_kind == "baked_tables"   # not meta-only
+        assert local_art.breakeven["t_init"] == 2e-3
+        got = tiered.get(sig)
+        assert got.payload_kind == "baked_tables" and got.breakeven
+
+
+def test_tiered_with_bytes_only_local_tier_still_serves():
+    """Nothing stops a bytes-only backend in the local slot; promotion then
+    simply returns the decoded remote artifact instead of crashing on the
+    absent local path."""
+    sig, art, tables = _baked_artifact(np.full((4, 4), 3))
+    with tempfile.TemporaryDirectory() as remote_dir, \
+            tempfile.TemporaryDirectory() as local_dir:
+        PlanStore(FsRemoteBackend(remote_dir)).put_artifact(sig, art)
+        tiered = TieredPlanStore(PlanStore(FsRemoteBackend(local_dir)),
+                                 PlanStore(FsRemoteBackend(remote_dir)))
+        got = tiered.get(sig)
+        assert got is not None
+        np.testing.assert_array_equal(
+            np.asarray(got.index_tables.pack_src), tables.pack_src)
+
+
+def test_put_plan_preserves_preattached_breakeven():
+    """attach_breakeven can create a meta-only entry before any tables
+    exist (breakeven_model measures patterns it never warm-loads); the
+    later cold INIT's table publish must merge into it, not replace it."""
+    counts = np.full((4, 4), 10)
+    sig, _, tables = _baked_artifact(counts)
+
+    class FakePlan:
+        index_tables = tables
+        hier_schedule = None
+
+    with tempfile.TemporaryDirectory() as d:
+        store = PlanStore(d)
+        store.attach_breakeven(sig, {"t_init": 1e-3, "n_breakeven": 7})
+        assert store.put_plan(sig, FakePlan) is not None
+        got = PlanStore(d).get(sig)
+        assert got.payload_kind == "baked_tables"
+        assert got.breakeven["n_breakeven"] == 7     # survived the publish
+
+
+def test_remote_store_is_never_lru_trimmed_by_clients():
+    """A client's local max_entries must not evict entries from a shared
+    remote store (another replica may still need them); remote lifecycle
+    belongs to the object store's retention policy."""
+    with tempfile.TemporaryDirectory() as d:
+        store = PlanStore(FsRemoteBackend(d), max_entries=2)
+        for i in range(5):
+            sig, art, _ = _baked_artifact(np.full((4, 4), i + 1))
+            store.put_artifact(sig, art)
+        assert len(store.entries()) == 5 and store.evictions == 0
+        # local dirs keep today's LRU bound
+        local = PlanStore(os.path.join(d, "local"), max_entries=2)
+        for i in range(5):
+            sig, art, _ = _baked_artifact(np.full((4, 4), i + 1))
+            local.put_artifact(sig, art)
+            os.utime(local.path_for(sig), (i, i))
+        assert len(local.entries()) <= 2
+
+
+def _hammer_merge(args):
+    """Worker for the merge-concurrency hammer: interleave put_auto and
+    attach_breakeven on one key; every merge must converge."""
+    root, seed, rounds = args
+    rng = np.random.default_rng(seed)
+    counts = np.full((4, 4), 13)           # same signature for every worker
+    sig = _sig(counts, variant="auto")
+    store = PlanStore(root)
+    for i in range(rounds):
+        if rng.random() < 0.5:
+            store.put_auto(sig, {"variant": "lock",
+                                 "times": {"lock": float(seed)}})
+        else:
+            store.attach_breakeven(sig, {"t_init": float(i)}, retries=50)
+    return store.stats
+
+
+def test_concurrent_merges_never_drop_fields():
+    """Many processes interleaving put_auto and attach_breakeven on one
+    entry: the final entry holds BOTH an auto decision and a break-even fit
+    — the read-modify-write merges instead of overwriting."""
+    import multiprocessing as mp
+
+    with tempfile.TemporaryDirectory() as d:
+        # Seed both fields so the assertion is meaningful regardless of
+        # which worker's op lands last.
+        counts = np.full((4, 4), 13)
+        sig = _sig(counts, variant="auto")
+        seed_store = PlanStore(d)
+        seed_store.put_auto(sig, {"variant": "fence", "times": {}})
+        seed_store.attach_breakeven(sig, {"t_init": 0.0})
+        with mp.get_context("spawn").Pool(4) as pool:
+            pool.map(_hammer_merge, [(d, seed, 12) for seed in range(4)])
+        final = PlanStore(d).get(sig)
+        assert final is not None
+        assert final.auto_choice is not None and "variant" in final.auto_choice
+        assert final.breakeven is not None and "t_init" in final.breakeven
 
 
 def test_plan_cache_warm_integration_single_device():

@@ -57,6 +57,24 @@ def test_whisper_generate_smoke():
     assert (toks >= 0).all() and (toks < cfg.vocab_size).all()
 
 
+def test_prompt_exceeding_max_seq_rejected_up_front():
+    """Regression: prompt_len > max_seq used to surface as a negative-pad
+    crash deep inside jnp.pad when growing prefill caches; now both engine
+    construction and generate() validate the window with clear errors."""
+    cfg = get_reduced("olmo-1b")
+    mesh = make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match=r"prompt_len 64 exceeds max_seq 32"):
+        ServeEngine(cfg, mesh, batch=2, prompt_len=64, max_seq=32, seed=0)
+
+    eng = ServeEngine(cfg, mesh, batch=2, prompt_len=8, max_seq=16, seed=0)
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (2, 8)).astype(np.int32)
+    with pytest.raises(ValueError, match=r"exceeds max_seq 16"):
+        eng.generate(prompts, n_tokens=9)
+    toks, _ = eng.generate(prompts, n_tokens=8)   # exactly fills the window
+    assert toks.shape == (2, 8)
+
+
 def test_sampler():
     from repro.serve import sampler
 
