@@ -34,6 +34,23 @@ def time_call(fn: Callable[[], object], iters: int = 30, warmup: int = 5) -> flo
     return (time.perf_counter() - t0) / iters
 
 
+def provenance() -> dict:
+    """Measurement provenance stamped onto every BENCH_*.json row: without
+    the jax version / XLA backend / device count / run timestamp, two
+    baseline files cannot be compared meaningfully (check_regress windows
+    assume same-backend rows).  The timestamp comes from the runner
+    (``benchmarks/run.py`` exports REPRO_BENCH_TIMESTAMP so every benchmark
+    of one sweep shares it); standalone invocations stamp their own."""
+    import jax
+    return {
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "devices": jax.device_count(),
+        "timestamp": (os.environ.get("REPRO_BENCH_TIMESTAMP")
+                      or time.strftime("%Y-%m-%dT%H:%M:%S")),
+    }
+
+
 class Csv:
     def __init__(self, path: str | None = None):
         self.rows: list[tuple] = []
@@ -53,18 +70,23 @@ class Csv:
             w.writerows(self.rows)
 
     def save_json(self, path: str) -> None:
-        """Machine-readable per-benchmark results (perf trajectory across PRs)."""
+        """Machine-readable per-benchmark results (perf trajectory across
+        PRs), every row stamped with measurement provenance."""
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-        payload = [{"name": n, "us_per_call": float(us), "derived": d}
+        prov = provenance()
+        payload = [{"name": n, "us_per_call": float(us), "derived": d, **prov}
                    for n, us, d in self.rows]
         with open(path, "w") as f:
             json.dump(payload, f, indent=2)
             f.write("\n")
 
 
-def rows_to_json(stdout_text: str, path: str) -> int:
+def rows_to_json(stdout_text: str, path: str,
+                 prov: dict | None = None) -> int:
     """Parse ``name,us_per_call,derived`` CSV rows from captured benchmark
-    stdout and write them as JSON; returns the number of rows written."""
+    stdout and write them as JSON; returns the number of rows written.
+    ``prov`` (runner-side provenance) is stamped onto every row — the
+    scraping parent never imported jax, so it passes what it knows."""
     rows = []
     for line in stdout_text.splitlines():
         parts = line.split(",", 2)
@@ -77,7 +99,8 @@ def rows_to_json(stdout_text: str, path: str) -> int:
         except ValueError:
             continue
         rows.append({"name": parts[0], "us_per_call": us,
-                     "derived": parts[2] if len(parts) > 2 else ""})
+                     "derived": parts[2] if len(parts) > 2 else "",
+                     **(prov or {})})
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(path, "w") as f:
         json.dump(rows, f, indent=2)

@@ -1,0 +1,142 @@
+"""Benchmark regression gate: fresh BENCH_*.json vs committed baselines.
+
+    python benchmarks/check_regress.py [--fresh experiments/bench]
+        [--baseline DIR | --baseline-ref HEAD]
+        [--tol-pct 50] [--abs-us 200] [--only msg_sweep,moe_dispatch]
+
+Compares every timing row of a fresh ``benchmarks/run.py --json`` sweep
+against the committed baseline files (read from a directory, or — the CI
+form — straight out of git via ``git show REF:...``, so the gate works even
+after the fresh run overwrote the files on disk).  A row regresses when
+
+    fresh > baseline * (1 + tol_pct/100) + abs_us
+
+— a per-row tolerance *window*, not a bare ratio: the relative term absorbs
+proportional noise on shared hosts, the absolute term keeps microsecond-
+scale rows (where 50% is one scheduler hiccup) from flapping.  Rows with a
+non-positive baseline (derived "saving" rows, unmeasured entries) are
+skipped; rows present only in one file are reported but only *missing
+baselines for an entire file* are an error — new benchmarks appear before
+their baselines are committed.
+
+Exit status: 0 clean, 1 regression(s), 2 nothing to compare.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import subprocess
+import sys
+
+
+def load_rows(text_or_path: str, from_text: bool = False) -> dict[str, float]:
+    """BENCH json -> {row name: us_per_call}, last occurrence wins."""
+    if from_text:
+        rows = json.loads(text_or_path)
+    else:
+        with open(text_or_path) as f:
+            rows = json.load(f)
+    return {r["name"]: float(r["us_per_call"]) for r in rows
+            if "name" in r and "us_per_call" in r}
+
+
+def baseline_rows(fresh_path: str, baseline_dir: str | None,
+                  ref: str) -> dict[str, float] | None:
+    """The committed counterpart of one fresh BENCH file (None if absent)."""
+    rel = os.path.relpath(fresh_path).replace(os.sep, "/")
+    if baseline_dir is not None:
+        p = os.path.join(baseline_dir, os.path.basename(fresh_path))
+        return load_rows(p) if os.path.exists(p) else None
+    r = subprocess.run(["git", "show", f"{ref}:{rel}"],
+                       capture_output=True, text=True)
+    if r.returncode != 0:
+        return None
+    return load_rows(r.stdout, from_text=True)
+
+
+def compare(fresh: dict[str, float], base: dict[str, float],
+            tol_pct: float, abs_us: float) -> tuple[list, list, int]:
+    """Returns (regressions, notes, n_compared)."""
+    regressions, notes, n = [], [], 0
+    for name, b in sorted(base.items()):
+        if name not in fresh:
+            notes.append(f"  ~ {name}: in baseline only (not re-measured)")
+            continue
+        if b <= 0:
+            continue                      # derived/saving rows: not a timing
+        n += 1
+        f = fresh[name]
+        limit = b * (1.0 + tol_pct / 100.0) + abs_us
+        if f > limit:
+            regressions.append(
+                f"  ! {name}: {f:.1f}us vs baseline {b:.1f}us "
+                f"(+{100.0 * (f - b) / b:.0f}%, window {limit:.1f}us)")
+    for name in sorted(set(fresh) - set(base)):
+        notes.append(f"  + {name}: new row (no baseline)")
+    return regressions, notes, n
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--fresh", default=os.path.join("experiments", "bench"),
+                   help="directory holding the fresh BENCH_*.json output")
+    p.add_argument("--baseline", default=None,
+                   help="directory of baseline BENCH_*.json files; default "
+                        "reads the committed files from git (--baseline-ref)")
+    p.add_argument("--baseline-ref", default="HEAD",
+                   help="git ref the committed baselines are read from "
+                        "when --baseline is not given")
+    p.add_argument("--tol-pct", type=float, default=50.0,
+                   help="relative tolerance per row (percent over baseline)")
+    p.add_argument("--abs-us", type=float, default=200.0,
+                   help="absolute tolerance per row (microseconds), added "
+                        "on top of the relative window")
+    p.add_argument("--only", default=None,
+                   help="comma list of benchmark names to gate on "
+                        "(default: every BENCH_*.json under --fresh)")
+    args = p.parse_args(argv)
+
+    only = set(args.only.split(",")) if args.only else None
+    files = sorted(glob.glob(os.path.join(args.fresh, "BENCH_*.json")))
+    if only is not None:
+        files = [f for f in files
+                 if os.path.basename(f)[len("BENCH_"):-len(".json")] in only]
+    if not files:
+        print(f"check_regress: no BENCH_*.json under {args.fresh}"
+              + (f" matching --only {args.only}" if only else ""))
+        return 2
+
+    total_regr, total_cmp = [], 0
+    for path in files:
+        base = baseline_rows(path, args.baseline, args.baseline_ref)
+        name = os.path.basename(path)
+        if base is None:
+            print(f"{name}: no committed baseline — skipped")
+            continue
+        regr, notes, n = compare(load_rows(path), base,
+                                 args.tol_pct, args.abs_us)
+        total_cmp += n
+        status = "REGRESSED" if regr else "ok"
+        print(f"{name}: {n} rows compared, {len(regr)} regressed [{status}]")
+        for line in regr + notes:
+            print(line)
+        total_regr.extend(regr)
+
+    if total_cmp == 0:
+        print("check_regress: no comparable rows (all baselines missing?)")
+        return 2
+    if total_regr:
+        print(f"check_regress: {len(total_regr)} regression(s) over "
+              f"{total_cmp} rows (window: +{args.tol_pct:.0f}% "
+              f"+ {args.abs_us:.0f}us)")
+        return 1
+    print(f"check_regress: clean ({total_cmp} rows within "
+          f"+{args.tol_pct:.0f}% + {args.abs_us:.0f}us)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

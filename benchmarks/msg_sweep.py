@@ -13,6 +13,13 @@ own engine:
                    is the pure metadata-hoisting win.
   fence_pipelined  ``start_pipelined`` double-buffered epochs (epoch k+1
                    dispatched while epoch k's output is consumed).
+  fence_c8         fence variant with the int8 wire codec (per-row scales
+                   inlined into the payload rows) — the wire-compression
+                   axis at each size.  On this host's shared-memory
+                   transport the codec's encode/decode passes outweigh the
+                   memcpy bytes they remove (see BENCH_compression's
+                   codec_fit rows); the row exists so the sweep shows the
+                   codec delta trend across sizes per transport.
 
 The paper's headline claims to reproduce: persistence pays off beyond a
 message-size threshold; N_breakeven = 1 there; fence > lock.
@@ -66,6 +73,10 @@ def main(sizes=None, iters=30, out="experiments/bench/msg_sweep.csv",
                                       axis="x", variant="fence",
                                       baked_metadata=False)
         plan_ingraph.compile()
+        plan_c8 = alltoallv_init(counts, (feature,), jnp.float32, mesh,
+                                 axis="x", variant="fence", codec="int8",
+                                 error_tol=0.004, store=False)
+        plan_c8.compile()
 
         base = make_nonpersistent(
             mesh, axis="x", p=N_RANKS, capacity=plans["fence"].capacity,
@@ -90,6 +101,7 @@ def main(sizes=None, iters=30, out="experiments/bench/msg_sweep.csv",
             "lock": lambda: plans["lock"].start(x),
             "ingraph": lambda: plan_ingraph.start(x),
             "pipelined": pipelined_pair,
+            "c8": lambda: plan_c8.start(x),
         }, iters=iters, warmup=1, bursts=4)
         t_base, t_fence, t_lock, t_ig = (times[n] for n in
                                          ("baseline", "fence", "lock",
@@ -111,6 +123,9 @@ def main(sizes=None, iters=30, out="experiments/bench/msg_sweep.csv",
                 f"baked_speedup={(t_ig - t_fence) / t_ig * 100.0:.1f}%")
         csv.row(f"msg_sweep/fence_pipelined/{nbytes}B", t_pipe * 1e6,
                 f"overlap_gain={(t_fence - t_pipe) / t_fence * 100.0:.1f}%")
+        csv.row(f"msg_sweep/fence_c8/{nbytes}B", times["c8"] * 1e6,
+                f"codec=int8;wire_bytes_per_pair={nbytes // 4};"
+                f"saving={(t_fence - times['c8']) / t_fence * 100.0:.1f}%")
     csv.save()
     if json_out:
         csv.save_json(json_out)

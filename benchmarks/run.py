@@ -22,6 +22,7 @@ import argparse
 import os
 import subprocess
 import sys
+import time
 
 HERE = os.path.dirname(os.path.abspath(__file__))
 SRC = os.path.abspath(os.path.join(HERE, "..", "src"))
@@ -67,7 +68,12 @@ def main(argv=None) -> int:
     args = p.parse_args(argv)
 
     only = set(args.only.split(",")) if args.only else None
+    # One timestamp per sweep, exported to every benchmark subprocess:
+    # all rows of one run stamp identical provenance (see _util.provenance).
+    stamp = (os.environ.get("REPRO_BENCH_TIMESTAMP")
+             or time.strftime("%Y-%m-%dT%H:%M:%S"))
     env = dict(os.environ,
+               REPRO_BENCH_TIMESTAMP=stamp,
                PYTHONPATH=SRC + os.pathsep + HERE
                + os.pathsep + os.environ.get("PYTHONPATH", ""))
     if args.plan_store:
@@ -97,7 +103,7 @@ def main(argv=None) -> int:
             print(f"# {name} FAILED", flush=True)
         elif args.json and name not in JSON_NATIVE:
             path = os.path.join("experiments", "bench", f"BENCH_{name}.json")
-            n = rows_to_json(r.stdout, path)
+            n = rows_to_json(r.stdout, path, prov={"timestamp": stamp})
             print(f"# wrote {path} ({n} rows)", flush=True)
     if failures:
         print(f"# benchmark failures: {failures}")

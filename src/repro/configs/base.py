@@ -33,6 +33,16 @@ class MoEConfig:
     # Clamped at plan build to the largest depth the tile-aligned capacity
     # supports; any depth is bit-identical to depth 1.
     overlap_chunks: int = 1
+    # Wire codec for the dispatch/combine exchange (parallel.wirecodec):
+    # "identity" ships raw rows; a named codec ("bf16", "int8", "fp8")
+    # quantizes on pack and dequantizes on unpack.  codec_tol is the
+    # explicitly-declared relative error budget for the routed activations:
+    # a lossy wire_codec requires it (lossy compression is never enabled
+    # silently — alltoallv_init rejects the pin without a covering
+    # tolerance), and with a2a_variant="auto" a bare codec_tol widens the
+    # INIT sweep to (variant, codec) arms and the measured winner sticks.
+    wire_codec: str = "identity"
+    codec_tol: Optional[float] = None
 
 
 @dataclasses.dataclass(frozen=True)

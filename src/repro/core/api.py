@@ -87,6 +87,8 @@ def alltoallv_init(
     autotune_iters: int = 12,
     store=None,
     embeddable: bool = False,
+    codec: str = "identity",
+    error_tol: float | None = None,
 ) -> AlltoallvPlan:
     """Build (or fetch from cache) a persistent plan for a frozen pattern.
 
@@ -95,6 +97,16 @@ def alltoallv_init(
     variant and per-candidate timings land on ``plan.auto_choice``.
     ``baked_metadata=False`` reverts to in-graph index-map recomputation
     (the seed behavior) — kept for A/B benchmarking only.
+
+    ``codec`` selects the wire encoding (``parallel.wirecodec``): the
+    exchange then moves quantized rows plus a per-row fp32 scale side
+    channel, decode fused into unpack.  Lossy codecs are strictly opt-in:
+    a non-identity ``codec`` requires a caller-declared ``error_tol``
+    covering the codec's declared relative error bound.  With
+    ``variant="auto"`` and an ``error_tol``, the INIT sweep also measures
+    the codec arms eligible under the tolerance and persists the winning
+    (variant, codec) pair like any auto decision — warm INITs replay it
+    with zero re-measurement.
 
     ``store`` selects the persistent plan store (``repro.planstore``): None
     uses the process default (opt-in via ``planstore.configure`` or
@@ -109,8 +121,11 @@ def alltoallv_init(
     window).
     """
     from . import metadata as md
+    from ..parallel import wirecodec
 
     axis_t = (axis,) if isinstance(axis, str) else tuple(axis)
+    if codec != "identity":
+        wirecodec.require(codec, error_tol)   # unknown names / lossy opt-in
     if variant == "auto":
         # auto resolves to a measured concrete variant below; the spec needs
         # a valid placeholder to pass construction.  fused+2-axis is only
@@ -130,6 +145,7 @@ def alltoallv_init(
         tile_rows=tile_rows if tile_rows is not None else md.TILE_ROWS,
         pack_impl=pack_impl,
         baked_metadata=baked_metadata,
+        codec=codec,
     )
     if capturing_inits():
         # Everything a prewarm host needs to replay this INIT verbatim
@@ -148,13 +164,16 @@ def alltoallv_init(
             "baked_metadata": spec.baked_metadata,
             "embeddable": bool(embeddable),
             "autotune_iters": int(autotune_iters),
+            "codec": spec.codec,
+            "error_tol": (float(error_tol) if error_tol is not None
+                          else None),
         })
     resolved_store = _resolve_store(store)
     if variant == "auto":
         from .autotune import autotune_variant
         return autotune_variant(spec, mesh, cache or _GLOBAL_CACHE,
                                 iters=autotune_iters, store=resolved_store,
-                                embeddable=embeddable)
+                                embeddable=embeddable, error_tol=error_tol)
     return (cache or _GLOBAL_CACHE).get(spec, mesh, store=resolved_store)
 
 

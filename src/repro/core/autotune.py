@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .. import compat
+from ..parallel import wirecodec
 from . import breakeven
 from . import metadata as md
 from ._init_stats import INIT_STATS
@@ -65,6 +66,7 @@ def autotune_variant(
     bursts: int = 3,
     store=None,
     embeddable: bool = False,
+    error_tol: float | None = None,
 ) -> AlltoallvPlan:
     """Measure every candidate for ``spec``'s pattern, return the winner.
 
@@ -79,6 +81,14 @@ def autotune_variant(
     embedding consumer (MoE dispatch) is always embeddable.  A stored
     decision naming an excluded variant is ignored and re-measured.
 
+    ``error_tol`` (a caller-declared relative error bound) widens the sweep
+    to a second dimension: every (variant, wire codec) pair whose codec is
+    eligible under the tolerance (``wirecodec.allowed``) is measured, arms
+    keyed ``"variant@codec"``, and the winning pair — plus per-codec Eq. 3
+    fits against the best identity arm — lands in the decision.  With no
+    tolerance (the default) the sweep is variants-only at identity, exactly
+    the pre-codec behavior.
+
     Decisions resolve through three tiers: the in-memory
     ``cache.auto_choices`` (this process), then the plan ``store`` (a prior
     process — the sweep was paid once per *deployment*, not per run), and
@@ -88,47 +98,66 @@ def autotune_variant(
     sc = np.asarray(spec.send_counts)
     row_elems = int(np.prod(spec.feature_shape)) if spec.feature_shape else 1
     row_bytes = row_elems * jnp.dtype(spec.dtype).itemsize
+    codecs = wirecodec.allowed(error_tol)
+    sweep_codecs = len(codecs) > 1
     # The decision signature encodes the candidate-set restriction: an
     # embeddable sweep (ragged excluded) must not share a cache/store key
     # with an unrestricted one, or its winner would overwrite — and later
     # be trusted as — a decision measured over a different candidate set.
+    # The eligible-codec set is folded in the same way (via the signature's
+    # codec component): two callers declaring different tolerances sweep
+    # different arms and must not alias one decision.
     auto_sig = md.PatternSignature.build(
         sc, spec.feature_shape, spec.dtype,
         "auto_embed" if embeddable else "auto", spec.axis, row_bytes,
         lock_schedule=spec.lock_schedule, tile_rows=spec.tile_rows,
         pack_impl=spec.pack_impl, baked_metadata=spec.baked_metadata,
-        axis_sizes=tuple(mesh.shape[a] for a in spec.axis))
+        axis_sizes=tuple(mesh.shape[a] for a in spec.axis),
+        codec=("auto[" + ",".join(codecs) + "]" if sweep_codecs
+               else "identity"))
 
     cands = candidate_variants(spec, mesh)
     if embeddable:
         cands = [v for v in cands if v != "ragged"]
 
+    def _usable(ch: dict | None) -> bool:
+        # A stored decision for a variant this host cannot build (e.g.
+        # ragged chosen on TPU, replayed on CPU), one excluded for this
+        # consumer (ragged for an embedding caller), or one naming a codec
+        # the declared tolerance no longer admits, must not be trusted.
+        return (ch is not None and ch.get("variant") in cands
+                and ch.get("codec", "identity") in codecs)
+
     choice = cache.auto_choices.get(auto_sig)
-    if choice is not None and choice.get("variant") not in cands:
-        choice = None          # cached winner excluded for this consumer
+    if not _usable(choice):
+        choice = None
     if choice is None and store is not None:
         choice = store.get_auto(auto_sig)
-        if choice is not None:
-            # A stored decision for a variant this host cannot build (e.g.
-            # ragged chosen on TPU, replayed on CPU) — or one excluded for
-            # this consumer (ragged for an embedding caller) — must not be
-            # trusted.
-            if choice.get("variant") in cands:
-                cache.auto_choices[auto_sig] = choice
-            else:
-                choice = None
+        if _usable(choice):
+            cache.auto_choices[auto_sig] = choice
+        else:
+            choice = None
     if choice is not None:
-        plan = cache.get(_candidate_spec(spec, choice["variant"]), mesh,
-                         store=store)
+        plan = cache.get(
+            _candidate_spec(spec, choice["variant"],
+                            choice.get("codec", "identity")),
+            mesh, store=store)
         plan.auto_choice = choice
         return plan
 
     t_sweep0 = time.perf_counter()
+    # Arm keys: bare variant names for the identity-only sweep (the
+    # pre-codec decision format), "variant@codec" once codecs join.
     plans: dict[str, AlltoallvPlan] = {}
     for variant in cands:
-        plan = cache.get(_candidate_spec(spec, variant), mesh, store=store)
-        plan.compile()
-        plans[variant] = plan
+        for cdc in codecs:
+            if cdc != "identity" and variant == "ragged":
+                continue       # ragged writes raw wire bytes; identity only
+            key = f"{variant}@{cdc}" if sweep_codecs else variant
+            plan = cache.get(_candidate_spec(spec, variant, cdc), mesh,
+                             store=store)
+            plan.compile()
+            plans[key] = plan
 
     INIT_STATS.autotune_sweeps += 1
     INIT_STATS.autotune_bursts += bursts * len(plans)
@@ -154,6 +183,7 @@ def autotune_variant(
             times[v] = min(times[v], t)
 
     best = min(times, key=times.get)
+    best_variant, best_codec = _split_arm(best)
     # Eq. 1-3 applied to the *decision*: the sweep is the one-time INIT cost
     # and the per-epoch saving is best-vs-runner-up, so n_amortize is how
     # many epochs until measuring beat just picking the second-best variant.
@@ -161,7 +191,8 @@ def autotune_variant(
     sweep_seconds = time.perf_counter() - t_sweep0
     ranked = sorted(times, key=times.get)
     delta = (times[ranked[1]] - times[ranked[0]]) if len(ranked) > 1 else 0.0
-    choice = {"variant": best,
+    choice = {"variant": best_variant,
+              "codec": best_codec,
               "times": {v: float(t) for v, t in times.items()},
               "breakeven": {
                   "sweep_seconds": float(sweep_seconds),
@@ -173,6 +204,15 @@ def autotune_variant(
                   # (json.dumps would emit non-standard Infinity).
                   "n_amortize": (int(math.ceil(sweep_seconds / delta))
                                  if delta > 0 else None)}}
+    if sweep_codecs:
+        # Eq. 3 per (pattern, codec): the per-epoch saving of each codec's
+        # best arm over the best identity arm, and how many epochs until
+        # the sweep cost amortizes against shipping identity bytes.
+        per_codec: dict[str, float] = {}
+        for key, t in times.items():
+            _, cdc = _split_arm(key)
+            per_codec[cdc] = min(per_codec.get(cdc, float("inf")), t)
+        choice["codec_fits"] = breakeven.codec_fits(per_codec, sweep_seconds)
     cache.auto_choices[auto_sig] = choice
     if store is not None:
         try:
@@ -184,7 +224,14 @@ def autotune_variant(
     return plan
 
 
-def _candidate_spec(spec: AlltoallvSpec, variant: str) -> AlltoallvSpec:
+def _split_arm(key: str) -> tuple[str, str]:
+    """"variant@codec" -> (variant, codec); bare variants are identity."""
+    variant, _, cdc = key.partition("@")
+    return variant, (cdc or "identity")
+
+
+def _candidate_spec(spec: AlltoallvSpec, variant: str,
+                    codec: str = "identity") -> AlltoallvSpec:
     kw = {}
     if spec.pack_impl == "fused" and (
             variant in ("lock", "ragged")
@@ -193,4 +240,4 @@ def _candidate_spec(spec: AlltoallvSpec, variant: str) -> AlltoallvSpec:
         # hierarchy leader stage; other candidates use the pallas gather
         # (ragged bypasses pack entirely, but its spec must still validate).
         kw["pack_impl"] = "pallas"
-    return dataclasses.replace(spec, variant=variant, **kw)
+    return dataclasses.replace(spec, variant=variant, codec=codec, **kw)

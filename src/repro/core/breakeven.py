@@ -52,6 +52,61 @@ def n_breakeven(t_init: float, t_mpi: float, t_persist: float) -> float:
     return math.ceil(t_init / delta) if t_init > 0 else 1
 
 
+def codec_fits(per_codec_best: dict[str, float],
+               sweep_seconds: float) -> dict[str, dict]:
+    """Eq. 3 per (pattern, codec): each codec's best arm against the best
+    identity arm.  ``t_init`` is the codec sweep itself (the one-time cost a
+    tolerance-declaring INIT pays), the per-epoch saving is
+    ``t_identity - t_codec``, and ``n_amortize_vs_identity`` is Eq. 3's
+    epoch count — None (JSON-strict, no Infinity) when the codec never
+    pays off for this pattern."""
+    t_id = per_codec_best.get("identity", math.inf)
+    out = {}
+    for cdc, t in per_codec_best.items():
+        saving = t_id - t
+        out[cdc] = {
+            "t_best": float(t),
+            "saving_vs_identity": float(saving),
+            "n_amortize_vs_identity": (
+                int(n_breakeven(sweep_seconds, t_id, t))
+                if saving > 0 and math.isfinite(t_id) else None),
+        }
+    return out
+
+
+def size_fits(per_codec: dict[str, dict[float, float]]) -> dict[str, dict]:
+    """Eq. 3-style linear transport fit per codec over a payload sweep.
+
+    ``per_codec`` maps codec name -> {payload_kib: seconds}.  Each codec's
+    timings are fit to ``t(s) = alpha + beta * s``: ``alpha`` is the
+    per-epoch fixed cost (launch + codec op dispatch), ``beta`` the
+    per-KiB transport rate its wire width buys.  The interesting output is
+    ``crossover_kib_vs_identity`` — the payload beyond which the codec's
+    byte saving repays its fixed cost against the identity fit — which is
+    None (JSON-strict) when ``beta >= beta_identity``: on transports where
+    moved bytes are cheaper than the encode/decode passes (shared-memory
+    memcpy exchanges), a lossy codec never pays and the fit says so.
+    """
+    import numpy as np
+
+    fits = {}
+    for cdc, pts in per_codec.items():
+        sizes = np.array(sorted(pts), dtype=np.float64)
+        times = np.array([pts[s] for s in sizes], dtype=np.float64)
+        beta, alpha = np.polyfit(sizes, times, 1)
+        fits[cdc] = {"alpha_s": float(alpha), "beta_s_per_kib": float(beta)}
+    ident = fits.get("identity")
+    for cdc, f in fits.items():
+        cross = None
+        if ident is not None and cdc != "identity":
+            dbeta = ident["beta_s_per_kib"] - f["beta_s_per_kib"]
+            dalpha = f["alpha_s"] - ident["alpha_s"]
+            if dbeta > 0:
+                cross = max(dalpha / dbeta, 0.0)
+        f["crossover_kib_vs_identity"] = cross
+    return fits
+
+
 def measure_arms(arms: dict[str, Callable[[], jax.Array]],
                  iters: int = 50,
                  warmup: int = 5,

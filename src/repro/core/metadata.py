@@ -594,6 +594,9 @@ class PatternSignature:
     # Mesh factorization, kept as an explicit field (not only inside the
     # digest) so the plan store can key and validate entries on it.
     axis_sizes: tuple[int, ...] = ()
+    # Wire codec, an explicit field for the same reason: a plan persisted
+    # with an int8 wire must never warm-start an identity INIT.
+    codec: str = "identity"
 
     @staticmethod
     def build(
@@ -608,6 +611,7 @@ class PatternSignature:
         pack_impl: str = "jnp",
         baked_metadata: bool = True,
         axis_sizes: Sequence[int] = (),
+        codec: str = "identity",
     ) -> "PatternSignature":
         # Every spec field that changes the compiled executable must land in
         # the digest: two specs differing only in lock_schedule / tile_rows /
@@ -628,6 +632,11 @@ class PatternSignature:
                       lock_schedule, int(tile_rows), pack_impl,
                       bool(baked_metadata),
                       tuple(int(s) for s in axis_sizes))).encode())
+        if codec != "identity":
+            # Conditional so identity digests are byte-identical to the
+            # pre-codec era — an identity plan keys (and warm-starts)
+            # exactly as before this dimension existed.
+            h.update(("codec:" + codec).encode())
         return PatternSignature(
             digest=h.hexdigest()[:16],
             p=c.shape[0],
@@ -637,4 +646,5 @@ class PatternSignature:
             axis=tuple(axis),
             total_recv_bytes=int(c.sum()) * row_bytes,
             axis_sizes=tuple(int(s) for s in axis_sizes),
+            codec=codec,
         )

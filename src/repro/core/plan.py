@@ -59,6 +59,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
+from ..parallel import wirecodec
 from . import metadata as md
 from . import variants
 from ._init_stats import INIT_STATS
@@ -86,10 +87,23 @@ class AlltoallvSpec:
     tile_rows: int = md.TILE_ROWS
     pack_impl: str = "jnp"                # jnp | pallas | fused
     baked_metadata: bool = True           # False: seed-style in-graph maps (A/B)
+    codec: str = "identity"               # wire codec (parallel.wirecodec)
 
     def __post_init__(self):
         if self.variant not in VARIANTS:
             raise ValueError(f"variant must be one of {VARIANTS}")
+        if self.codec not in wirecodec.CODECS:
+            raise ValueError(f"unknown wire codec {self.codec!r}; "
+                             f"have {sorted(wirecodec.CODECS)}")
+        if self.codec != "identity" and self.variant == "ragged":
+            raise ValueError("wire codecs put decoded rows through the "
+                             "pack/unpack path; variant='ragged' writes raw "
+                             "wire bytes into the window and supports "
+                             "codec='identity' only")
+        if self.codec != "identity" and not self.baked_metadata:
+            raise ValueError("wire codecs require baked_metadata=True (the "
+                             "A/B in-graph mode measures the uncoded seed "
+                             "path)")
         if self.variant == "fence_hierarchy" and len(self.axis) != 2:
             raise ValueError("fence_hierarchy needs axis=(outer, inner)")
         if self.variant == "ragged" and len(self.axis) != 1:
@@ -202,7 +216,7 @@ class AlltoallvPlan:
             sc, spec.feature_shape, spec.dtype, spec.variant, spec.axis, row_bytes,
             lock_schedule=spec.lock_schedule, tile_rows=spec.tile_rows,
             pack_impl=spec.pack_impl, baked_metadata=spec.baked_metadata,
-            axis_sizes=axis_sizes)
+            axis_sizes=axis_sizes, codec=spec.codec)
 
         # --- window (paper: reuse while total_recv_bytes unchanged) ---
         self._window_cache = window_cache if window_cache is not None else WindowCache()
@@ -324,6 +338,13 @@ class AlltoallvPlan:
         else:
             kops = None
             pack, unpack = variants.pack_rows, partial(variants.unpack_rows)
+        # Non-identity codec: the heavy gather/exchange below runs at wire
+        # width (encode fused into the pack path); per-row fp32 scales ride
+        # the same variant exchange as a tiny [rows, 1] side channel (every
+        # exchange body is a row-preserving permutation, so the scale of
+        # row r travels with row r by construction).
+        codec = wirecodec.get(spec.codec) if spec.codec != "identity" else None
+        out_dtype = jnp.dtype(spec.dtype)
 
         def shard_fn(x: jax.Array, window: jax.Array, *tables) -> jax.Array:
             """Epoch body.  ``tables`` (baked mode) are this shard's rows of
@@ -337,6 +358,19 @@ class AlltoallvPlan:
                     x, window,
                     self._sd_tbl[i], self._sc_tbl[i],
                     self._put_tbl[i], self._rc_tbl[i], a2a_axis)
+
+            scales = None
+            if codec is not None:
+                x, scales = codec.encode(x)
+            # Scale inlining (see wirecodec): reference-gather paths fold
+            # the [rows, 1] scale channel into extra wire lanes so the
+            # exchange stays a single collective; kernel pack paths and the
+            # hierarchy schedule keep the side channel.
+            k = (wirecodec.inline_lanes(x, scales)
+                 if spec.variant != "fence_hierarchy"
+                 and spec.pack_impl not in ("pallas", "fused") else 0)
+            if k:
+                x, scales = wirecodec.inline_rows(x, scales, k), None
 
             if spec.variant == "fence_hierarchy":
                 # Leader-combined three-hop epoch on the two-stage tables.
@@ -353,6 +387,10 @@ class AlltoallvPlan:
                     x, rows[:6], self.hier_schedule,
                     spec.axis[0], spec.axis[1], stage2_impl=stage2)
                 rsrc, rvalid = rows[6], rows[7]
+                if scales is not None:
+                    sc_buckets = variants.hierarchy_exchange_combined(
+                        scales, rows[:6], self.hier_schedule,
+                        spec.axis[0], spec.axis[1], stage2_impl=None)
             else:
                 if spec.baked_metadata:
                     src, valid, rsrc, rvalid = (t[0] for t in tables)
@@ -362,6 +400,13 @@ class AlltoallvPlan:
                     rsrc, rvalid = variants.unpack_index_map_in_graph(
                         self._rc_tbl[i], self._rd_tbl[i], p, cap, self.recv_rows)
 
+                def exchange(packed):
+                    if spec.variant == "fence":
+                        return variants.fence_exchange(packed, a2a_axis)
+                    return variants.lock_exchange(
+                        packed, a2a_axis, p, cap,
+                        self.round_capacities, spec.lock_schedule)
+
                 if spec.pack_impl == "fused":
                     # Pack fused into the remote-DMA kernel: rows are gathered
                     # straight into the put source tile, never materializing the
@@ -370,15 +415,19 @@ class AlltoallvPlan:
                         x, src, valid, p=p, capacity=cap, axis=a2a_axis,
                         mesh_axes=tuple(self.mesh.axis_names))
                 else:
-                    packed = pack(x, src, valid)
-                    if spec.variant == "fence":
-                        buckets = variants.fence_exchange(packed, a2a_axis)
-                    else:  # lock
-                        buckets = variants.lock_exchange(
-                            packed, a2a_axis, p, cap,
-                            self.round_capacities, spec.lock_schedule)
+                    buckets = exchange(pack(x, src, valid))
+                if scales is not None:
+                    sc_buckets = exchange(
+                        variants.pack_rows(scales, src, valid))
 
             out = unpack(buckets, rsrc, rvalid)
+            if codec is not None:
+                if k:
+                    out, sc_out = wirecodec.split_rows(out, k)
+                else:
+                    sc_out = (variants.unpack_rows(sc_buckets, rsrc, rvalid)
+                              if scales is not None else None)
+                out = codec.decode(out, sc_out, out_dtype)
             # Write-through into the window: padding keeps stale window bytes
             # (real RMA semantics) and lets XLA alias the donated buffer.
             mask = rvalid.reshape(rvalid.shape + (1,) * (out.ndim - 1))
@@ -416,6 +465,8 @@ class AlltoallvPlan:
                              "A/B in-graph mode has no tables to embed)")
         p, cap = self.p, self.capacity
         a2a_axis = spec.axis[0] if len(spec.axis) == 1 else tuple(spec.axis)
+        codec = wirecodec.get(spec.codec) if spec.codec != "identity" else None
+        out_dtype = jnp.dtype(spec.dtype)
 
         if spec.variant == "fence_hierarchy":
             tbls = tuple(jnp.asarray(t) for t in self._table_host)
@@ -432,20 +483,53 @@ class AlltoallvPlan:
             def embedded(x: jax.Array) -> jax.Array:
                 i = self._axis_index()
                 rows = tuple(t[i] for t in tbls)
+                scales = None
+                if codec is not None:
+                    x_wire, scales = codec.encode(x)
+                else:
+                    x_wire = x
                 buckets = variants.hierarchy_exchange_combined(
-                    x, rows[:6], sched, spec.axis[0], spec.axis[1],
+                    x_wire, rows[:6], sched, spec.axis[0], spec.axis[1],
                     stage2_impl=stage2)
-                return variants.unpack_rows(buckets, rows[6], rows[7])
+                out = variants.unpack_rows(buckets, rows[6], rows[7])
+                if codec is not None:
+                    sc_out = None
+                    if scales is not None:
+                        sc_buckets = variants.hierarchy_exchange_combined(
+                            scales, rows[:6], sched, spec.axis[0],
+                            spec.axis[1], stage2_impl=None)
+                        sc_out = variants.unpack_rows(
+                            sc_buckets, rows[6], rows[7])
+                    out = codec.decode(out, sc_out, out_dtype)
+                return out
         elif self.identity_maps:
             # Uniform identity pattern (the MoE bucket layout): both gathers
             # vanish, no tables are ever materialized on device, and
-            # pack_impl is moot — the epoch IS the bare exchange.
-            def embedded(x: jax.Array) -> jax.Array:
+            # pack_impl is moot — the epoch IS the bare exchange (plus the
+            # wire encode/decode and its scale side channel under a codec).
+            def bare_exchange(payload):
                 if spec.variant == "fence":
-                    return variants.fence_exchange(x, a2a_axis)
+                    return variants.fence_exchange(payload, a2a_axis)
                 return variants.lock_exchange(
-                    x, a2a_axis, p, cap,
+                    payload, a2a_axis, p, cap,
                     self.round_capacities, spec.lock_schedule)
+
+            def embedded(x: jax.Array) -> jax.Array:
+                if codec is None:
+                    return bare_exchange(x)
+                wire, scales = codec.encode(x)
+                k = wirecodec.inline_lanes(wire, scales)
+                if k:
+                    # Scales ride inline as extra wire lanes: one collective
+                    # instead of payload + side channel (see wirecodec).
+                    out, sc_out = wirecodec.split_rows(
+                        bare_exchange(wirecodec.inline_rows(wire, scales, k)),
+                        k)
+                else:
+                    out = bare_exchange(wire)
+                    sc_out = (bare_exchange(scales)
+                              if scales is not None else None)
+                return codec.decode(out, sc_out, out_dtype)
         else:
             # Honor spec.pack_impl so the embedded epoch runs the same
             # pack/unpack implementation the autotuner measured through the
@@ -461,20 +545,43 @@ class AlltoallvPlan:
 
             def embedded(x: jax.Array) -> jax.Array:
                 i = self._axis_index()
+                scales = None
+                if codec is not None:
+                    x, scales = codec.encode(x)
+                # Inline the scale channel into the payload rows when the
+                # reference gathers run (kernel pack paths keep the side
+                # channel — their tile shapes are baked for the bare wire).
+                k = (wirecodec.inline_lanes(x, scales)
+                     if spec.pack_impl not in ("pallas", "fused") else 0)
+                if k:
+                    x, scales = wirecodec.inline_rows(x, scales, k), None
+
+                def exchange(packed):
+                    if spec.variant == "fence":
+                        return variants.fence_exchange(packed, a2a_axis)
+                    return variants.lock_exchange(
+                        packed, a2a_axis, p, cap,
+                        self.round_capacities, spec.lock_schedule)
+
                 if spec.pack_impl == "fused" and spec.variant == "fence":
                     buckets = kops.fused_pack_alltoallv(
                         x, tbls[0][i], tbls[1][i], p=p, capacity=cap,
                         axis=a2a_axis,
                         mesh_axes=tuple(self.mesh.axis_names))
                 else:
-                    packed = pack_fn(x, tbls[0][i], tbls[1][i])
-                    if spec.variant == "fence":
-                        buckets = variants.fence_exchange(packed, a2a_axis)
-                    else:  # lock
-                        buckets = variants.lock_exchange(
-                            packed, a2a_axis, p, cap,
-                            self.round_capacities, spec.lock_schedule)
-                return unpack_fn(buckets, tbls[2][i], tbls[3][i])
+                    buckets = exchange(pack_fn(x, tbls[0][i], tbls[1][i]))
+                out = unpack_fn(buckets, tbls[2][i], tbls[3][i])
+                if codec is not None:
+                    sc_out = None
+                    if k:
+                        out, sc_out = wirecodec.split_rows(out, k)
+                    elif scales is not None:
+                        sc_buckets = exchange(variants.pack_rows(
+                            scales, tbls[0][i], tbls[1][i]))
+                        sc_out = variants.unpack_rows(
+                            sc_buckets, tbls[2][i], tbls[3][i])
+                    out = codec.decode(out, sc_out, out_dtype)
+                return out
 
         self._embedded = embedded
         return embedded
@@ -559,6 +666,7 @@ class AlltoallvPlan:
             "window_generation": self.window.generation,
             "baked_metadata": self.spec.baked_metadata,
             "pack_impl": self.spec.pack_impl,
+            "codec": self.spec.codec,
             "warm_loaded": self.warm_loaded,
             "identity_maps": self.identity_maps,
             "lock_rounds_active": self.lock_rounds_active,
@@ -597,7 +705,8 @@ class PlanCache:
             spec.variant, spec.axis, row_bytes,
             lock_schedule=spec.lock_schedule, tile_rows=spec.tile_rows,
             pack_impl=spec.pack_impl, baked_metadata=spec.baked_metadata,
-            axis_sizes=tuple(mesh.shape[a] for a in spec.axis))
+            axis_sizes=tuple(mesh.shape[a] for a in spec.axis),
+            codec=spec.codec)
         plan = self._plans.get(sig)
         if plan is not None:
             self.hits += 1

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: fused unpack-gather-matmul (receive-side mirror of the
+fused pack-put).
+
+After a persistent exchange the received rows sit in the window's bucketed
+layout; the MoE expert FFN's first matmul wants them regrouped per local
+expert.  The reference path materializes that regroup as a full
+``[recv_rows, D]`` intermediate in HBM and only then multiplies.  This
+kernel deletes the intermediate: grid step (e, g) DMAs the TILE_R source
+rows expert ``e`` needs — addressed by the INIT-baked unpack table, scalar-
+prefetched so the DMA addresses precede the tile — straight into a VMEM
+scratch tile, masks padding rows, and feeds the tile to the MXU against
+expert ``e``'s weight block.  The gathered activations never round-trip
+through HBM; per grid step the working set is one (TILE_R, D) scratch tile,
+one (D, F) weight block, and one (TILE_R, F) output block.
+
+BlockSpec geometry: D and F are padded to the 128-lane quantum by
+``ops.py``; x stays in HBM (``pl.ANY``) and is row-addressed by the
+prefetched index map, exactly the ``gather_rows`` discipline.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_TILE_ROWS = 64
+
+
+def _gather_matmul_kernel(idx_ref, x_ref, valid_ref, w_ref, out_ref,
+                          scratch, sems, *, tile_rows, n_per_e):
+    e = pl.program_id(0)
+    g = pl.program_id(1)
+    base = e * n_per_e + g * tile_rows
+
+    def start_row(r, _):
+        s = idx_ref[base + r]
+        pltpu.make_async_copy(x_ref.at[s], scratch.at[r], sems.at[r]).start()
+        return _
+
+    jax.lax.fori_loop(0, tile_rows, start_row, 0)
+
+    def wait_row(r, _):
+        s = idx_ref[base + r]
+        pltpu.make_async_copy(x_ref.at[s], scratch.at[r], sems.at[r]).wait()
+        return _
+
+    jax.lax.fori_loop(0, tile_rows, wait_row, 0)
+    rows = scratch[...] * valid_ref[...].astype(scratch.dtype)
+    out_ref[0] = jnp.dot(rows, w_ref[0],
+                         preferred_element_type=jnp.float32
+                         ).astype(out_ref.dtype)
+
+
+def gather_matmul(
+    x: jax.Array,          # [R, D_pad] source rows (HBM-resident)
+    idx: jax.Array,        # [E, N] int32 source row per (expert, output row)
+    valid: jax.Array,      # [E, N] int32/bool padding mask
+    w: jax.Array,          # [E, D_pad, F_pad] per-expert weight blocks
+    *,
+    tile_rows: int = DEFAULT_TILE_ROWS,
+    interpret: bool | object = False,
+) -> jax.Array:
+    e, n = idx.shape
+    if n % tile_rows:
+        raise ValueError(f"N={n} must be a multiple of tile_rows={tile_rows}")
+    d = x.shape[1]
+    f = w.shape[2]
+    if w.shape[:2] != (e, d):
+        raise ValueError(f"w {w.shape} does not match idx E={e}, x D={d}")
+    idx_flat = idx.reshape(e * n).astype(jnp.int32)
+    valid2d = valid.astype(jnp.int32).reshape(e * n, 1)
+    blocks_per_e = n // tile_rows
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(e, blocks_per_e),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),                 # x stays in HBM
+            pl.BlockSpec((tile_rows, 1),
+                         lambda ei, g, idx: (ei * blocks_per_e + g, 0)),
+            pl.BlockSpec((1, d, f), lambda ei, g, idx: (ei, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_rows, f),
+                               lambda ei, g, idx: (ei, g, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((tile_rows, d), x.dtype),
+            pltpu.SemaphoreType.DMA((tile_rows,)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_gather_matmul_kernel, tile_rows=tile_rows,
+                          n_per_e=n),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((e, n, f), x.dtype),
+        interpret=interpret,
+    )(idx_flat, x, valid2d, w)

@@ -14,7 +14,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from . import gather_rows as _gather
+from . import gather_matmul as _gmm
 from . import a2a_fence as _fence
 from . import a2a_hier as _hier
 from . import a2a_lock as _lock
@@ -82,6 +85,91 @@ def unpack(buckets: jax.Array, src_idx: jax.Array, valid: jax.Array,
            interpret=None) -> jax.Array:
     """Bucketed recv layout -> contiguous ragged recv buffer (Pallas gather)."""
     return _masked_gather(buckets, src_idx, valid, interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _kernel_unpack_matmul(interp_key, x2d, idx, valid, w):
+    return _gmm.gather_matmul(
+        x2d, idx, valid, w, tile_rows=_pick_tile(idx.shape[1]),
+        interpret=(interp_key == "interpret"))
+
+
+def _kernel_unpack_matmul_fwd(interp_key, x2d, idx, valid, w):
+    return (_kernel_unpack_matmul(interp_key, x2d, idx, valid, w),
+            (x2d, idx, valid, w))
+
+
+def _kernel_unpack_matmul_bwd(interp_key, res, g):
+    # jnp transpose of the fused forward: the backward pass is training-only
+    # and off the serve hot path, so it takes the reference scatter-add form.
+    x2d, idx, valid, w = res
+    e, n = idx.shape
+    vm = valid.reshape(e, n, 1).astype(x2d.dtype)
+    gc = g.astype(x2d.dtype)
+    h = jnp.take(x2d, idx.reshape(-1), axis=0).reshape(e, n, -1) * vm
+    dw = jnp.einsum("end,enf->edf", h, gc).astype(w.dtype)
+    dh = jnp.einsum("enf,edf->end", gc, w.astype(x2d.dtype)) * vm
+    dx = jnp.zeros_like(x2d).at[idx.reshape(-1)].add(dh.reshape(e * n, -1))
+    f0 = np.zeros((), jax.dtypes.float0)
+    return (dx, np.broadcast_to(f0, idx.shape),
+            np.broadcast_to(f0, valid.shape), dw)
+
+
+_kernel_unpack_matmul.defvjp(_kernel_unpack_matmul_fwd,
+                             _kernel_unpack_matmul_bwd)
+
+
+def fused_unpack_matmul(x: jax.Array, idx: jax.Array, w: jax.Array,
+                        valid: jax.Array | None = None,
+                        scales: jax.Array | None = None,
+                        interpret=None) -> jax.Array:
+    """Fused unpack-gather-matmul: ``out[e] = (x[idx[e]] * valid[e]) @ w[e]``.
+
+    Receive-side mirror of the fused pack-put: the expert FFN's first
+    matmul reads rows straight out of the receive buffer via the INIT-baked
+    unpack table.  On TPU the Pallas kernel (``kernels/gather_matmul.py``)
+    DMAs each row tile into VMEM and feeds the MXU — the regrouped
+    ``[recv_rows, D]`` intermediate never lands in HBM.  Off-TPU the
+    semantically identical jnp gather + einsum runs instead (the per-row
+    interpreted DMAs would be orders slower than the reference einsum, and
+    the jnp form is natively differentiable); the kernel path carries a
+    custom VJP whose backward is the jnp scatter-add transpose.
+
+    ``scales`` ([rows, 1], a wire codec's per-row dequant factors) folds
+    the decode into the gather: ``x`` may be narrow wire rows (int8/fp8)
+    and each gathered row is scaled as it is read — the decoded
+    ``[recv_rows, D]`` fp32 buffer never materializes on the fallback
+    path.  The kernel path pre-scales ``x`` instead (in-kernel dequant is
+    future work), which still skips one full-buffer round trip vs
+    decode-then-gather.
+    """
+    idx = jnp.asarray(idx, jnp.int32)
+    e, n = idx.shape
+    if valid is None:
+        valid = jnp.ones((e, n), jnp.int32)
+    x2d, _ = _flatten_features(x)
+    if interpret is None:
+        if jax.default_backend() != "cpu":
+            interpret = False
+        else:
+            h = jnp.take(x2d, idx.reshape(-1), axis=0).reshape(e, n, -1)
+            h = h.astype(w.dtype)
+            if scales is not None:
+                h = h * jnp.take(scales, idx.reshape(-1), axis=0
+                                 ).reshape(e, n, 1).astype(w.dtype)
+            h = h * valid.reshape(e, n, 1).astype(h.dtype)
+            return jnp.einsum("end,edf->enf", h, w)
+    if scales is not None or x2d.dtype != w.dtype:
+        x2d = x2d.astype(w.dtype)
+        if scales is not None:
+            x2d = x2d * scales.astype(w.dtype)
+    x2d, d0 = _pad_lanes(x2d)
+    f0 = w.shape[2]
+    wp = jnp.pad(w.astype(x2d.dtype),
+                 ((0, 0), (0, x2d.shape[1] - d0), (0, (-f0) % LANE)))
+    out = _kernel_unpack_matmul("interpret" if interpret else "compile",
+                                x2d, idx, valid.astype(jnp.int32), wp)
+    return out[:, :, :f0]
 
 
 def fused_pack_alltoallv(x: jax.Array, src_idx: jax.Array, valid: jax.Array,

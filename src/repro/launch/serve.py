@@ -19,6 +19,13 @@ def main(argv=None):
     p.add_argument("--max-seq", type=int, default=None)
     p.add_argument("--mesh", default="1,1")
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--wire-codec", default=None,
+                   choices=["identity", "bf16", "int8", "fp8"],
+                   help="wire codec for the MoE EP exchange; lossy codecs "
+                        "require --codec-tol")
+    p.add_argument("--codec-tol", type=float, default=None,
+                   help="declared relative error tolerance for lossy wire "
+                        "compression of routed activations")
     p.add_argument("--plan-store", default=None, metavar="DIR_OR_URL",
                    help="persistent plan store, set as the process default "
                         "(repro.planstore.configure): a directory, "
@@ -30,6 +37,8 @@ def main(argv=None):
                         "previous serving processes")
     args = p.parse_args(argv)
 
+    import dataclasses
+
     import numpy as np
 
     from repro.configs import get, get_reduced
@@ -37,6 +46,13 @@ def main(argv=None):
     from repro.serve import ServeEngine
 
     cfg = get_reduced(args.arch) if args.reduced else get(args.arch)
+    if args.wire_codec or args.codec_tol is not None:
+        assert cfg.moe is not None, f"{cfg.name} has no MoE layers"
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe,
+            wire_codec=args.wire_codec or cfg.moe.wire_codec,
+            codec_tol=(args.codec_tol if args.codec_tol is not None
+                       else cfg.moe.codec_tol)))
     dims = tuple(int(d) for d in args.mesh.split(","))
     axes = ("pod", "data", "model")[-len(dims):]
     mesh = make_mesh(dims, axes)

@@ -107,6 +107,7 @@ def make_train_bundle(
     n_micro: int = 1,
     rules: Optional[dict] = None,
     fsdp_threshold_bytes: float = 3 * 2**30,
+    grad_compression: bool = False,
 ) -> StepBundle:
     sched = sched or sched_mod.ScheduleConfig()
     adamw = adamw or opt_mod.AdamWConfig(
@@ -129,16 +130,28 @@ def make_train_bundle(
                 logical_specs, params_abs, mesh, adamw, zero1=True,
                 dp_axes=dp_axes)["m"]
 
-        opt_abs = jax.eval_shape(partial(opt_mod.init_opt_state, cfg=adamw),
+        opt_abs = jax.eval_shape(partial(opt_mod.init_opt_state, cfg=adamw,
+                                         grad_err=grad_compression),
                                  params_abs)
         opt_sh = opt_mod.opt_state_shardings(logical_specs, params_abs, mesh,
                                              adamw, zero1=zero1,
-                                             dp_axes=dp_axes)
+                                             dp_axes=dp_axes,
+                                             grad_err=grad_compression)
         grad_sh = opt_sh["m"] if (zero1 or fsdp) else param_sh
         batch_abs = model_api.batch_spec(cfg, shape.global_batch, shape.seq_len)
         batch_sh = _batch_shardings(cfg, mesh, batch_abs)
         moe_plan = model_api.build_moe_plan(
             cfg, _moe_tokens_per_shard(cfg, shape, mesh), mesh)
+
+        # Compressed DP gradient sync runs at TP-only sharding (every leaf
+        # DP-replicated) so the int8 mean-reduce over the data axes sees
+        # whole replicas; clip + AdamW then constrain back to the ZeRO
+        # shardings as before.
+        comp_sync = None
+        if grad_compression:
+            from repro.parallel.sharding import specs_to_pspecs
+            comp_sync = grad_util.compressed_sync(
+                mesh, specs_to_pspecs(logical_specs, params_abs), dp_axes)
 
         def train_step(params, opt_state, batch, step):
             lr = sched_mod.lr_at(sched, step)
@@ -153,9 +166,17 @@ def make_train_bundle(
 
             loss, metrics, grads = grad_util.accumulate_grads(
                 loss_fn, params, batch, n_micro, constrain=constrain)
+            if comp_sync is not None:
+                grads, new_err = comp_sync(grads, opt_state["grad_err"])
+                grads = constrain(grads)
             grads, gn = grad_util.clip_by_global_norm(grads, clip_norm)
             new_params, new_opt = opt_mod.adamw_update(grads, opt_state,
                                                        params, lr, adamw)
+            if comp_sync is not None:
+                # adamw_update rebuilds the state dict from its own keys;
+                # re-attach the fresh EF residual so it checkpoints with
+                # the rest of the optimizer state.
+                new_opt["grad_err"] = new_err
             metrics = dict(metrics, grad_norm=gn, lr=lr)
             return new_params, new_opt, metrics
 
@@ -174,7 +195,8 @@ def make_train_bundle(
         meta={"cfg": cfg, "shape": shape, "moe_plan": moe_plan,
               "param_shardings": param_sh, "opt_shardings": opt_sh,
               "batch_shardings": batch_sh, "logical_specs": logical_specs,
-              "sched": sched, "adamw": adamw},
+              "sched": sched, "adamw": adamw,
+              "grad_compression": grad_compression},
     )
 
 

@@ -35,6 +35,21 @@ def main(argv=None) -> dict:
                    help="chunked dispatch->FFN->combine pipeline depth for "
                         "MoE EP dispatch (1 = no overlap; clamped to the "
                         "capacity geometry)")
+    p.add_argument("--wire-codec", default=None,
+                   choices=["identity", "bf16", "int8", "fp8"],
+                   help="wire codec for the MoE EP exchange "
+                        "(parallel.wirecodec); lossy codecs additionally "
+                        "require --codec-tol covering the codec's declared "
+                        "relative error bound")
+    p.add_argument("--codec-tol", type=float, default=None,
+                   help="declared relative error tolerance for lossy wire "
+                        "compression of routed activations; with "
+                        "--a2a-variant auto it widens the INIT sweep to "
+                        "(variant, codec) arms")
+    p.add_argument("--grad-compression", action="store_true",
+                   help="int8 + error-feedback data-parallel gradient sync "
+                        "(parallel.compression); the EF residual rides in "
+                        "the optimizer state and checkpoints with it")
     p.add_argument("--rules", default="default",
                    choices=["default", "long_context", "decode", "pure_dp",
                             "hier_ep"],
@@ -82,13 +97,17 @@ def main(argv=None) -> dict:
     from repro.train import ScheduleConfig, Trainer, TrainerConfig
 
     cfg = get_reduced(args.arch) if args.reduced else get(args.arch)
-    if args.dispatch or args.a2a_variant or args.overlap_chunks:
+    if (args.dispatch or args.a2a_variant or args.overlap_chunks
+            or args.wire_codec or args.codec_tol is not None):
         assert cfg.moe is not None, f"{cfg.name} has no MoE layers"
         moe = dataclasses.replace(
             cfg.moe,
             dispatch=args.dispatch or cfg.moe.dispatch,
             a2a_variant=args.a2a_variant or cfg.moe.a2a_variant,
-            overlap_chunks=args.overlap_chunks or cfg.moe.overlap_chunks)
+            overlap_chunks=args.overlap_chunks or cfg.moe.overlap_chunks,
+            wire_codec=args.wire_codec or cfg.moe.wire_codec,
+            codec_tol=(args.codec_tol if args.codec_tol is not None
+                       else cfg.moe.codec_tol))
         cfg = dataclasses.replace(cfg, moe=moe)
 
     base_shape = SHAPES[args.shape]
@@ -108,7 +127,8 @@ def main(argv=None) -> dict:
     from repro.parallel.sharding import RULE_PROFILES
     bundle = steps_mod.make_train_bundle(
         cfg, shape, mesh, sched=sched, zero1=not args.no_zero1,
-        n_micro=args.micro, rules=RULE_PROFILES[args.rules])
+        n_micro=args.micro, rules=RULE_PROFILES[args.rules],
+        grad_compression=args.grad_compression)
     trainer = Trainer(bundle, TrainerConfig(
         n_steps=args.steps, ckpt_dir=args.ckpt_dir,
         ckpt_every=args.ckpt_every, log_every=args.log_every))

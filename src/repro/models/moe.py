@@ -60,6 +60,8 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map
 from repro.configs.base import MoEConfig
 from repro.core import variants as core_variants
+from repro.kernels import ops as kops
+from repro.parallel import wirecodec
 from repro.parallel.sharding import (ScopedFactory, active_rules, batch_ways,
                                      cs, current_mesh, normal_init, resolve)
 
@@ -117,6 +119,13 @@ class MoEDispatchPlan:
     # dispatch->FFN->combine pipeline depth (chunks of the capacity axis);
     # clamped at build to what the tile-aligned capacity supports.
     overlap_chunks: int = 1
+    # Wire codec for the dispatch/combine exchanges (parallel.wirecodec).
+    # The MoE path runs the codec FUSED: token rows are encoded before the
+    # capacity scatter (so the scatter, the exchange, and the FFN gather
+    # all move wire-width rows, with per-row scales inlined as extra
+    # lanes), and decode folds into the fused unpack-gather-matmul — the
+    # backing plan is built at wire width as a plain byte mover.
+    wire_codec: str = "identity"
     # Backing persistent plan (core.AlltoallvPlan) for the chunk-geometry
     # pattern; excluded from identity/hash (it is derived state).
     a2a: Any = dataclasses.field(default=None, compare=False, repr=False)
@@ -136,6 +145,12 @@ class MoEDispatchPlan:
     @property
     def plan_backed(self) -> bool:
         return self.a2a is not None
+
+    @property
+    def codec(self) -> str:
+        """Wire codec of the dispatch/combine exchanges (fused form: the
+        MoE body encodes/decodes; the backing plan just moves the bytes)."""
+        return self.wire_codec
 
     @staticmethod
     def _ep_axes(mesh) -> tuple[str, ...]:
@@ -214,15 +229,25 @@ class MoEDispatchPlan:
         variant = moe.a2a_variant
         if variant == "fence_hierarchy" and hier_axes is None:
             variant = "fence"          # no (outer, inner) pair to group over
+        # Lossy codecs are opt-in via an explicit tolerance, enforced here
+        # for every dispatch impl (the fused path bypasses the generic
+        # plan-level gate by handing the plan pre-encoded wire rows).
+        codec = wirecodec.require(moe.wire_codec, moe.codec_tol)
         a2a = None
         if (plan_backed and d_model is not None and axis is not None
                 and ep > 1 and moe.dispatch == "persistent_a2a"):
             from repro.core import api as core_api
             chunk_rows = (moe.n_experts // ep) * (cap // k)
             counts = np.full((ep, ep), chunk_rows, np.int64)
+            # Fused wire path: the MoE body encodes token rows before the
+            # capacity scatter and decodes inside the FFN gather, so the
+            # backing plan is a byte mover at wire width — feature
+            # d_model (+ inlined scale lanes), wire dtype, codec=identity.
+            wire_d = int(d_model) + codec.scale_lanes
+            wire_dt = (codec.wire_dtype if codec.wire_dtype is not None
+                       else (dtype if dtype is not None else jnp.float32))
             a2a = core_api.alltoallv_init(
-                counts, (int(d_model),),
-                dtype if dtype is not None else jnp.float32,
+                counts, (wire_d,), wire_dt,
                 mesh, axis=axis, variant=variant, tile_rows=tile,
                 pack_impl=pack_impl, cache=cache, store=store,
                 autotune_iters=autotune_iters, embeddable=True)
@@ -241,7 +266,8 @@ class MoEDispatchPlan:
             n_experts=moe.n_experts, top_k=moe.top_k, ep_size=ep,
             e_local=moe.n_experts // ep, tokens_per_shard=t_loc,
             capacity=cap, variant=variant, axis=axis,
-            hier_axes=hier_axes, overlap_chunks=k, a2a=a2a)
+            hier_axes=hier_axes, overlap_chunks=k,
+            wire_codec=moe.wire_codec, a2a=a2a)
 
 
 # ---------------------------------------------------------------------------
@@ -362,8 +388,27 @@ def _a2a_shard_body(tokens, router_w, w_gate, w_up, w_down,
 
     slot, keep, w, counts, aux = _route(chunk, router_w, valid,
                                         plan.top_k, plan.n_experts, cap)
-    packed = _scatter_buckets(chunk, slot, keep, plan.top_k,
-                              plan.n_experts * cap, d)
+
+    # Fused wire codec: token rows are encoded ONCE, before the capacity
+    # scatter, so the scatter, both exchanges, and the FFN gather all move
+    # wire-width rows; per-row fp32 scales ride inlined as extra wire
+    # lanes (row-preserving hops keep scale r with row r).  Decode folds
+    # into the consuming gathers — the decoded fp32 buffer between
+    # exchange and FFN never materializes.
+    codec = (wirecodec.get(plan.codec) if plan.codec != "identity" else None)
+    lanes = codec.scale_lanes if codec is not None else 0
+    ctype = chunk.dtype
+
+    def to_wire(rows):
+        if codec is None:
+            return rows
+        wire, sc = codec.encode(rows)
+        return wirecodec.inline_rows(wire, sc, lanes) if lanes else wire
+
+    wrows = to_wire(chunk)
+    dw = wrows.shape[1]
+    packed = _scatter_buckets(wrows, slot, keep, plan.top_k,
+                              plan.n_experts * cap, dw)
 
     if not persistent and axis:
         # Non-persistent: re-exchange metadata every call (per-target counts
@@ -382,24 +427,44 @@ def _a2a_shard_body(tokens, router_w, w_gate, w_up, w_down,
     exchange = _shard_exchange_fn(plan)
     n_chunks = plan.overlap_chunks if exchange is not None else 1
     ck = cap // n_chunks
-    packed4 = packed.reshape(ep, e_loc, cap, d)
+    packed4 = packed.reshape(ep, e_loc, cap, dw)
 
     def dispatch_chunk(c):
         blk = jax.lax.slice_in_dim(packed4, c * ck, (c + 1) * ck, axis=2)
-        blk = blk.reshape(ep * e_loc * ck, d)
+        blk = blk.reshape(ep * e_loc * ck, dw)
         return exchange(blk) if exchange is not None else blk
 
+    # Receive-side regroup table: expert e's FFN rows, in [peer-major,
+    # slot-minor] order, addressed directly in the exchanged chunk buffer
+    # ([ep, e_loc, ck, D] row-major).  Static per chunk geometry, so the
+    # fused unpack-gather-matmul consumes it as a baked constant — the
+    # regrouped [e_loc, ep*ck, D] intermediate never materializes.
+    regroup_idx = ((np.arange(ep)[:, None] * (e_loc * ck)
+                    + np.arange(ck)[None, :])[None]
+                   + (np.arange(e_loc) * ck)[:, None, None]
+                   ).reshape(e_loc, ep * ck).astype(np.int32)
+
     def ffn_combine_chunk(xch):
-        # regroup: [ep, e_loc, ck, D] -> [e_loc, ep*ck, D], expert FFN,
+        # Expert FFN straight off the receive buffer: the gate/up matmuls
+        # gather expert e's rows via the static regroup table (fused
+        # unpack-gather-matmul; Pallas on TPU, jnp gather+einsum off-TPU),
         # then the reverse exchange (all_to_all is an involution on the
-        # bucket layout).
-        h = xch.reshape(ep, e_loc, ck, d).transpose(1, 0, 2, 3)
-        h = h.reshape(e_loc, ep * ck, d)
-        h = _expert_ffn(h, w_gate, w_up, w_down)
+        # bucket layout).  Under a codec the receive buffer holds wire
+        # rows: the scale lanes split off and dequant rides the gather.
+        if lanes:
+            xq, xsc = wirecodec.split_rows(xch, lanes)
+        else:
+            xq, xsc = xch, None
+        g = kops.fused_unpack_matmul(xq, regroup_idx,
+                                     w_gate.astype(ctype), scales=xsc)
+        u = kops.fused_unpack_matmul(xq, regroup_idx,
+                                     w_up.astype(ctype), scales=xsc)
+        a = jax.nn.silu(g) * u
+        h = jnp.einsum("ecf,efd->ecd", a, w_down.astype(ctype))
         back = h.reshape(e_loc, ep, ck, d).transpose(1, 0, 2, 3)
-        back = back.reshape(ep * e_loc * ck, d)
+        back = to_wire(back.reshape(ep * e_loc * ck, d).astype(ctype))
         out = exchange(back) if exchange is not None else back
-        return out.reshape(ep, e_loc, ck, d)
+        return out.reshape(ep, e_loc, ck, dw)
 
     # Software pipeline: issue chunk c+1's dispatch before chunk c's FFN.
     dispatched = [None] * n_chunks
@@ -410,11 +475,24 @@ def _a2a_shard_body(tokens, router_w, w_gate, w_up, w_down,
             dispatched[c + 1] = dispatch_chunk(c + 1)
         outs.append(ffn_combine_chunk(dispatched[c]))
     returned = (outs[0] if n_chunks == 1
-                else jnp.concatenate(outs, axis=2)).reshape(ep * e_loc * cap, d)
+                else jnp.concatenate(outs, axis=2)).reshape(ep * e_loc * cap, dw)
 
-    # combine: gather my entries back out of the returned buckets
-    padded = jnp.concatenate([returned, jnp.zeros((8, d), returned.dtype)], axis=0)
-    out_entries = padded[slot] * (keep.astype(returned.dtype) * w.astype(returned.dtype))[:, None]
+    # combine: gather my entries back out of the returned buckets; under a
+    # codec the gather reads narrow wire rows and dequant follows it (on
+    # [T*k, D] gathered entries, never on the full bucket buffer).
+    padded = jnp.concatenate([returned, jnp.zeros((8, dw), returned.dtype)],
+                             axis=0)
+    ent = padded[slot]
+    comb = keep.astype(ctype) * w.astype(ctype)
+    if codec is not None:
+        if lanes:
+            # Fold the per-row dequant scale into the combine weight: one
+            # [T*k] product instead of a second full-width [T*k, D] pass.
+            eq, esc = wirecodec.split_rows(ent, lanes)
+            ent, comb = eq.astype(ctype), comb * esc.reshape(-1).astype(ctype)
+        else:
+            ent = codec.decode(ent, None, ctype)
+    out_entries = ent * comb[:, None]
     y_chunk = out_entries.reshape(t_loc, plan.top_k, d).sum(axis=1)
 
     if axis:

@@ -1,0 +1,228 @@
+"""Wire codecs: payload encodings for persistent alltoallv exchanges.
+
+This is the promotion of ``parallel/compression.py``'s standalone int8 toy
+into a first-class dimension of every persistent exchange (paper Eq. 1-3:
+once metadata is amortized, runtime is data movement — so shrink the bytes
+that move).  A codec maps the send payload ``[rows, *F] dtype`` to a wire
+payload ``[rows, *F] wire_dtype`` plus an optional per-row fp32 scale side
+channel ``[rows, 1]``; both ride the *same* variant exchange body (pack /
+fence / lock / hierarchy are all row-preserving gathers and permutes, so
+correctness is codec-agnostic), and decode fuses into the unpack side.
+
+Codecs are strictly opt-in for lossy encodings: INIT callers declare an
+error tolerance (worst-case per-element error relative to the row's max
+magnitude) and only codecs whose declared bound fits are eligible.  With no
+tolerance declared, ``identity`` is the only legal codec — lossy wire
+compression is never silently enabled.
+
+    codec      wire bits  scales   declared rel. error bound
+    identity   32 (=in)   no       0
+    bf16       16         no       2^-8      (bfloat16 roundoff)
+    int8       8          yes      0.5/127   (per-row symmetric quant step)
+    fp8        8          yes      2^-4      (e4m3 roundoff, scaled rows)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_TINY = 1e-30  # keeps all-zero rows from dividing by zero
+
+
+def _row_absmax(x: jax.Array) -> jax.Array:
+    """Per-row max magnitude over all trailing dims -> [rows, 1] fp32."""
+    r = x.shape[0]
+    red = jnp.max(jnp.abs(x.astype(jnp.float32).reshape(r, -1)), axis=1)
+    return red.reshape(r, 1)
+
+
+def _bcast(scales: jax.Array, ndim: int) -> jax.Array:
+    """[rows, 1] scales broadcast-shaped against a [rows, *F] payload."""
+    return scales.reshape(scales.shape[0], *([1] * (ndim - 1)))
+
+
+@dataclasses.dataclass(frozen=True)
+class WireCodec:
+    """One payload encoding.  ``encode`` returns ``(wire, scales)`` where
+    ``scales`` is a ``[rows, 1] float32`` side channel or None; ``decode``
+    inverts it back to ``out_dtype``.  ``rel_error`` is the declared
+    worst-case per-element error relative to the row max — the quantity a
+    caller's ``error_tol`` gates on."""
+
+    name: str
+    wire_bits: int
+    lossy: bool
+    rel_error: float
+    has_scales: bool
+    _encode: Callable
+    _decode: Callable
+    # Concrete wire element type (None for identity: the input dtype IS the
+    # wire dtype).  Callers that move pre-encoded wire rows through a plain
+    # byte-moving exchange (the fused MoE path) size buffers off this.
+    wire_dtype: Optional[Any] = None
+
+    def encode(self, x: jax.Array) -> Tuple[jax.Array, Optional[jax.Array]]:
+        return self._encode(x)
+
+    def decode(self, wire: jax.Array, scales: Optional[jax.Array],
+               out_dtype) -> jax.Array:
+        return self._decode(wire, scales, out_dtype)
+
+    @property
+    def ratio(self) -> float:
+        """Nominal payload shrink factor vs fp32 (scale channel excluded)."""
+        return 32.0 / self.wire_bits
+
+    @property
+    def scale_lanes(self) -> int:
+        """Extra wire-dtype lanes one inlined fp32 row scale occupies when
+        the scale channel rides inside the payload rows (0 for unscaled
+        codecs)."""
+        if not self.has_scales or self.wire_dtype is None:
+            return 0
+        return 4 // jnp.dtype(self.wire_dtype).itemsize
+
+
+# ---------------------------------------------------------------------------
+# Codec implementations
+# ---------------------------------------------------------------------------
+
+
+def _identity_enc(x):
+    return x, None
+
+
+def _identity_dec(wire, scales, out_dtype):
+    return wire if wire.dtype == out_dtype else wire.astype(out_dtype)
+
+
+def _bf16_enc(x):
+    return x.astype(jnp.bfloat16), None
+
+
+def _bf16_dec(wire, scales, out_dtype):
+    return wire.astype(out_dtype)
+
+
+def _int8_enc(x):
+    step = jnp.maximum(_row_absmax(x), _TINY) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / _bcast(step, x.ndim)),
+                 -127.0, 127.0).astype(jnp.int8)
+    return q, step.astype(jnp.float32)
+
+
+def _int8_dec(wire, scales, out_dtype):
+    return (wire.astype(jnp.float32)
+            * _bcast(scales, wire.ndim)).astype(out_dtype)
+
+
+_FP8_MAX = 448.0  # float8_e4m3fn dynamic-range ceiling
+
+
+def _fp8_enc(x):
+    scale = jnp.maximum(_row_absmax(x), _TINY) / _FP8_MAX
+    wire = (x.astype(jnp.float32) / _bcast(scale, x.ndim)).astype(
+        jnp.float8_e4m3fn)
+    return wire, scale.astype(jnp.float32)
+
+
+def _fp8_dec(wire, scales, out_dtype):
+    return (wire.astype(jnp.float32)
+            * _bcast(scales, wire.ndim)).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Scale inlining: ride the per-row fp32 scale inside the payload exchange
+# ---------------------------------------------------------------------------
+#
+# A scaled codec's side channel costs a second collective per exchange —
+# on launch-overhead-bound backends (XLA:CPU executes collectives as
+# synchronous rendezvous) that second dispatch can cost more than the wire
+# bytes the codec saves.  Because every exchange body is row-preserving,
+# the [rows, 1] fp32 scale can instead be bitcast into extra wire-dtype
+# lanes appended to each row: one collective moves payload + scales, and
+# the unpack side splits the lanes back off before decode.
+
+
+def inline_lanes(wire: jax.Array, scales: Optional[jax.Array]) -> int:
+    """Trailing wire-dtype lanes one fp32 row scale occupies when inlined,
+    or 0 when inlining does not apply (no scale channel, non-2D payload,
+    or wire itemsize not dividing the scale itemsize)."""
+    if scales is None or wire.ndim != 2:
+        return 0
+    k, rem = divmod(scales.dtype.itemsize, wire.dtype.itemsize)
+    return k if rem == 0 else 0
+
+
+def inline_rows(wire: jax.Array, scales: jax.Array, k: int) -> jax.Array:
+    """[rows, d] wire + [rows, 1] scales -> [rows, d+k] wire."""
+    sb = jax.lax.bitcast_convert_type(scales, wire.dtype)
+    return jnp.concatenate([wire, sb.reshape(wire.shape[0], k)], axis=1)
+
+
+def split_rows(packed: jax.Array, k: int,
+               scale_dtype=jnp.float32) -> Tuple[jax.Array, jax.Array]:
+    """Invert ``inline_rows``: [rows, d+k] -> ([rows, d], [rows, 1])."""
+    rows = packed.shape[0]
+    scales = jax.lax.bitcast_convert_type(
+        packed[:, -k:].reshape(rows, 1, k), scale_dtype)
+    return packed[:, :-k], scales.reshape(rows, 1)
+
+
+IDENTITY = "identity"
+
+CODECS: dict[str, WireCodec] = {
+    "identity": WireCodec("identity", 32, False, 0.0, False,
+                          _identity_enc, _identity_dec),
+    "bf16": WireCodec("bf16", 16, True, 2.0 ** -8, False,
+                      _bf16_enc, _bf16_dec, wire_dtype=jnp.bfloat16),
+    "int8": WireCodec("int8", 8, True, 0.5 / 127.0, True,
+                      _int8_enc, _int8_dec, wire_dtype=jnp.int8),
+}
+
+if hasattr(jnp, "float8_e4m3fn"):  # older jax builds lack fp8 dtypes
+    CODECS["fp8"] = WireCodec("fp8", 8, True, 2.0 ** -4, True,
+                              _fp8_enc, _fp8_dec,
+                              wire_dtype=jnp.float8_e4m3fn)
+
+
+def get(name: str) -> WireCodec:
+    try:
+        return CODECS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown wire codec {name!r}; have {sorted(CODECS)}") from None
+
+
+def require(name: str, error_tol: Optional[float]) -> WireCodec:
+    """Resolve a codec by name, enforcing the lossy opt-in contract: a
+    lossy codec needs a declared ``error_tol`` covering its rel. error
+    bound.  The single gate every codec entry point shares."""
+    c = get(name)
+    if c.lossy and (error_tol is None or c.rel_error > float(error_tol)):
+        raise ValueError(
+            f"codec {name!r} is lossy (declared rel. error "
+            f"{c.rel_error:g}); pass error_tol >= that bound to opt in "
+            f"(got {error_tol!r}) — lossy wire compression is never "
+            f"enabled silently")
+    return c
+
+
+def allowed(error_tol: Optional[float]) -> Tuple[str, ...]:
+    """Codec names eligible under a declared tolerance, cheapest wire first.
+
+    ``identity`` is always eligible.  Lossy codecs require an explicit
+    tolerance covering their declared ``rel_error`` — ``error_tol=None``
+    (the default everywhere) admits identity only."""
+    names = ["identity"]
+    if error_tol is not None:
+        tol = float(error_tol)
+        if tol < 0:
+            raise ValueError(f"error_tol must be >= 0, got {tol}")
+        names += [c.name for c in CODECS.values()
+                  if c.lossy and c.rel_error <= tol]
+    return tuple(sorted(names, key=lambda n: (CODECS[n].wire_bits, n)))

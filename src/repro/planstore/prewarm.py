@@ -31,7 +31,7 @@ from typing import Iterable
 #: Record field order is irrelevant; this canonical form keys deduplication.
 _REQ_FIELDS = ("send_counts", "feature_shape", "dtype", "axis", "axis_sizes",
                "variant", "lock_schedule", "tile_rows", "pack_impl",
-               "baked_metadata", "embeddable")
+               "baked_metadata", "embeddable", "codec", "error_tol")
 
 
 def request_key(req: dict) -> str:
@@ -131,9 +131,12 @@ def replay_request(req: dict, store, cache=None,
         autotune_iters=(autotune_iters if autotune_iters is not None
                         else req.get("autotune_iters", 8)),
         embeddable=req.get("embeddable", False),
+        codec=req.get("codec", "identity"),
+        error_tol=req.get("error_tol"),
     )
     return {"digest": plan.signature.digest,
             "variant": plan.spec.variant,
+            "codec": plan.spec.codec,
             "requested_variant": req["variant"],
             "p": plan.p, "axis_sizes": list(sizes),
             "warm": bool(plan.warm_loaded)}

@@ -34,7 +34,11 @@ import numpy as np
 from repro._version import __version__ as REPRO_VERSION
 from repro.core import metadata as md
 
-SCHEMA_VERSION = 1
+# v2: signature_meta carries the wire codec (PatternSignature.codec) — a
+# plan persisted under an int8 wire must never warm an identity INIT, and
+# vice versa.  Old v1 entries get a different store key and are clean
+# misses, never validation crashes.
+SCHEMA_VERSION = 2
 
 
 class ArtifactError(Exception):
@@ -93,6 +97,7 @@ def signature_meta(sig: "md.PatternSignature") -> dict:
         "axis": list(sig.axis),
         "total_recv_bytes": sig.total_recv_bytes,
         "axis_sizes": [int(s) for s in sig.axis_sizes],
+        "codec": sig.codec,
     }
 
 
@@ -168,7 +173,9 @@ class PlanArtifact:
             "p": self.signature.get("p"),
             "axis_sizes": self.signature.get("axis_sizes"),
             "payload": self.payload_kind,
+            "codec": self.signature.get("codec", "identity"),
             "auto_choice": (self.auto_choice or {}).get("variant"),
+            "auto_codec": (self.auto_choice or {}).get("codec"),
             "has_breakeven": self.breakeven is not None,
             "jax_version": self.jax_version,
             "repro_version": self.repro_version,

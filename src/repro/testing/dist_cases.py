@@ -1241,6 +1241,140 @@ def production_mesh_mini():
         assert c.cost_analysis() is not None
 
 
+@case
+def moe_codec_dispatch_parity():
+    """Compressed EP dispatch parity: the fused wire path (encode before
+    the capacity scatter, decode folded into the FFN/combine gathers)
+    stays within the codec's declared tolerance of the uncompressed
+    plan-backed output under controlled dense / banded / skewed routing on
+    both (2, 4) and (4, 2) meshes — and codec=identity is bit-identical
+    to the default plan-backed path AND to the table-free exchange (the
+    pre-codec behavior, regression-pinned)."""
+    import dataclasses
+
+    from repro.configs.base import MoEConfig
+    from repro.launch.mesh import make_mesh
+    from repro.models import moe as moe_mod
+    from repro.parallel.sharding import DEFAULT_RULES, ParamFactory, axis_rules
+
+    d_model, tokens, e = 64, 256, 8
+    base = MoEConfig(n_experts=e, top_k=2, d_expert=32, capacity_factor=16.0)
+    for shape in [(2, 4), (4, 2)]:
+        mesh = make_mesh(shape, ("data", "model"))
+        with axis_rules(DEFAULT_RULES, mesh):
+            f = ParamFactory(jax.random.key(0), jnp.float32)
+            moe_mod.init_moe(f.scope("moe"), d_model, base)
+            params = f.params["moe"]
+            for pattern in ("dense", "banded", "skewed"):
+                xnp, router = _routed_moe_setup(pattern, d_model,
+                                                tokens, e, seed=5)
+                params = dict(params, router=jnp.asarray(router))
+                x = jax.device_put(
+                    jnp.asarray(xnp.reshape(shape[0], tokens // shape[0],
+                                            d_model)),
+                    NamedSharding(mesh, P("data", None, None)))
+                outs = {}
+                for name, mkw, kw in [
+                        ("plain", {}, {"d_model": d_model,
+                                       "dtype": jnp.float32}),
+                        ("identity", {"wire_codec": "identity"},
+                         {"d_model": d_model, "dtype": jnp.float32}),
+                        ("table_free", {}, {"plan_backed": False}),
+                        ("int8", {"wire_codec": "int8", "codec_tol": 0.01},
+                         {"d_model": d_model, "dtype": jnp.float32}),
+                        ("bf16", {"wire_codec": "bf16", "codec_tol": 4e-3},
+                         {"d_model": d_model, "dtype": jnp.float32})]:
+                    mcfg = dataclasses.replace(
+                        base, dispatch="persistent_a2a", **mkw)
+                    plan = moe_mod.MoEDispatchPlan.build(
+                        mcfg, tokens // shape[0], mesh, **kw)
+                    y, _ = jax.jit(lambda xx, m=mcfg, pl=plan:
+                                   moe_mod.apply_moe(params, xx, m, pl))(x)
+                    outs[name] = np.asarray(y)
+                tag = f"{pattern} mesh={shape}"
+                # identity codec: bit-identical to the pre-codec paths.
+                np.testing.assert_array_equal(outs["identity"],
+                                              outs["plain"], err_msg=tag)
+                np.testing.assert_array_equal(outs["identity"],
+                                              outs["table_free"],
+                                              err_msg=tag)
+                # lossy codecs: within a small multiple of the declared
+                # per-hop bound (two wire hops + FFN products compound).
+                # The bound is relative to the encoded ROW max — the
+                # dispatched hidden rows (max |x|), not the combined
+                # output, set the error scale.
+                scale = np.abs(xnp).max()
+                for name, mult in (("int8", 4), ("bf16", 4)):
+                    c_err = {"int8": 0.5 / 127, "bf16": 2.0 ** -8}[name]
+                    np.testing.assert_allclose(
+                        outs[name], outs["plain"],
+                        atol=mult * c_err * scale, rtol=0,
+                        err_msg=f"{tag} codec={name}")
+    print("codec dispatch parity: dense/banded/skewed x (2,4)/(4,2) OK")
+
+
+@case
+def codec_planstore_warm_start():
+    """variant="auto" with a lossy tolerance sweeps (variant, codec) arms,
+    persists the winning pair to the plan store, and a second process's
+    INIT (emulated: fresh cache + fresh store handle on the same disk)
+    replays the decision warm — zero measurement bursts, zero table bakes,
+    same (variant, codec)."""
+    import tempfile
+
+    from repro.core import INIT_STATS, PlanCache, alltoallv_init
+    from repro.launch.mesh import make_host_mesh
+    from repro.planstore import PlanStore
+
+    p = len(jax.devices())
+    counts, bufs, expect, rc, send_rows, recv_rows = _setup_pattern(p, seed=29)
+    mesh = make_host_mesh(p)
+    x = jax.device_put(jnp.asarray(bufs.reshape(p * send_rows, 4)),
+                       NamedSharding(mesh, P("x")))
+    tol = 0.004            # admits bf16 + int8 (not fp8)
+
+    with tempfile.TemporaryDirectory() as d:
+        # --- run 1: cold — measures every (variant, codec) arm -----------
+        INIT_STATS.reset()
+        plan = alltoallv_init(counts, (4,), jnp.float32, mesh, axis="x",
+                              variant="auto", error_tol=tol,
+                              cache=PlanCache(), store=PlanStore(d),
+                              autotune_iters=4)
+        arms = set(plan.auto_choice["times"])
+        assert any("@int8" in a for a in arms), arms
+        assert any("@bf16" in a for a in arms), arms
+        assert "codec_fits" in plan.auto_choice
+        assert plan.auto_choice["codec"] == plan.spec.codec
+        assert INIT_STATS.autotune_bursts > 0 and INIT_STATS.store_puts > 0
+        got = np.asarray(plan.wait(plan.start(x))).reshape(p, recv_rows, 4)
+        if plan.spec.codec == "identity":
+            _check(got, expect, rc, p)
+
+        # --- run 2: warm — decision replayed, nothing re-measured --------
+        INIT_STATS.reset()
+        plan2 = alltoallv_init(counts, (4,), jnp.float32, mesh, axis="x",
+                               variant="auto", error_tol=tol,
+                               cache=PlanCache(), store=PlanStore(d),
+                               autotune_iters=4)
+        assert INIT_STATS.autotune_bursts == 0, INIT_STATS.as_dict()
+        assert INIT_STATS.table_bakes == 0, INIT_STATS.as_dict()
+        assert INIT_STATS.warm_inits >= 1
+        assert plan2.spec.variant == plan.spec.variant
+        assert plan2.spec.codec == plan.spec.codec
+        assert plan2.auto_choice["codec"] == plan.auto_choice["codec"]
+
+        # --- a different tolerance is a different decision key -----------
+        INIT_STATS.reset()
+        plan3 = alltoallv_init(counts, (4,), jnp.float32, mesh, axis="x",
+                               variant="auto", error_tol=None,
+                               cache=PlanCache(), store=PlanStore(d),
+                               autotune_iters=4)
+        assert plan3.spec.codec == "identity"
+        assert set(plan3.auto_choice["times"]) != arms or len(arms) == len(
+            set(plan3.auto_choice["times"]))
+    print("codec warm start:", plan.spec.variant, plan.spec.codec)
+
+
 def main():
     import argparse
     ap = argparse.ArgumentParser()

@@ -1,4 +1,5 @@
-"""Gradient utilities: global-norm clipping and microbatch accumulation."""
+"""Gradient utilities: global-norm clipping, microbatch accumulation, and
+the compressed data-parallel gradient sync (int8 + error feedback)."""
 
 from __future__ import annotations
 
@@ -16,6 +17,38 @@ def clip_by_global_norm(grads, max_norm: float):
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
     return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
                         grads), gn
+
+
+def compressed_sync(mesh, specs, dp_axes):
+    """Build the int8+error-feedback data-parallel gradient sync.
+
+    Returns ``sync(grads, err) -> (grads, new_err)``: a shard_map over the
+    full mesh at ``specs`` (the TP-only PartitionSpecs — every leaf is
+    replicated across the data axes there) running
+    ``compression.compressed_psum_tree`` over the DP axes.  Each DP replica
+    quantizes its (identical) gradient shard to the int8 grid with the
+    carried error-feedback residual folded in, the quantized payload is
+    mean-reduced over ``dp_axes``, and the fresh residual comes back for
+    the optimizer state to carry to the next step.  Replicas quantize
+    identical inputs, so the residual stays DP-replicated by construction
+    and the sync is exactly quantize-with-EF in value — what changes is
+    what crosses the DP wire.
+
+    ``dp_axes`` not present in the mesh (or size 1) drop out; with no DP
+    axis left the psum degenerates to the identity and the sync is a pure
+    local quantize+EF pass, so the state threading is identical either way.
+    """
+    from repro.compat import shard_map
+    from repro.parallel import compression
+
+    dp = tuple(a for a in dp_axes
+               if a in mesh.axis_names and int(mesh.shape[a]) > 1)
+
+    def body(g, e):
+        return compression.compressed_psum_tree(g, dp, e)
+
+    return shard_map(body, mesh=mesh, in_specs=(specs, specs),
+                     out_specs=(specs, specs), check_vma=False)
 
 
 def accumulate_grads(loss_fn, params, batch, n_micro: int, constrain=None):

@@ -72,7 +72,8 @@ class Trainer:
                 jax.random.key(self.tcfg.seed), self.cfg)
             self.params = put_tree(self.params, self.bundle.meta["param_shardings"])
             self.opt_state = opt_mod.init_opt_state(
-                self.params, self.bundle.meta["adamw"])
+                self.params, self.bundle.meta["adamw"],
+                grad_err=self.bundle.meta.get("grad_compression", False))
 
     def try_resume(self) -> bool:
         if self.ckpt is None or self.ckpt.latest_step() is None:
@@ -159,6 +160,7 @@ class Trainer:
         return {
             "plan_backed": a2a is not None,
             "variant": self.moe_plan.variant,
+            "codec": self.moe_plan.codec,
             "overlap_chunks": self.moe_plan.overlap_chunks,
             "warm_loaded": bool(a2a.warm_loaded) if a2a is not None else False,
             "auto_choice": getattr(a2a, "auto_choice", None)

@@ -29,7 +29,11 @@ class AdamWConfig:
     master_weights: bool = True   # keep fp32 master copy for bf16 params
 
 
-def init_opt_state(params, cfg: AdamWConfig):
+def init_opt_state(params, cfg: AdamWConfig, grad_err: bool = False):
+    """``grad_err=True`` adds the error-feedback residual tree for the
+    compressed gradient sync (``train.grad.compressed_sync``); living in
+    the optimizer state, it rides the existing checkpoint/restore and
+    donation paths for free."""
     zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
     state = {
         "m": jax.tree.map(zeros32, params),
@@ -38,6 +42,8 @@ def init_opt_state(params, cfg: AdamWConfig):
     }
     if cfg.master_weights:
         state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    if grad_err:
+        state["grad_err"] = jax.tree.map(zeros32, params)
     return state
 
 
@@ -112,7 +118,8 @@ def zero1_pspec(logical_axes: tuple, shape: tuple, mesh: Mesh,
 
 
 def opt_state_shardings(logical_specs, params, mesh: Mesh, cfg: AdamWConfig,
-                        zero1: bool = True, dp_axes=("data",)):
+                        zero1: bool = True, dp_axes=("data",),
+                        grad_err: bool = False):
     """NamedSharding tree matching init_opt_state's structure."""
     def leaf_sharding(axes, p):
         if zero1:
@@ -125,4 +132,12 @@ def opt_state_shardings(logical_specs, params, mesh: Mesh, cfg: AdamWConfig,
            "count": NamedSharding(mesh, P())}
     if cfg.master_weights:
         out["master"] = per_param
+    if grad_err:
+        # The EF residual is produced/consumed by the compressed sync at
+        # TP-only sharding (DP-replicated, never ZeRO-scattered): each DP
+        # replica carries the identical residual it folds into the next
+        # step's quantization.
+        out["grad_err"] = jax.tree.map(
+            lambda axes, p: NamedSharding(mesh, resolve(axes, p.shape)),
+            logical_specs, params, is_leaf=lambda x: isinstance(x, tuple))
     return out

@@ -104,6 +104,14 @@ def test_moe_planstore_warm_start(dist):
     dist("moe_planstore_warm_start", devices=8)
 
 
+def test_moe_codec_dispatch_parity(dist):
+    dist("moe_codec_dispatch_parity", devices=8)
+
+
+def test_codec_planstore_warm_start(dist):
+    dist("codec_planstore_warm_start", devices=8)
+
+
 def test_compression_distributed(dist):
     dist("compression_distributed", devices=4)
 

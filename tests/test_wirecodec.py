@@ -1,0 +1,156 @@
+"""Wire-codec property tests: round-trip error bounds, scale inlining,
+and the lossy opt-in contract (distributed parity in test_distributed.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.parallel import wirecodec
+
+LOSSY = [n for n in wirecodec.CODECS if wirecodec.CODECS[n].lossy]
+
+
+def _rows(seed, rows=32, d=24, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((rows, d)) * scale, jnp.float32)
+
+
+@settings(max_examples=20)
+@given(st.integers(0, 10_000), st.floats(1e-4, 1e3))
+def test_roundtrip_error_bound(seed, scale):
+    """Every codec's measured round-trip error respects its declared
+    per-element bound relative to the row max (the quantity error_tol
+    gates on)."""
+    x = _rows(seed, scale=scale)
+    row_max = np.asarray(jnp.max(jnp.abs(x), axis=1, keepdims=True))
+    for name, c in wirecodec.CODECS.items():
+        wire, scales = c.encode(x)
+        back = np.asarray(c.decode(wire, scales, jnp.float32))
+        err = np.abs(back - np.asarray(x))
+        bound = c.rel_error * row_max + 1e-6 * scale
+        assert (err <= bound).all(), (name, float(err.max()))
+        if name == "identity":
+            np.testing.assert_array_equal(back, np.asarray(x))
+
+
+def test_declared_wire_dtypes():
+    assert wirecodec.get("identity").wire_dtype is None
+    assert wirecodec.get("bf16").wire_dtype == jnp.bfloat16
+    assert wirecodec.get("int8").wire_dtype == jnp.int8
+    assert wirecodec.get("identity").scale_lanes == 0
+    assert wirecodec.get("bf16").scale_lanes == 0
+    assert wirecodec.get("int8").scale_lanes == 4
+    assert wirecodec.get("int8").ratio == 4.0
+
+
+@settings(max_examples=15)
+@given(st.integers(0, 10_000))
+def test_scale_inline_roundtrip_bitexact(seed):
+    """inline_rows/split_rows is a pure bitcast shuttle: the scale channel
+    survives the payload ride bit-for-bit, for every scaled codec."""
+    x = _rows(seed)
+    for name in LOSSY:
+        c = wirecodec.get(name)
+        if not c.has_scales:
+            continue
+        wire, scales = c.encode(x)
+        k = wirecodec.inline_lanes(wire, scales)
+        assert k == c.scale_lanes > 0
+        packed = wirecodec.inline_rows(wire, scales, k)
+        assert packed.shape == (x.shape[0], x.shape[1] + k)
+        assert packed.dtype == wire.dtype
+        w2, s2 = wirecodec.split_rows(packed, k)
+        np.testing.assert_array_equal(np.asarray(w2), np.asarray(wire))
+        np.testing.assert_array_equal(np.asarray(s2), np.asarray(scales))
+
+
+def test_inline_lanes_gating():
+    x = _rows(0)
+    wire, scales = wirecodec.get("int8").encode(x)
+    assert wirecodec.inline_lanes(wire, None) == 0          # no side channel
+    assert wirecodec.inline_lanes(wire.reshape(32, 6, 4), scales) == 0
+    assert wirecodec.inline_lanes(x, scales) == 1           # f32 wire: 1 lane
+
+
+def test_zero_rows_no_nan():
+    x = jnp.zeros((4, 8), jnp.float32)
+    for name in LOSSY:
+        c = wirecodec.get(name)
+        wire, scales = c.encode(x)
+        back = np.asarray(c.decode(wire, scales, jnp.float32))
+        assert np.isfinite(back).all()
+        np.testing.assert_array_equal(back, 0.0)
+
+
+def test_lossy_opt_in_contract():
+    """Lossy codecs are never silently enabled: require() admits identity
+    with no tolerance, rejects lossy codecs without one (or with one below
+    the declared bound), and rejects unknown names."""
+    assert wirecodec.require("identity", None).name == "identity"
+    for name in LOSSY:
+        c = wirecodec.get(name)
+        with pytest.raises(ValueError, match="never"):
+            wirecodec.require(name, None)
+        with pytest.raises(ValueError, match="never"):
+            wirecodec.require(name, c.rel_error / 2)
+        assert wirecodec.require(name, c.rel_error).name == name
+    with pytest.raises(ValueError, match="unknown"):
+        wirecodec.require("zstd", 1.0)
+
+
+def test_allowed_ordering():
+    assert wirecodec.allowed(None) == ("identity",)
+    names = wirecodec.allowed(1.0)
+    assert set(names) == set(wirecodec.CODECS)
+    bits = [wirecodec.CODECS[n].wire_bits for n in names]
+    assert bits == sorted(bits)          # cheapest wire first
+    with pytest.raises(ValueError):
+        wirecodec.allowed(-0.1)
+
+
+def test_fused_unpack_matmul_scales_fold():
+    """The scales argument of fused_unpack_matmul equals decode-then-gather
+    -then-matmul: the decode genuinely folded into the consumer."""
+    from repro.kernels import ops as kops
+
+    rng = np.random.default_rng(5)
+    rows, d, e, n, f = 64, 16, 4, 8, 12
+    x = jnp.asarray(rng.standard_normal((rows, d)), jnp.float32)
+    c = wirecodec.get("int8")
+    wire, scales = c.encode(x)
+    idx = jnp.asarray(rng.integers(0, rows, (e, n)), jnp.int32)
+    valid = jnp.asarray(rng.integers(0, 2, (e, n)), jnp.int32)
+    w = jnp.asarray(rng.standard_normal((e, d, f)) * 0.1, jnp.float32)
+
+    got = kops.fused_unpack_matmul(wire, idx, w, valid=valid, scales=scales)
+    dec = c.decode(wire, scales, jnp.float32)
+    h = jnp.take(dec, idx.reshape(-1), axis=0).reshape(e, n, d)
+    ref = jnp.einsum("end,edf->enf",
+                     h * valid.reshape(e, n, 1).astype(jnp.float32), w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_moe_config_codec_gate():
+    """MoEDispatchPlan.build rejects a lossy wire_codec without codec_tol
+    (same contract as the generic INIT) on a single device."""
+    import dataclasses
+
+    from repro.configs.base import MoEConfig
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import moe as moe_mod
+
+    mesh = make_host_mesh(1)
+    base = MoEConfig(n_experts=4, top_k=2, d_expert=8,
+                     dispatch="persistent_a2a")
+    with pytest.raises(ValueError, match="never"):
+        moe_mod.MoEDispatchPlan.build(
+            dataclasses.replace(base, wire_codec="int8"), 16, mesh,
+            d_model=8, dtype=jnp.float32)
+    plan = moe_mod.MoEDispatchPlan.build(
+        dataclasses.replace(base, wire_codec="int8", codec_tol=0.01), 16,
+        mesh, d_model=8, dtype=jnp.float32)
+    assert plan.codec == "int8"
