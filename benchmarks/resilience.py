@@ -1,0 +1,160 @@
+"""Benchmark: what self-healing costs when healthy, and how fast it heals.
+
+Resilience machinery only earns its place if the steady state stays free:
+the monitored epoch loop (telemetry ring + skew monitor) must price at
+noise next to a bare epoch.  The healing paths are then timed end to end —
+epochs from fault onset to a SkewReport, the background sandbox re-measure
+a trigger pays, and the device-loss rebuild with a cold vs a warm
+(store-backed) INIT — the same cold/warm gap ``init_cost`` measures, here
+on the recovery path where it decides replay-window downtime.
+
+Rows:
+
+  steady_baseline   bare epoch (start+wait), no monitoring
+  steady_monitored  epoch + record_epoch + monitor.observe() per epoch
+  detect            epochs from injected-stall onset to the SkewReport
+  replan_sandbox    one background re-measure (sandbox sweep, wall ms)
+  post_replan       epoch time on the re-measured winner
+  recover_cold      device-loss rebuild, empty store (bake + publish)
+  recover_warm      device-loss rebuild, store hit (the healing fast path)
+
+    python resilience.py [repeats] [--json]
+"""
+
+import argparse
+import tempfile
+
+from _util import Csv, set_host_devices
+
+N_DEVICES = 16
+JSON_OUT = "experiments/bench/BENCH_resilience.json"
+
+
+def main(repeats=30, json_out=None, out="experiments/bench/resilience.csv"):
+    set_host_devices(N_DEVICES)
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import PlanCache, alltoallv_init
+    from repro.core.autotune import _candidate_spec
+    from repro.launch.mesh import make_host_mesh
+    from repro.planstore import PlanStore
+    from repro.runtime import replan as replan_mod
+    from repro.runtime.chaos import ChaosInjector
+    from repro.runtime.straggler import PlanSkewMonitor
+
+    p = N_DEVICES
+    rng = np.random.default_rng(7)
+    counts = rng.integers(32, 96, size=(p, p))
+    mesh = make_host_mesh(p)
+    csv = Csv(out)
+    iters = max(repeats, 5)
+
+    with tempfile.TemporaryDirectory() as d:
+        store, cache = PlanStore(d), PlanCache()
+        plan = alltoallv_init(counts, (64,), jnp.float32, mesh, axis="x",
+                              variant="auto", cache=cache, store=store,
+                              autotune_iters=4)
+        x = jax.device_put(
+            jnp.zeros(plan.global_send_shape, jnp.float32), plan._x_sharding)
+
+        def epoch(pl):
+            jax.block_until_ready(pl.wait(pl.start(x)))
+
+        # -- steady state: is monitoring free? ---------------------------
+        plan.record_starts = False      # the driver times epochs itself
+        for _ in range(3):
+            epoch(plan)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            epoch(plan)
+        base_us = (time.perf_counter() - t0) / iters * 1e6
+
+        monitor = PlanSkewMonitor(plan.epoch_ring, threshold=1.5, window=8,
+                                  sustain=3, warmup=8)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            te = time.perf_counter()
+            epoch(plan)
+            plan.record_epoch(time.perf_counter() - te)
+            monitor.observe()
+        mon_us = (time.perf_counter() - t0) / iters * 1e6
+        csv.row("resilience/steady_baseline", base_us, f"p={p};iters={iters}")
+        csv.row("resilience/steady_monitored", mon_us,
+                f"overhead_us={mon_us - base_us:.2f};"
+                f"overhead_pct={(mon_us / base_us - 1) * 100:.2f}")
+
+        # -- detection latency: fault onset -> SkewReport ----------------
+        monitor = PlanSkewMonitor(plan.epoch_ring, threshold=1.5, window=4,
+                                  sustain=2, warmup=6)
+        inj = ChaosInjector(seed=0, stall_steps=range(6, 10_000),
+                            stall_seconds=max(base_us / 1e6 * 3, 0.002))
+        detect = None
+        t_detect0 = time.perf_counter()
+        for e in range(10_000):
+            te = time.perf_counter()
+            inj.maybe_stall(e)
+            epoch(plan)
+            plan.record_epoch(time.perf_counter() - te)
+            if monitor.observe() is not None:
+                detect = e - 6 + 1      # epochs since the first stalled one
+                break
+        assert detect is not None, "skew never detected"
+        csv.row("resilience/detect", (time.perf_counter() - t_detect0) * 1e6,
+                f"epochs_to_detect={detect};window=4;sustain=2;"
+                f"stall_x=3")
+
+        # -- the healing paths -------------------------------------------
+        t0 = time.perf_counter()
+        choice = replan_mod.reautotune(plan, mesh, store=store, iters=4)
+        replan_ms = (time.perf_counter() - t0) * 1e3
+        winner = cache.get(
+            _candidate_spec(plan.spec, choice["variant"],
+                            choice.get("codec", "identity")),
+            mesh, store=store)
+        winner.record_starts = False
+        for _ in range(3):
+            epoch(winner)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            epoch(winner)
+        post_us = (time.perf_counter() - t0) / iters * 1e6
+        csv.row("resilience/replan_sandbox", replan_ms * 1e3,
+                f"ms={replan_ms:.1f};winner={choice['variant']}")
+        csv.row("resilience/post_replan", post_us,
+                f"vs_baseline={post_us / base_us:.2f}x")
+
+        # -- device-loss rebuild: cold vs warm store ---------------------
+        t_cold = t_warm = float("inf")
+        for _ in range(2):
+            with tempfile.TemporaryDirectory() as d2:
+                t0 = time.perf_counter()
+                alltoallv_init(counts, (64,), jnp.float32, mesh, axis="x",
+                               variant=plan.spec.variant, cache=PlanCache(),
+                               store=PlanStore(d2))
+                t_cold = min(t_cold, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            alltoallv_init(counts, (64,), jnp.float32, mesh, axis="x",
+                           variant=plan.spec.variant, cache=PlanCache(),
+                           store=store)
+            t_warm = min(t_warm, time.perf_counter() - t0)
+        csv.row("resilience/recover_cold", t_cold * 1e6,
+                f"ms={t_cold * 1e3:.1f}")
+        csv.row("resilience/recover_warm", t_warm * 1e6,
+                f"ms={t_warm * 1e3:.1f};speedup={t_cold / t_warm:.1f}x")
+
+    csv.save()
+    if json_out:
+        csv.save_json(json_out)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("repeats", nargs="?", type=int, default=30)
+    ap.add_argument("--json", action="store_true",
+                    help=f"also write {JSON_OUT}")
+    args = ap.parse_args()
+    main(repeats=args.repeats, json_out=JSON_OUT if args.json else None)

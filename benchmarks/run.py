@@ -15,6 +15,9 @@ jax initializes) and prints ``name,us_per_call,derived`` CSV rows.
                    steady-state payload sweep: gspmd vs table-free vs
                    plan-backed vs plan-backed+overlap per-step rows)
   compression      int8 error-feedback gradient all-reduce
+  resilience       self-healing costs: monitored-epoch overhead, skew
+                   detection latency, sandbox re-plan, cold vs warm
+                   device-loss rebuild
   roofline_table   renders experiments/dryrun artifacts (§Roofline)
 """
 
@@ -38,19 +41,22 @@ BENCHES = [
     ("init_cost", []),
     ("moe_dispatch", []),
     ("compression", []),
+    ("resilience", []),
     ("roofline_table", []),
 ]
 
 QUICK_ITERS = {"weak_scaling": None, "msg_sweep": "8", "breakeven_model": "8",
                "sparse_pattern": "8", "hierarchy_sweep": "8",
-               "init_cost": "1", "moe_dispatch": "5", "compression": "5"}
+               "init_cost": "1", "moe_dispatch": "5", "compression": "5",
+               "resilience": "8"}
 
 # Benchmarks with a native --json flag write their own BENCH_<name>.json
 # (structured rows); for the rest run.py scrapes the captured stdout.  One
 # writer per file — never both.
 JSON_NATIVE = {"msg_sweep", "sparse_pattern", "hierarchy_sweep",
                "weak_scaling", "moe_dispatch", "init_cost",
-               "breakeven_model", "compression", "roofline_table"}
+               "breakeven_model", "compression", "resilience",
+               "roofline_table"}
 
 
 def main(argv=None) -> int:

@@ -14,6 +14,16 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 
 
+def mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:
+    """JSON-able geometry stamp of a mesh ({axis: size}).
+
+    Written next to captured INIT requests / checkpoint extras so an
+    elastic resume can detect that the mesh changed (and by how much)
+    before any plan is rebuilt — the trigger for
+    ``runtime.replan.reshard_plans``."""
+    return {a: int(mesh.shape[a]) for a in mesh.axis_names}
+
+
 def put_tree(host_tree, shardings_tree, dtype_tree=None):
     """device_put each leaf against its sharding (resharding as needed)."""
     def put(x, s, d=None):

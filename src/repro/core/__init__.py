@@ -9,6 +9,7 @@ Public surface:
 
 from .api import (alltoallv_init, global_plan_cache, init_stats,
                   reset_global_plan_cache, reset_init_stats)
+from ._exec_stats import EXEC_TELEMETRY, EpochRing, ExecTelemetry
 from ._init_stats import (INIT_STATS, capture_init_requests,
                           start_init_capture, stop_init_capture)
 from .plan import AlltoallvPlan, AlltoallvSpec, PlanCache, VARIANTS, WarmStartError
@@ -18,6 +19,7 @@ from . import autotune, baseline, breakeven, metadata, reference, variants
 __all__ = [
     "alltoallv_init", "global_plan_cache", "reset_global_plan_cache",
     "init_stats", "reset_init_stats", "INIT_STATS",
+    "EXEC_TELEMETRY", "EpochRing", "ExecTelemetry",
     "capture_init_requests", "start_init_capture", "stop_init_capture",
     "AlltoallvPlan", "AlltoallvSpec", "PlanCache", "VARIANTS",
     "WarmStartError", "Window", "WindowCache",

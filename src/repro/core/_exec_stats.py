@@ -1,0 +1,120 @@
+"""Process-wide EXECUTE instrumentation: per-plan epoch wall-time rings.
+
+``_init_stats`` makes the one-time INIT costs auditable; this module does
+the same for the *steady state* the paper's amortization argument buys.
+Every ``AlltoallvPlan.start``/``start_pipelined`` records the wall time of
+its epoch dispatch into a fixed-size ring keyed by the plan's signature
+digest (embedding consumers, whose epochs run inside a host-jitted program,
+attribute step-level wall time through ``plan.record_epoch`` instead).
+
+The rings are deliberately dumb — a numpy circular buffer, O(1) record,
+no locking beyond the GIL — because they sit on the epoch hot path.  All
+*policy* (what counts as sustained skew, when to re-plan) lives in
+``repro.runtime.straggler.PlanSkewMonitor`` / ``repro.runtime.replan``,
+which only ever read the rings.
+
+``EXEC_TELEMETRY`` also records plan hot-swaps (``record_swap``): the
+observable trace the ``replan_hot_swap`` dist case and the resilience
+benchmark assert on.
+
+Caveat, stated once: ``plan.start`` measures *dispatch* wall time.  On
+XLA:CPU dispatch is effectively synchronous so the sample is the epoch
+time; on a real TPU the async dispatch returns early and a caller that
+wants end-to-end epoch time should time ``start``+``wait`` itself and
+record via ``plan.record_epoch`` (what the train loop does).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+DEFAULT_RING_CAPACITY = 512
+
+
+class EpochRing:
+    """Fixed-capacity ring of per-epoch wall times with absolute indexing.
+
+    Samples are addressed by their absolute record index (0, 1, 2, ...);
+    ``window(start, stop)`` clamps to the retained history, so a reader
+    that falls behind loses old samples instead of seeing garbage."""
+
+    __slots__ = ("capacity", "_buf", "_n")
+
+    def __init__(self, capacity: int = DEFAULT_RING_CAPACITY):
+        self.capacity = int(capacity)
+        self._buf = np.zeros(self.capacity, dtype=np.float64)
+        self._n = 0
+
+    def record(self, seconds: float) -> None:
+        self._buf[self._n % self.capacity] = seconds
+        self._n += 1
+
+    @property
+    def count(self) -> int:
+        """Total samples ever recorded (not just retained)."""
+        return self._n
+
+    def window(self, start: int, stop: int) -> np.ndarray:
+        """Samples with absolute indices in ``[start, stop)``, clamped to
+        what the ring still retains (may be shorter than requested)."""
+        stop = min(int(stop), self._n)
+        start = max(int(start), self._n - self.capacity, 0)
+        if start >= stop:
+            return np.empty(0, dtype=np.float64)
+        idx = np.arange(start, stop) % self.capacity
+        return self._buf[idx].copy()
+
+    def last(self, n: int) -> np.ndarray:
+        return self.window(self._n - int(n), self._n)
+
+    def summary(self) -> dict:
+        view = self.last(self.capacity)
+        if view.size == 0:
+            return {"count": 0}
+        return {"count": self._n,
+                "mean_s": float(view.mean()),
+                "p50_s": float(np.median(view)),
+                "max_s": float(view.max()),
+                "last_s": float(view[-1])}
+
+
+class ExecTelemetry:
+    """Registry of per-plan epoch rings + the hot-swap event log."""
+
+    def __init__(self) -> None:
+        self.rings: dict[str, EpochRing] = {}
+        self.swaps: list[dict] = []
+
+    def ring(self, digest: str,
+             capacity: int = DEFAULT_RING_CAPACITY) -> EpochRing:
+        r = self.rings.get(digest)
+        if r is None:
+            r = self.rings[digest] = EpochRing(capacity)
+        return r
+
+    def record(self, digest: str, seconds: float) -> None:
+        self.ring(digest).record(float(seconds))
+
+    def record_swap(self, *, old: str, new: str, reason,
+                    variant_from: str | None = None,
+                    variant_to: str | None = None) -> dict:
+        """Log one plan hot-swap (``repro.runtime.replan``): the EXECUTE-
+        side evidence that a re-plan actually took effect."""
+        ev = {"old": old, "new": new, "reason": reason,
+              "variant_from": variant_from, "variant_to": variant_to,
+              "time": time.time()}
+        self.swaps.append(ev)
+        return ev
+
+    def reset(self) -> None:
+        self.rings.clear()
+        self.swaps.clear()
+
+    def summary(self) -> dict:
+        return {"plans": {d: r.summary() for d, r in self.rings.items()},
+                "swaps": list(self.swaps)}
+
+
+EXEC_TELEMETRY = ExecTelemetry()

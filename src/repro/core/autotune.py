@@ -57,6 +57,32 @@ def candidate_variants(spec: AlltoallvSpec, mesh) -> list[str]:
     return cands
 
 
+def decision_signature(spec: AlltoallvSpec, mesh,
+                       embeddable: bool = False,
+                       error_tol: float | None = None) -> "md.PatternSignature":
+    """The signature an auto decision is cached/stored under.
+
+    Distinct from the plan signatures of the candidates it ranks: it
+    encodes the candidate-set restriction (``auto_embed`` vs ``auto``) and
+    the eligible-codec set, so decisions measured over different arm sets
+    never alias.  Exposed as a module function so ``runtime.replan`` can
+    address the decision it is refreshing (and the train loop can seed a
+    live cache with a re-measured verdict)."""
+    sc = np.asarray(spec.send_counts)
+    row_elems = int(np.prod(spec.feature_shape)) if spec.feature_shape else 1
+    row_bytes = row_elems * jnp.dtype(spec.dtype).itemsize
+    codecs = wirecodec.allowed(error_tol)
+    sweep_codecs = len(codecs) > 1
+    return md.PatternSignature.build(
+        sc, spec.feature_shape, spec.dtype,
+        "auto_embed" if embeddable else "auto", spec.axis, row_bytes,
+        lock_schedule=spec.lock_schedule, tile_rows=spec.tile_rows,
+        pack_impl=spec.pack_impl, baked_metadata=spec.baked_metadata,
+        axis_sizes=tuple(mesh.shape[a] for a in spec.axis),
+        codec=("auto[" + ",".join(codecs) + "]" if sweep_codecs
+               else "identity"))
+
+
 def autotune_variant(
     spec: AlltoallvSpec,
     mesh: jax.sharding.Mesh,
@@ -67,6 +93,8 @@ def autotune_variant(
     store=None,
     embeddable: bool = False,
     error_tol: float | None = None,
+    force_measure: bool = False,
+    annotate: dict | None = None,
 ) -> AlltoallvPlan:
     """Measure every candidate for ``spec``'s pattern, return the winner.
 
@@ -93,28 +121,16 @@ def autotune_variant(
     ``cache.auto_choices`` (this process), then the plan ``store`` (a prior
     process — the sweep was paid once per *deployment*, not per run), and
     only then a fresh measurement sweep, whose verdict is published back to
-    both tiers.
+    both tiers.  ``force_measure=True`` skips the first two tiers — a
+    re-plan triggered by *observed* degradation must re-measure; the cached
+    decision is exactly what went stale — but still publishes the fresh
+    verdict.  ``annotate`` merges extra keys (e.g. re-plan provenance) into
+    the fresh decision before it is cached/published.
     """
-    sc = np.asarray(spec.send_counts)
-    row_elems = int(np.prod(spec.feature_shape)) if spec.feature_shape else 1
-    row_bytes = row_elems * jnp.dtype(spec.dtype).itemsize
     codecs = wirecodec.allowed(error_tol)
     sweep_codecs = len(codecs) > 1
-    # The decision signature encodes the candidate-set restriction: an
-    # embeddable sweep (ragged excluded) must not share a cache/store key
-    # with an unrestricted one, or its winner would overwrite — and later
-    # be trusted as — a decision measured over a different candidate set.
-    # The eligible-codec set is folded in the same way (via the signature's
-    # codec component): two callers declaring different tolerances sweep
-    # different arms and must not alias one decision.
-    auto_sig = md.PatternSignature.build(
-        sc, spec.feature_shape, spec.dtype,
-        "auto_embed" if embeddable else "auto", spec.axis, row_bytes,
-        lock_schedule=spec.lock_schedule, tile_rows=spec.tile_rows,
-        pack_impl=spec.pack_impl, baked_metadata=spec.baked_metadata,
-        axis_sizes=tuple(mesh.shape[a] for a in spec.axis),
-        codec=("auto[" + ",".join(codecs) + "]" if sweep_codecs
-               else "identity"))
+    auto_sig = decision_signature(spec, mesh, embeddable=embeddable,
+                                  error_tol=error_tol)
 
     cands = candidate_variants(spec, mesh)
     if embeddable:
@@ -128,10 +144,10 @@ def autotune_variant(
         return (ch is not None and ch.get("variant") in cands
                 and ch.get("codec", "identity") in codecs)
 
-    choice = cache.auto_choices.get(auto_sig)
+    choice = None if force_measure else cache.auto_choices.get(auto_sig)
     if not _usable(choice):
         choice = None
-    if choice is None and store is not None:
+    if choice is None and store is not None and not force_measure:
         choice = store.get_auto(auto_sig)
         if _usable(choice):
             cache.auto_choices[auto_sig] = choice
@@ -165,22 +181,33 @@ def autotune_variant(
         jnp.zeros(next(iter(plans.values())).global_send_shape, spec.dtype),
         next(iter(plans.values()))._x_sharding)
     arms = {v: (lambda p=p: p.start(x)) for v, p in plans.items()}
-    times = breakeven.measure_arms(arms, iters=iters, warmup=warmup,
-                                   bursts=bursts)
+    # Measurement bursts are not epochs: keep them out of the per-plan
+    # EXECUTE telemetry rings so a background re-plan's own sweep cannot
+    # pollute the skew baseline it was triggered by.
+    prev_record = {v: p.record_starts for v, p in plans.items()}
+    for p in plans.values():
+        p.record_starts = False
+    try:
+        times = breakeven.measure_arms(arms, iters=iters, warmup=warmup,
+                                       bursts=bursts)
 
-    # Adaptive refinement: when the top two candidates land within 25% the
-    # first (short) round cannot rank them reliably on a noisy host, so
-    # they get a second round at double the budget and the minimum of both
-    # rounds decides.  A clear winner skips the rerun — the sweep stays
-    # cheap exactly when the answer is obvious.
-    ranked = sorted(times, key=times.get)
-    if len(ranked) > 1 and times[ranked[1]] < 1.25 * times[ranked[0]]:
-        finalists = {v: arms[v] for v in ranked[:2]}
-        INIT_STATS.autotune_bursts += max(bursts, 6) * len(finalists)
-        refined = breakeven.measure_arms(
-            finalists, iters=2 * iters, warmup=warmup, bursts=max(bursts, 6))
-        for v, t in refined.items():
-            times[v] = min(times[v], t)
+        # Adaptive refinement: when the top two candidates land within 25%
+        # the first (short) round cannot rank them reliably on a noisy
+        # host, so they get a second round at double the budget and the
+        # minimum of both rounds decides.  A clear winner skips the rerun —
+        # the sweep stays cheap exactly when the answer is obvious.
+        ranked = sorted(times, key=times.get)
+        if len(ranked) > 1 and times[ranked[1]] < 1.25 * times[ranked[0]]:
+            finalists = {v: arms[v] for v in ranked[:2]}
+            INIT_STATS.autotune_bursts += max(bursts, 6) * len(finalists)
+            refined = breakeven.measure_arms(
+                finalists, iters=2 * iters, warmup=warmup,
+                bursts=max(bursts, 6))
+            for v, t in refined.items():
+                times[v] = min(times[v], t)
+    finally:
+        for v, p in plans.items():
+            p.record_starts = prev_record[v]
 
     best = min(times, key=times.get)
     best_variant, best_codec = _split_arm(best)
@@ -213,6 +240,8 @@ def autotune_variant(
             _, cdc = _split_arm(key)
             per_codec[cdc] = min(per_codec.get(cdc, float("inf")), t)
         choice["codec_fits"] = breakeven.codec_fits(per_codec, sweep_seconds)
+    if annotate:
+        choice.update(annotate)
     cache.auto_choices[auto_sig] = choice
     if store is not None:
         try:

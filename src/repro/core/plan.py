@@ -62,6 +62,7 @@ from ..compat import shard_map
 from ..parallel import wirecodec
 from . import metadata as md
 from . import variants
+from ._exec_stats import EXEC_TELEMETRY
 from ._init_stats import INIT_STATS
 from .window import Window, WindowCache
 
@@ -291,6 +292,11 @@ class AlltoallvPlan:
         self.init_host_seconds = time.perf_counter() - t0
         self.init_compile_seconds = 0.0
         self.starts = 0
+        # EXECUTE telemetry: start()/start_pipelined() record their epoch
+        # dispatch wall time into this plan's ring (keyed by signature
+        # digest) unless disabled — drivers that time whole epochs
+        # themselves flip record_starts off and call record_epoch instead.
+        self.record_starts = True
         if self.warm_loaded:
             INIT_STATS.warm_inits += 1
         else:
@@ -613,7 +619,11 @@ class AlltoallvPlan:
         """Launch one epoch. Returns the (async) recv buffer."""
         self.compile()
         win = self.window.materialize(self.global_recv_shape, self._x_sharding)
+        t0 = time.perf_counter()
         out = self._compiled(sendbuf, win, *self._table_args)
+        if self.record_starts:
+            EXEC_TELEMETRY.record(self.signature.digest,
+                                  time.perf_counter() - t0)
         self.window.adopt(out)   # donated-in, aliased-out: window reuse
         self.starts += 1
         return out
@@ -635,7 +645,11 @@ class AlltoallvPlan:
         slot = self.starts % depth
         win = self.window.materialize(
             self.global_recv_shape, self._x_sharding, slot=slot)
+        t0 = time.perf_counter()
         out = self._compiled(sendbuf, win, *self._table_args)
+        if self.record_starts:
+            EXEC_TELEMETRY.record(self.signature.digest,
+                                  time.perf_counter() - t0)
         self.window.adopt(out, slot=slot)
         self.starts += 1
         return out
@@ -643,6 +657,18 @@ class AlltoallvPlan:
     @staticmethod
     def wait(recvbuf: jax.Array) -> jax.Array:
         return jax.block_until_ready(recvbuf)
+
+    def record_epoch(self, seconds: float) -> None:
+        """Record one externally timed epoch into this plan's telemetry
+        ring.  The path for consumers whose epochs run inside a larger
+        jitted program (``embed()`` bodies cannot self-time) or who want
+        end-to-end start+wait wall time instead of dispatch time."""
+        EXEC_TELEMETRY.record(self.signature.digest, float(seconds))
+
+    @property
+    def epoch_ring(self):
+        """This plan's EXECUTE telemetry ring (``core._exec_stats``)."""
+        return EXEC_TELEMETRY.ring(self.signature.digest)
 
     def free(self) -> None:
         self._compiled = None

@@ -196,7 +196,16 @@ def make_train_bundle(
               "param_shardings": param_sh, "opt_shardings": opt_sh,
               "batch_shardings": batch_sh, "logical_specs": logical_specs,
               "sched": sched, "adamw": adamw,
-              "grad_compression": grad_compression},
+              "grad_compression": grad_compression,
+              # Everything needed to rebuild this bundle mid-run (online
+              # re-plan, device-loss recovery): make_train_bundle(cfg,
+              # shape, mesh, **bundle_kwargs) reproduces it.
+              "bundle_kwargs": {"sched": sched, "adamw": adamw,
+                                "zero1": zero1, "remat": remat,
+                                "clip_norm": clip_norm, "n_micro": n_micro,
+                                "rules": rules,
+                                "fsdp_threshold_bytes": fsdp_threshold_bytes,
+                                "grad_compression": grad_compression}},
     )
 
 

@@ -80,6 +80,31 @@ def main(argv=None) -> dict:
                         "warm: zero autotune measurement bursts, zero table "
                         "bakes, at least one store hit (the CI warm-EP "
                         "contract for a second --plan-store run)")
+    p.add_argument("--elastic", action="store_true",
+                   help="elastic-mesh resume: capture this run's INIT "
+                        "requests into <ckpt-dir>/init_requests.json; when "
+                        "a prior capture exists and its mesh differs from "
+                        "--mesh, reshard+prewarm those plans for the new "
+                        "geometry (runtime.replan.reshard_plans) before the "
+                        "bundle is built, so the resumed run rebuilds warm")
+    p.add_argument("--replan-at", type=int, default=None, metavar="STEP",
+                   help="force one online re-plan of the EP dispatch "
+                        "decision after STEP completes (re-measure in a "
+                        "sandbox, hot-swap on a changed verdict)")
+    p.add_argument("--replan", action="store_true",
+                   help="arm the skew monitor: sustained per-step skew "
+                        "attributable to the EP dispatch plan triggers an "
+                        "online re-plan")
+    p.add_argument("--chaos", default=None, metavar="SPEC",
+                   help="deterministic fault injection for the run "
+                        "(runtime.chaos.ChaosInjector.parse), e.g. "
+                        "'seed=7,fail_step=5,stall_steps=3-4,"
+                        "stall_seconds=0.1'")
+    p.add_argument("--assert-recovery", action="store_true",
+                   help="exit non-zero unless the run completed all steps "
+                        "cleanly AND every injected --chaos fault was "
+                        "recovered (plus, with --replan-at, the forced "
+                        "re-plan ran)")
     args = p.parse_args(argv)
 
     logging.basicConfig(level=logging.INFO,
@@ -125,15 +150,86 @@ def main(argv=None) -> dict:
                            total_steps=args.steps,
                            decay_steps=max(args.steps // 5, 1))
     from repro.parallel.sharding import RULE_PROFILES
-    bundle = steps_mod.make_train_bundle(
-        cfg, shape, mesh, sched=sched, zero1=not args.no_zero1,
-        n_micro=args.micro, rules=RULE_PROFILES[args.rules],
-        grad_compression=args.grad_compression)
+
+    # Elastic resume: before building anything, check whether a prior run
+    # of this checkpoint dir captured INIT requests on a DIFFERENT mesh —
+    # if so, project those plans onto today's geometry and prewarm the
+    # store, then reset INIT stats so --assert-warm-init judges only the
+    # bundle build that follows (the reshard replay is one-time INIT work
+    # by design, exactly like a deploy-time prewarm).
+    import json
+    import os
+    req_path = (os.path.join(args.ckpt_dir, "init_requests.json")
+                if args.elastic and args.ckpt_dir else None)
+    if args.elastic and req_path is None:
+        raise SystemExit("--elastic requires --ckpt-dir")
+    if req_path and os.path.exists(req_path):
+        from repro.ckpt.reshard import mesh_axis_sizes
+        from repro.runtime import replan as replan_mod
+        with open(req_path) as fh:
+            prior = json.load(fh)
+        if prior.get("mesh") != mesh_axis_sizes(mesh) and prior.get("requests"):
+            from repro import planstore
+            from repro.core import reset_init_stats
+            report = replan_mod.reshard_plans(
+                prior["requests"], mesh, store=planstore.default_store())
+            print(f"elastic resume: mesh {prior['mesh']} -> "
+                  f"{mesh_axis_sizes(mesh)}; resharded "
+                  f"{len(report['resharded'])} plan(s), skipped "
+                  f"{len(report['skipped'])}:", report)
+            reset_init_stats()
+
+    chaos = None
+    if args.chaos:
+        from repro.runtime.chaos import ChaosInjector
+        chaos = ChaosInjector.parse(args.chaos)
+
+    def build_bundle():
+        return steps_mod.make_train_bundle(
+            cfg, shape, mesh, sched=sched, zero1=not args.no_zero1,
+            n_micro=args.micro, rules=RULE_PROFILES[args.rules],
+            grad_compression=args.grad_compression)
+
+    if args.elastic:
+        from repro.ckpt.reshard import mesh_axis_sizes
+        from repro.core import capture_init_requests
+        with capture_init_requests() as reqs:
+            bundle = build_bundle()
+        os.makedirs(args.ckpt_dir, exist_ok=True)
+        with open(req_path, "w") as fh:
+            json.dump({"mesh": mesh_axis_sizes(mesh),
+                       "requests": list(reqs)}, fh)
+        print(f"elastic: captured {len(reqs)} INIT request(s) -> {req_path}")
+    else:
+        bundle = build_bundle()
     trainer = Trainer(bundle, TrainerConfig(
         n_steps=args.steps, ckpt_dir=args.ckpt_dir,
-        ckpt_every=args.ckpt_every, log_every=args.log_every))
+        ckpt_every=args.ckpt_every, log_every=args.log_every,
+        replan=args.replan, replan_at=args.replan_at), chaos=chaos)
     result = trainer.run()
     print("train finished:", result)
+    if args.assert_recovery:
+        injected = sum((result.get("chaos") or {}).values())
+        problems = []
+        if result["final_step"] != args.steps:
+            problems.append(f"run stopped at step {result['final_step']}"
+                            f"/{args.steps}")
+        if injected == 0:
+            problems.append("no chaos faults were injected (nothing to "
+                            "recover from — the assertion would be vacuous)")
+        faults = sum((result.get("chaos") or {}).get(k, 0)
+                     for k in ("step", "device", "window"))
+        if faults and len(result["recoveries"]) < faults:
+            problems.append(f"{faults} injected failure(s) but only "
+                            f"{len(result['recoveries'])} recoveries")
+        if args.replan_at is not None and not result["replans"]:
+            problems.append("forced re-plan never ran")
+        if problems:
+            print("ASSERT-RECOVERY FAILED:", "; ".join(problems))
+            raise SystemExit(4)
+        print(f"ASSERT-RECOVERY OK: {injected} fault(s) injected, "
+              f"{len(result['recoveries'])} recovered, "
+              f"{len(result['replans'])} re-plan(s)")
     if args.plan_store or args.assert_warm_init:
         from repro.core import init_stats
         stats = init_stats()

@@ -134,12 +134,18 @@ def replay_request(req: dict, store, cache=None,
         codec=req.get("codec", "identity"),
         error_tol=req.get("error_tol"),
     )
-    return {"digest": plan.signature.digest,
-            "variant": plan.spec.variant,
-            "codec": plan.spec.codec,
-            "requested_variant": req["variant"],
-            "p": plan.p, "axis_sizes": list(sizes),
-            "warm": bool(plan.warm_loaded)}
+    row = {"digest": plan.signature.digest,
+           "variant": plan.spec.variant,
+           "codec": plan.spec.codec,
+           "requested_variant": req["variant"],
+           "p": plan.p, "axis_sizes": list(sizes),
+           "warm": bool(plan.warm_loaded)}
+    if req.get("resharded_from"):
+        # Elastic-resume replays (runtime.replan.reshard_plans) stamp the
+        # geometry the pattern was projected from; surface it so a prewarm
+        # report distinguishes resharded plans from native captures.
+        row["resharded_from"] = req["resharded_from"]
+    return row
 
 
 def prewarm(requests: Iterable[dict], store,

@@ -1,8 +1,38 @@
-"""Runtime: fault recovery + straggler detection."""
+"""Runtime resilience: the layer that keeps persistent plans honest after
+INIT.
 
-from . import fault, straggler
-from .fault import FaultError, RetryPolicy, run_with_recovery
-from .straggler import StragglerDetector
+A plan is tuned once; the fleet degrades continuously.  This package
+closes the loop from observation to recovery:
 
-__all__ = ["fault", "straggler", "FaultError", "RetryPolicy",
-           "run_with_recovery", "StragglerDetector"]
+* ``straggler`` — step-level deadline tracking (``StragglerDetector``,
+  EMA-based, feeds early checkpointing) and plan-level sustained-skew
+  detection (``PlanSkewMonitor`` over the per-epoch telemetry rings that
+  ``AlltoallvPlan.start`` records into ``core._exec_stats``).
+* ``replan`` — acts on the skew signal: re-runs the variant autotune in a
+  background sandbox, hot-swaps the winning plan between epochs
+  (``ReplanManager``), CAS-merges the fresh decision into the plan store
+  so the fleet learns, and projects captured INIT requests onto a
+  shrunk/grown mesh for elastic resume (``reshard_plans``).
+* ``fault`` — checkpoint-restart recovery (``run_with_recovery``) grown
+  plan-aware: device-loss-class failures rebuild plans before replay
+  (``classify_failure``/``rebuild_plans``), and ``RetryPolicy`` decays its
+  restart count after sustained progress so transient faults spread over a
+  long run don't exhaust the budget.
+* ``chaos`` — deterministic, seeded fault injection (window-allocation
+  failures, store poisoning, epoch stalls, step/device faults) with
+  per-kind counters; the test/CI harness for everything above.
+"""
+
+from . import chaos, fault, replan, straggler
+from .chaos import ChaosError, ChaosInjector
+from .fault import FaultError, RetryPolicy, classify_failure, run_with_recovery
+from .replan import ReplanManager, reshard_counts, reshard_plans, reshard_request
+from .straggler import PlanSkewMonitor, SkewReport, StragglerDetector
+
+__all__ = ["chaos", "fault", "replan", "straggler",
+           "ChaosError", "ChaosInjector",
+           "FaultError", "RetryPolicy", "classify_failure",
+           "run_with_recovery",
+           "ReplanManager", "reshard_counts", "reshard_plans",
+           "reshard_request",
+           "PlanSkewMonitor", "SkewReport", "StragglerDetector"]

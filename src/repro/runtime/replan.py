@@ -1,0 +1,337 @@
+"""Online re-planning: observed degradation → background re-autotune →
+atomic hot-swap, plus elastic-mesh plan resharding.
+
+A persistent plan amortizes its INIT cost across many epochs — but the
+variant decision it amortizes was measured ONCE, on the fleet as it was at
+INIT time.  Two things invalidate it mid-run:
+
+* **A degraded host.**  A slow NIC or thermally throttled chip perturbs
+  exactly the fence/lock/hierarchy break-even the autotuner measured.
+  ``ReplanManager`` closes the loop: a ``PlanSkewMonitor`` watches the
+  plan's EXECUTE telemetry ring; sustained skew triggers
+  ``autotune_variant(force_measure=True)`` in a background thread —
+  measuring in a *sandbox* ``PlanCache`` with its own ``WindowCache``, so
+  the sweep never donates the live plan's window out from under an
+  in-flight epoch — and the fresh verdict is hot-swapped in between
+  epochs: the manager's ``plan`` flips atomically under a lock, the old
+  plan's window slots are released (``free()``), the swap is logged to
+  ``EXEC_TELEMETRY``, and the re-measured decision is CAS-merged into the
+  plan store (``put_auto``) with re-plan provenance — one replica's
+  degradation teaches the fleet.  If the autotuner *itself* faults
+  mid-re-plan, the manager degrades to the paper's safe default
+  (``fence``) rather than keep a stale auto decision.
+
+* **A changed mesh.**  Losing (or gaining) a pod invalidates every plan's
+  geometry outright.  ``reshard_plans`` replays the INIT requests captured
+  at build time (``capture_init_requests``, PR 5) against the new mesh:
+  count matrices are block-summed (shrink) or evenly split (grow) onto the
+  new rank count, variants that need a dropped axis degrade, and the
+  replay publishes warm artifacts for the new geometry — paired with
+  ``ckpt.reshard.load_to_mesh`` this is the whole elastic-resume story:
+  lose a pod, restore the checkpoint on the smaller mesh, rebuild every
+  plan warm.
+"""
+
+from __future__ import annotations
+
+import logging
+import threading
+from typing import Optional
+
+import numpy as np
+
+from repro.core import PlanCache
+from repro.core._exec_stats import EXEC_TELEMETRY
+from repro.core.autotune import _candidate_spec, autotune_variant, \
+    decision_signature
+from repro.runtime.straggler import PlanSkewMonitor, SkewReport
+
+log = logging.getLogger("repro.replan")
+
+
+def reautotune(plan, mesh, store=None, iters: int = 8,
+               embeddable: bool = False, error_tol: float | None = None,
+               annotate: dict | None = None) -> dict:
+    """Re-measure the variant decision for ``plan``'s pattern in a sandbox
+    and return the fresh choice dict.
+
+    The sweep runs in a throwaway ``PlanCache`` (own ``WindowCache``): the
+    live plan keeps dispatching epochs while candidates are measured, and a
+    shared window would be donated by both sides at once.  The sandbox's
+    plans (and their windows) are freed before returning; the verdict is
+    published to ``store`` by ``autotune_variant`` itself (CAS-merged, so
+    concurrent publishes from other replicas survive)."""
+    sandbox = PlanCache()
+    try:
+        winner = autotune_variant(plan.spec, mesh, sandbox, iters=iters,
+                                  store=store, embeddable=embeddable,
+                                  error_tol=error_tol, force_measure=True,
+                                  annotate=annotate)
+        return dict(winner.auto_choice)
+    finally:
+        for p in sandbox._plans.values():
+            p.free()
+
+
+class ReplanManager:
+    """Owns one live plan and the observe → re-measure → swap loop.
+
+    Drive it from the epoch loop::
+
+        out = mgr.plan.start(x); mgr.plan.wait(out)
+        mgr.plan.record_epoch(dt)      # or rely on start()'s dispatch timing
+        mgr.observe()                  # between epochs; swaps land here
+
+    ``observe()`` is the only place the live plan changes, and the caller
+    controls when it runs — so a swap can never land mid-epoch.
+    """
+
+    def __init__(self, plan, mesh, cache: PlanCache, store=None,
+                 monitor: Optional[PlanSkewMonitor] = None, iters: int = 8,
+                 embeddable: bool = False, error_tol: float | None = None,
+                 background: bool = True):
+        self._plan = plan
+        self.mesh = mesh
+        self.cache = cache
+        self.store = store
+        self.iters = iters
+        self.embeddable = embeddable
+        self.error_tol = error_tol
+        self.background = background
+        self.monitor = monitor if monitor is not None else PlanSkewMonitor(
+            EXEC_TELEMETRY.ring(plan.signature.digest))
+        self.events: list[dict] = []
+        self.replans_completed = 0
+        self._lock = threading.Lock()
+        self._thread: Optional[threading.Thread] = None
+        self._pending: Optional[tuple] = None   # (new_plan, reason)
+
+    @property
+    def plan(self):
+        with self._lock:
+            return self._plan
+
+    # -- the loop ------------------------------------------------------------
+    def observe(self) -> bool:
+        """Call between epochs.  Returns True when a swap was installed."""
+        if self._thread is not None:
+            if self._thread.is_alive():
+                return False            # re-measure still running
+            self._thread = None
+        if self._pending is not None:
+            new_plan, reason = self._pending
+            self._pending = None
+            self.replans_completed += 1
+            return self._install(new_plan, reason)
+        rep = self.monitor.observe()
+        if rep is not None:
+            self.trigger(rep)
+        return False
+
+    def trigger(self, rep: "SkewReport | dict | str") -> None:
+        """Kick off a re-measure (monitor-triggered or operator-forced)."""
+        if self._thread is not None or self._pending is not None:
+            return                      # one re-plan in flight at a time
+        if isinstance(rep, SkewReport):
+            reason = {"kind": "sustained_skew", "ratio": rep.ratio,
+                      "baseline_s": rep.baseline,
+                      "recent_mean_s": rep.recent_mean,
+                      "windows_hot": rep.windows_hot, "epoch": rep.epoch}
+        elif isinstance(rep, dict):
+            reason = rep
+        else:
+            reason = {"kind": str(rep)}
+        log.warning("re-plan triggered for %s: %s",
+                    self._plan.signature.digest[:12], reason)
+        if self.background:
+            self._thread = threading.Thread(
+                target=self._reautotune, args=(reason,), daemon=True,
+                name="repro-replan")
+            self._thread.start()
+        else:
+            self._reautotune(reason)
+
+    def force_swap(self, new_plan, reason: str = "forced") -> bool:
+        """Install ``new_plan`` immediately (operator-forced swap)."""
+        return self._install(new_plan, {"kind": reason})
+
+    # -- internals -----------------------------------------------------------
+    def _reautotune(self, reason: dict) -> None:
+        old = self._plan
+        annotate = {"replan": {**reason, "prev_variant": old.spec.variant}}
+        try:
+            choice = reautotune(old, self.mesh, store=self.store,
+                                iters=self.iters, embeddable=self.embeddable,
+                                error_tol=self.error_tol, annotate=annotate)
+            spec = _candidate_spec(old.spec, choice["variant"],
+                                   choice.get("codec", "identity"))
+        except Exception as err:  # noqa: BLE001 — a faulting autotuner must not kill the run
+            # The autotuner itself faulted mid-re-plan: degrade to the
+            # paper's safe default rather than keep trusting a decision we
+            # have evidence is stale.
+            log.warning("re-plan autotune faulted (%s); degrading to fence",
+                        err)
+            choice = {"variant": "fence", "codec": "identity",
+                      "degraded": str(err),
+                      "replan": annotate["replan"]}
+            spec = _candidate_spec(old.spec, "fence", "identity")
+            if self.store is not None:
+                try:
+                    self.store.put_auto(
+                        decision_signature(old.spec, self.mesh,
+                                           embeddable=self.embeddable,
+                                           error_tol=self.error_tol),
+                        choice)
+                except OSError:
+                    pass
+        # Mirror the verdict into the live cache's decision tier so any
+        # later auto INIT of this pattern (e.g. a bundle rebuild) resolves
+        # instantly from the fresh measurement.
+        sig = decision_signature(old.spec, self.mesh,
+                                 embeddable=self.embeddable,
+                                 error_tol=self.error_tol)
+        self.cache.auto_choices[sig] = choice
+        new_plan = self.cache.get(spec, self.mesh, store=self.store)
+        new_plan.auto_choice = choice
+        self._pending = (new_plan, {**annotate["replan"],
+                                    "choice": choice.get("variant")})
+
+    def _install(self, new_plan, reason: dict) -> bool:
+        with self._lock:
+            old = self._plan
+            if new_plan is old or \
+                    new_plan.signature.digest == old.signature.digest:
+                # Re-measurement confirmed the incumbent: no swap, but the
+                # monitor restarts with a fresh baseline — the world it
+                # measured against has changed.
+                # "event" is the outcome; "kind" (inside reason) stays the
+                # trigger — sustained_skew / forced / operator.
+                self.events.append({"event": "confirmed", **reason})
+                self.monitor.reset()
+                return False
+            self._plan = new_plan
+        old.free()   # window slots back to the cache; executable dropped
+        EXEC_TELEMETRY.record_swap(
+            old=old.signature.digest, new=new_plan.signature.digest,
+            reason=reason, variant_from=old.spec.variant,
+            variant_to=new_plan.spec.variant)
+        self.events.append({"event": "swap",
+                            "variant_from": old.spec.variant,
+                            "variant_to": new_plan.spec.variant, **reason})
+        self.monitor = self.monitor.clone_for(
+            EXEC_TELEMETRY.ring(new_plan.signature.digest))
+        log.warning("hot-swapped plan %s (%s) -> %s (%s)",
+                    old.signature.digest[:12], old.spec.variant,
+                    new_plan.signature.digest[:12], new_plan.spec.variant)
+        return True
+
+
+# --- elastic-mesh resharding -------------------------------------------------
+
+def reshard_counts(counts, p_new: int) -> np.ndarray:
+    """Project a PxP count matrix onto P_new ranks.
+
+    Shrink (P % P_new == 0): consecutive blocks of g = P/P_new old ranks
+    merge into one new rank; the new count is the block sum (the merged
+    rank really does send/receive the union of its constituents' rows).
+    Grow (P_new % P == 0): each old rank's rows split as evenly as
+    possible across its g = P_new/P successors, remainder to the earliest
+    (deterministic, so every replica projects identically).  Both conserve
+    the matrix total.  Anything else raises — there is no principled row
+    assignment between coprime rank counts."""
+    c = np.asarray(counts, np.int64)
+    if c.ndim != 2 or c.shape[0] != c.shape[1]:
+        raise ValueError(f"counts must be square PxP, got {c.shape}")
+    p = c.shape[0]
+    p_new = int(p_new)
+    if p_new <= 0:
+        raise ValueError(f"p_new must be positive, got {p_new}")
+    if p == p_new:
+        return c.copy()
+    if p % p_new == 0:
+        g = p // p_new
+        return c.reshape(p_new, g, p_new, g).sum(axis=(1, 3))
+    if p_new % p == 0:
+        g = p_new // p
+        # Split each (src, dst) count over a g x g successor block: rows
+        # divide over the g source successors first (even + remainder to
+        # the earliest), then each successor's share divides over the g
+        # destination successors the same way.
+        out = np.zeros((p_new, p_new), np.int64)
+        for i in range(p):
+            for j in range(p):
+                n = int(c[i, j])
+                for a in range(g):
+                    share = n // g + (1 if a < n % g else 0)
+                    for b in range(g):
+                        out[i * g + a, j * g + b] = \
+                            share // g + (1 if b < share % g else 0)
+        return out
+    raise ValueError(
+        f"cannot reshard {p} ranks onto {p_new}: neither divides the other")
+
+
+def reshard_request(req: dict, new_mesh) -> dict:
+    """Project one captured INIT request onto ``new_mesh``'s geometry.
+
+    Axes missing from the new mesh are dropped; a hierarchy variant whose
+    (outer, inner) factorization collapsed to one axis degrades to
+    ``fence`` (the safe default), and a fused pack spec follows the same
+    variant/axis eligibility rule the autotuner applies.  Raises
+    ``ValueError`` when no axis of the request survives, or the rank
+    counts don't divide (see ``reshard_counts``)."""
+    axes = tuple(a for a in req["axis"] if a in new_mesh.axis_names)
+    if not axes:
+        raise ValueError(
+            f"no axis of {tuple(req['axis'])} exists in the new mesh "
+            f"(axes {tuple(new_mesh.axis_names)})")
+    sizes = tuple(int(new_mesh.shape[a]) for a in axes)
+    p_new = 1
+    for s in sizes:
+        p_new *= s
+    counts = reshard_counts(np.asarray(req["send_counts"]), p_new)
+    variant = req["variant"]
+    if len(axes) == 1 and variant == "fence_hierarchy":
+        variant = "fence"
+    pack_impl = req.get("pack_impl", "jnp")
+    if pack_impl == "fused" and (
+            variant in ("lock", "ragged")
+            or (variant == "fence" and len(axes) != 1)):
+        pack_impl = "pallas"
+    return {**req, "send_counts": counts.tolist(), "axis": list(axes),
+            "axis_sizes": list(sizes), "variant": variant,
+            "pack_impl": pack_impl,
+            # Provenance for the prewarm report: which geometry this
+            # pattern was projected from (and what it degraded from).
+            "resharded_from": {
+                "p": int(np.asarray(req["send_counts"]).shape[0]),
+                "axis_sizes": [int(s) for s in req.get("axis_sizes", [])],
+                "variant": req["variant"]}}
+
+
+def reshard_plans(requests, new_mesh, store=None, cache=None,
+                  autotune_iters: int | None = None) -> dict:
+    """Replay captured INIT requests against a new mesh geometry.
+
+    The elastic-resume prewarm: each request is projected onto the new
+    mesh (``reshard_request``) and replayed through the prewarm machinery —
+    cold builds publish to ``store``, so the restored replica's rebuild on
+    the new mesh is warm.  Requests that cannot be projected are reported
+    under ``"skipped"``, never dropped silently."""
+    from repro.planstore import prewarm
+
+    cache = cache if cache is not None else PlanCache()
+    rows: list[dict] = []
+    skipped: list[dict] = []
+    for req in prewarm.dedupe_requests(requests):
+        try:
+            projected = reshard_request(req, new_mesh)
+        except ValueError as e:
+            skipped.append({"skipped": str(e), "variant": req.get("variant"),
+                            "axis": list(req.get("axis", ()))})
+            continue
+        row = prewarm.replay_request(
+            projected, store if store is not None else False, cache=cache,
+            autotune_iters=autotune_iters)
+        (skipped if "skipped" in row else rows).append(row)
+    return {"resharded": rows, "skipped": skipped}

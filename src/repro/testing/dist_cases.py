@@ -1375,6 +1375,310 @@ def codec_planstore_warm_start():
     print("codec warm start:", plan.spec.variant, plan.spec.codec)
 
 
+@case
+def replan_hot_swap():
+    """Self-healing loop, end to end: injected sustained skew (chaos epoch
+    stalls) trips the PlanSkewMonitor, a background re-autotune re-measures
+    the decision and CAS-merges it — with re-plan provenance — into the
+    plan store, and an operator-forced hot swap to the runner-up variant
+    is bit-identical on the same inputs, releases the old plan's window
+    slots, and lands in EXEC_TELEMETRY's swap log."""
+    import tempfile
+    import time
+
+    from repro.core import EXEC_TELEMETRY, INIT_STATS, PlanCache, alltoallv_init
+    from repro.core.autotune import _candidate_spec, decision_signature
+    from repro.launch.mesh import make_mesh
+    from repro.planstore import PlanStore
+    from repro.runtime import chaos as chaos_mod
+    from repro.runtime import replan as replan_mod
+    from repro.runtime.straggler import PlanSkewMonitor
+
+    p = len(jax.devices())
+    assert p % 4 == 0, "needs a (2, p//2) grouped mesh"
+    mesh = make_mesh((2, p // 2), ("outer", "inner"))
+    counts, bufs, expect, rc, send_rows, recv_rows = _setup_pattern(p, seed=9)
+    x = jax.device_put(jnp.asarray(bufs.reshape(p * send_rows, 4)),
+                       NamedSharding(mesh, P(("outer", "inner"))))
+
+    with tempfile.TemporaryDirectory() as d:
+        EXEC_TELEMETRY.reset()
+        store, cache = PlanStore(d), PlanCache()
+        plan = alltoallv_init(counts, (4,), jnp.float32, mesh,
+                              axis=("outer", "inner"), variant="auto",
+                              cache=cache, store=store, autotune_iters=2)
+        spec0 = plan.spec
+        base = np.asarray(plan.wait(plan.start(x))).reshape(p, recv_rows, 4)
+        _check(base, expect, rc, p)
+        sweeps0 = INIT_STATS.autotune_sweeps
+
+        # The driver times whole epochs itself (including the injected
+        # stall); the plan's internal dispatch timing would not see it.
+        plan.record_starts = False
+        monitor = PlanSkewMonitor(EXEC_TELEMETRY.ring(plan.signature.digest),
+                                  threshold=1.6, window=4, sustain=2,
+                                  warmup=6)
+        mgr = replan_mod.ReplanManager(plan, mesh, cache, store=store,
+                                       monitor=monitor, iters=2,
+                                       background=True)
+        # Degraded host: every epoch from #6 on stalls (sustained, not a
+        # one-off spike — the first stalled window alone must NOT trigger).
+        inj = chaos_mod.ChaosInjector(seed=0, stall_steps=range(6, 10_000),
+                                      stall_seconds=0.03)
+        deadline = time.time() + 300
+        for e in range(10_000):
+            t0 = time.perf_counter()
+            inj.maybe_stall(e)
+            cur = mgr.plan
+            got = np.asarray(cur.wait(cur.start(x))).reshape(p, recv_rows, 4)
+            cur.record_epoch(time.perf_counter() - t0)
+            mgr.observe()
+            np.testing.assert_array_equal(got, base)   # bit-identical always
+            if e == 9:   # one full hot window consumed: sustain=2 not met yet
+                assert mgr.replans_completed == 0 and mgr.events == []
+            if mgr.replans_completed >= 1:
+                break
+            assert time.time() < deadline, "re-plan never completed"
+        assert inj.injected["stall"] > 0
+        # The background sweep really re-measured (not a cache/store read).
+        assert INIT_STATS.autotune_sweeps > sweeps0
+        sig = decision_signature(spec0, mesh)
+        fresh = cache.auto_choices[sig]
+        assert fresh["replan"]["kind"] == "sustained_skew", fresh
+        assert fresh["replan"]["ratio"] > 1.6
+        assert fresh["replan"]["prev_variant"] == spec0.variant
+        # ...and the verdict was CAS-merged into the store for the fleet.
+        stored = store.get_auto(sig)
+        assert stored is not None and stored["replan"] == fresh["replan"]
+
+        # Deterministic swap half: force the runner-up variant in (a real
+        # re-measure may rightly confirm the incumbent — the stall slows
+        # every candidate equally on one host).
+        live = mgr.plan
+        times = {v.partition("@")[0]: t for v, t in
+                 live.auto_choice["times"].items()}
+        runner = min((v for v in times if v != live.spec.variant),
+                     key=times.get)
+        alt = cache.get(_candidate_spec(spec0, runner), mesh, store=store)
+        old = mgr.plan
+        assert mgr.force_swap(alt, reason="operator")
+        assert mgr.plan is alt
+        assert len(old.window._slots) == 0, "old plan's window slots leaked"
+        assert old._compiled is None
+        got = np.asarray(alt.wait(alt.start(x))).reshape(p, recv_rows, 4)
+        np.testing.assert_array_equal(got, base)       # swap is bit-identical
+        swap = EXEC_TELEMETRY.swaps[-1]
+        assert swap["variant_to"] == runner and swap["new"] == \
+            alt.signature.digest
+        assert any(ev["event"] == "swap" for ev in mgr.events)
+    print("replan_hot_swap:", spec0.variant, "->", runner,
+          "replans:", mgr.replans_completed, "events:",
+          [(ev["event"], ev["kind"]) for ev in mgr.events])
+
+
+@case
+def elastic_resume():
+    """Elastic-mesh resume, end to end: INIT requests captured on the full
+    mesh are resharded onto a shrunk mesh (reshard_plans publishes the new
+    geometry's artifacts), the checkpoint restores onto the new mesh via
+    load_to_mesh, and a fresh replica's rebuild of EVERY plan is warm —
+    zero autotune bursts, zero table bakes — with the resharded exchange
+    verified against the dense oracle."""
+    import os
+    import tempfile
+
+    from repro.ckpt.manager import CheckpointManager
+    from repro.ckpt.reshard import load_to_mesh, mesh_axis_sizes, put_tree
+    from repro.core import (INIT_STATS, PlanCache, alltoallv_init,
+                            capture_init_requests, metadata as md, reference)
+    from repro.launch.mesh import make_host_mesh, make_mesh
+    from repro.planstore import PlanStore, prewarm
+    from repro.runtime import replan as replan_mod
+
+    p = len(jax.devices())
+    assert p % 2 == 0
+    mesh_a = make_host_mesh(p)
+    counts, bufs, expect, rc, send_rows, recv_rows = _setup_pattern(p, seed=2)
+
+    with tempfile.TemporaryDirectory() as d:
+        store = PlanStore(os.path.join(d, "store"))
+        cache = PlanCache()
+        with capture_init_requests() as reqs:
+            alltoallv_init(counts, (4,), jnp.float32, mesh_a, axis="x",
+                           variant="fence", cache=cache, store=store)
+            alltoallv_init(counts, (4,), jnp.float32, mesh_a, axis="x",
+                           variant="lock", lock_schedule="pairwise",
+                           cache=cache, store=store)
+            alltoallv_init(counts, (4,), jnp.float32, mesh_a, axis="x",
+                           variant="auto", cache=cache, store=store,
+                           autotune_iters=2)
+        assert len(reqs) == 3
+        params = {"w": jnp.arange(64 * p, dtype=jnp.float32).reshape(64, p)}
+        mgr = CheckpointManager(os.path.join(d, "ckpt"))
+        mgr.save(5, {"params": put_tree(
+            params, {"w": NamedSharding(mesh_a, P("x"))})},
+            extras={"mesh": mesh_axis_sizes(mesh_a)})
+
+        # --- the pod is lost: p//2 devices remain ------------------------
+        mesh_b = make_mesh((p // 2,), ("x",))
+        # The geometry stamp is what an elastic launcher compares to detect
+        # the change (saved both beside the requests and in ckpt extras).
+        assert mgr.load()[2]["mesh"] != mesh_axis_sizes(mesh_b)
+        # Deploy-side prewarm: project + replay every captured request.
+        report = replan_mod.reshard_plans(list(reqs), mesh_b, store=store,
+                                          autotune_iters=2)
+        assert not report["skipped"] and len(report["resharded"]) == 3, report
+        # Every replayed row carries the geometry it was projected from, so
+        # a prewarm report distinguishes resharded plans from native ones.
+        for row in report["resharded"]:
+            assert row["resharded_from"]["p"] == p, row
+
+        # --- fresh replica on the shrunk mesh (fresh in-memory tiers) ----
+        INIT_STATS.reset()
+        cache2 = PlanCache()
+        store2 = PlanStore(os.path.join(d, "store"))
+        step, placed, extras = load_to_mesh(
+            mgr, mesh_b, {"params": {"w": NamedSharding(mesh_b, P("x"))}})
+        assert step == 5 and extras["mesh"] == {"x": p}
+        np.testing.assert_array_equal(np.asarray(placed["params"]["w"]),
+                                      np.asarray(params["w"]))
+        assert placed["params"]["w"].sharding.mesh.shape["x"] == p // 2
+        for req in prewarm.dedupe_requests(list(reqs)):
+            row = prewarm.replay_request(replan_mod.reshard_request(req, mesh_b),
+                                         store2, cache=cache2,
+                                         autotune_iters=2)
+            assert "skipped" not in row, row
+        s = INIT_STATS.as_dict()
+        assert s["autotune_bursts"] == 0, s     # zero measurement bursts
+        assert s["table_bakes"] == 0, s         # zero host-side bakes
+        assert s["warm_inits"] >= 2 and s["cold_inits"] == 0, s
+        assert s["store_hits"] > 0, s
+
+        # --- the resharded exchange is correct on the new geometry -------
+        p2 = p // 2
+        counts2 = replan_mod.reshard_counts(counts, p2)
+        assert counts2.sum() == counts.sum()
+        sr2 = max(md.round_up(md.max_total_send(counts2), 8), 8)
+        rr2 = max(md.round_up(md.max_total_recv(counts2), 8), 8)
+        bufs2 = reference.make_testbufs(counts2, (4,), np.float32, sr2)
+        expect2 = reference.alltoallv_global(bufs2, counts2, rr2)
+        rc2 = md.recv_counts(counts2)
+        plan2 = alltoallv_init(counts2, (4,), jnp.float32, mesh_b, axis="x",
+                               variant="fence", cache=cache2, store=store2)
+        assert plan2.warm_loaded
+        x2 = jax.device_put(jnp.asarray(bufs2.reshape(p2 * sr2, 4)),
+                            NamedSharding(mesh_b, P("x")))
+        got = np.asarray(plan2.wait(plan2.start(x2))).reshape(p2, rr2, 4)
+        _check(got, expect2, rc2, p2)
+    print("elastic_resume:", {"from": p, "to": p2, "init": s})
+
+
+@case
+def chaos_recovery():
+    """Seeded window/store/stall faults recovered without epoch corruption:
+    window-allocation failures retry the build, a poisoned store entry
+    degrades to a cold rebuild (store_invalid, never a crash), a flaky
+    remote store degrades reads to misses, injected step and device-loss
+    faults run the full recovery discipline (device loss rebuilds the
+    plan first), every epoch's output is verified against the dense
+    oracle, and sustained progress decays the restart budget."""
+    import tempfile
+
+    from repro.core import INIT_STATS, PlanCache, WindowCache, alltoallv_init
+    from repro.launch.mesh import make_host_mesh
+    from repro.planstore import parse_store_url
+    from repro.runtime import chaos as chaos_mod
+    from repro.runtime import fault as fault_mod
+
+    p = len(jax.devices())
+    mesh = make_host_mesh(p)
+    counts, bufs, expect, rc, send_rows, recv_rows = _setup_pattern(p, seed=5)
+    x = jax.device_put(jnp.asarray(bufs.reshape(p * send_rows, 4)),
+                       NamedSharding(mesh, P("x")))
+
+    with tempfile.TemporaryDirectory() as d:
+        store = parse_store_url(f"fsremote://{d}/remote?fail_rate=0.25&seed=11")
+        inj = chaos_mod.ChaosInjector(seed=3, window_fail_rate=0.5,
+                                      fail_steps=(4,), device_loss_steps=(8,),
+                                      stall_steps=(6,), stall_seconds=0.05)
+        state: dict = {"rebuilds": 0, "plan_rebuild_hook": 0}
+
+        def rebuild(err=None):
+            # Allocation-failure recovery discipline: retry the build (each
+            # attempt re-draws from the injector's schedule).  A fresh
+            # PlanCache emulates rebuilding device state from scratch; the
+            # (flaky, possibly poisoned) store is the only warm tier.
+            for _ in range(50):
+                try:
+                    cache = PlanCache(
+                        window_cache=inj.wrap_window_cache(WindowCache()))
+                    state["plan"] = alltoallv_init(
+                        counts, (4,), jnp.float32, mesh, axis="x",
+                        variant="fence", cache=cache, store=store)
+                    state["rebuilds"] += 1
+                    return
+                except chaos_mod.ChaosError:
+                    continue
+            raise AssertionError("window allocation never succeeded")
+
+        rebuild()
+        # Poison every published entry: the next read of it must count as
+        # store_invalid and fall back to a cold bake — never crash.
+        assert inj.poison_store(store) >= 1
+
+        INIT_STATS.reset()
+        done: set = set()
+
+        def run_step(step: int) -> dict:
+            inj.step_hook(step)      # stalls at 6; faults at 4 (transient)
+            plan = state["plan"]     # and 8 (device-loss class), once each
+            got = np.asarray(plan.wait(plan.start(x))).reshape(
+                p, recv_rows, 4)
+            _check(got, expect, rc, p)      # no epoch corruption, ever
+            done.add(step)
+            return {}
+
+        def rebuild_plans(err):
+            state["plan_rebuild_hook"] += 1
+            assert fault_mod.classify_failure(err) == "device_loss"
+            rebuild(err)
+
+        def restore() -> int:
+            return (max(done) + 1) if done else 0
+
+        policy = fault_mod.RetryPolicy(max_restarts=5, backoff_seconds=0.0,
+                                       decay_after=2)
+        final = fault_mod.run_with_recovery(
+            run_step, restore=restore, start_step=0, n_steps=12,
+            policy=policy, rebuild_plans=rebuild_plans)
+
+        assert final == 12 and done == set(range(12))
+        # Every injected fault class actually fired (seeded => stable).
+        assert inj.injected["step"] == 1, inj.injected
+        assert inj.injected["device"] == 1, inj.injected
+        assert inj.injected["stall"] >= 1, inj.injected
+        assert inj.injected["poison"] >= 1, inj.injected
+        assert inj.injected["window"] >= 1, \
+            f"window fault never drawn: {inj.injected} (tune seed/rate)"
+        # Device loss took the plan-rebuild path, not just restart.
+        assert state["plan_rebuild_hook"] == 1
+        assert state["rebuilds"] >= 2
+        # Poisoned entries degraded to cold rebuilds; the flaky remote's
+        # faults degraded to misses (errors counted, nothing raised).
+        s = INIT_STATS.as_dict()
+        assert s["store_invalid"] + store.errors >= 1, (s, store.stats)
+        assert s["cold_inits"] >= 1, s
+        # Sustained progress decayed the restart budget (2 failures, but
+        # clean stretches forgave them).
+        assert policy.restarts <= 1, policy.restarts
+        stats = {k: store.stats[k]
+                 for k in ("hits", "misses", "invalid", "errors")}
+    print("chaos_recovery:", {"injected": inj.injected,
+                              "rebuilds": state["rebuilds"],
+                              "restarts_left": policy.restarts,
+                              "store": stats})
+
+
 def main():
     import argparse
     ap = argparse.ArgumentParser()

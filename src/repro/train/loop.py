@@ -1,5 +1,9 @@
 """Training loop: checkpoint/restart fault tolerance, straggler detection,
-auto-resume, deterministic data replay."""
+auto-resume, deterministic data replay — plus online re-planning: step
+wall times feed the EP dispatch plan's EXECUTE telemetry ring, and on
+sustained skew (or a forced ``replan_at`` step) the variant decision is
+re-measured in a sandbox and the step bundle rebuilt against the fresh
+verdict between steps."""
 
 from __future__ import annotations
 
@@ -13,10 +17,11 @@ import jax.numpy as jnp
 
 from repro.ckpt.manager import CheckpointManager
 from repro.ckpt.reshard import put_tree
+from repro.core._exec_stats import EXEC_TELEMETRY
 from repro.data.pipeline import DataPipeline
 from repro.models import api as model_api
 from repro.runtime.fault import RetryPolicy, run_with_recovery
-from repro.runtime.straggler import StragglerDetector
+from repro.runtime.straggler import PlanSkewMonitor, StragglerDetector
 from repro.train import optimizer as opt_mod
 
 log = logging.getLogger("repro.train")
@@ -32,14 +37,22 @@ class TrainerConfig:
     log_every: int = 10
     max_restarts: int = 3
     seed: int = 0
+    # Online re-planning of the EP dispatch plan (plan-backed MoE only):
+    # replan=True arms the skew monitor; replan_at forces one re-plan
+    # after that step completes (deterministic trigger for CI/chaos runs).
+    replan: bool = False
+    replan_at: Optional[int] = None
+    replan_threshold: float = 1.75
+    replan_iters: int = 4
 
 
 class Trainer:
     """Owns device state + the recovery discipline around a StepBundle."""
 
-    def __init__(self, bundle, tcfg: TrainerConfig):
+    def __init__(self, bundle, tcfg: TrainerConfig, chaos=None):
         self.bundle = bundle
         self.tcfg = tcfg
+        self.chaos = chaos
         self.cfg = bundle.meta["cfg"]
         self.shape = bundle.meta["shape"]
         self.mesh = bundle.mesh
@@ -64,6 +77,24 @@ class Trainer:
         self.opt_state = None
         self.start_step = 0
         self.history: list[dict] = []
+        self.replan_events: list[dict] = []
+        self.recoveries: list[dict] = []
+        self._skew: Optional[PlanSkewMonitor] = None
+        if tcfg.replan:
+            self._arm_skew_monitor()
+
+    def _backing_a2a(self):
+        return getattr(self.moe_plan, "a2a", None) \
+            if self.moe_plan is not None else None
+
+    def _arm_skew_monitor(self) -> None:
+        a2a = self._backing_a2a()
+        if a2a is None:
+            return
+        self._skew = PlanSkewMonitor(
+            EXEC_TELEMETRY.ring(a2a.signature.digest),
+            threshold=self.tcfg.replan_threshold,
+            window=4, sustain=2, warmup=4)
 
     # -- state management ----------------------------------------------------
     def init_state(self) -> None:
@@ -101,6 +132,11 @@ class Trainer:
 
     # -- driving -------------------------------------------------------------
     def _run_one(self, step: int) -> dict:
+        if self.chaos is not None:
+            # Inside the recovery try-block: injected faults exercise the
+            # real restart path, and stalls land inside the timed region so
+            # the straggler/skew monitors see them.
+            self.chaos.step_hook(step)
         self.straggler.start()
         # Resolve batch shardings under the bundle's rule profile (a
         # non-default profile, e.g. hier_ep, maps "batch" differently).
@@ -114,12 +150,101 @@ class Trainer:
             log.warning("straggler step %d: %.3fs (%.1fx EMA %.3fs)",
                         report.step, report.seconds, report.ratio,
                         report.ema_seconds)
+        a2a = self._backing_a2a()
+        if a2a is not None and self.straggler.last_seconds is not None:
+            # The EP exchange runs embedded in the jitted step, so the plan
+            # cannot self-time; the step wall time is the epoch-level
+            # signal the skew monitor watches (attribution to the exchange
+            # vs compute is the monitor's job, not the recorder's).
+            a2a.record_epoch(self.straggler.last_seconds)
         out = {k: float(v) for k, v in metrics.items()}
+        self._maybe_replan(step)
         if (step + 1) % self.tcfg.ckpt_every == 0 or \
                 (self.straggler.should_checkpoint_early()
                  and self.ckpt is not None):
             self._save(step + 1)
         return out
+
+    # -- online re-planning --------------------------------------------------
+    def _maybe_replan(self, step: int) -> None:
+        a2a = self._backing_a2a()
+        if a2a is None:
+            return
+        forced = (self.tcfg.replan_at is not None
+                  and step == self.tcfg.replan_at
+                  and not any(ev.get("kind") == "forced"
+                              for ev in self.replan_events))
+        skew = self._skew.observe() if self._skew is not None else None
+        if not forced and skew is None:
+            return
+        from repro import planstore
+        from repro.core import global_plan_cache
+        from repro.core.autotune import decision_signature
+        from repro.runtime import replan as replan_mod
+        if forced:
+            reason = {"kind": "forced", "step": step}
+        else:
+            reason = {"kind": "sustained_skew", "step": step,
+                      "ratio": skew.ratio, "baseline_s": skew.baseline}
+        error_tol = getattr(self.cfg.moe, "codec_tol", None) \
+            if getattr(self.cfg, "moe", None) is not None else None
+        t0 = time.perf_counter()
+        store = planstore.default_store()
+        prev_variant = self.moe_plan.variant
+        try:
+            choice = replan_mod.reautotune(
+                a2a, self.mesh, store=store, iters=self.tcfg.replan_iters,
+                embeddable=True, error_tol=error_tol,
+                annotate={"replan": {**reason,
+                                     "prev_variant": prev_variant}})
+        except Exception as err:  # noqa: BLE001 — a faulting autotuner must not kill training
+            log.warning("re-plan autotune faulted (%s); degrading EP "
+                        "dispatch decision to fence", err)
+            choice = {"variant": "fence", "codec": "identity",
+                      "degraded": str(err), "replan": reason}
+        # Seed the live decision tier so the bundle rebuild (and any other
+        # replica reading the store) resolves instantly from this verdict.
+        live = global_plan_cache()
+        live.auto_choices[decision_signature(
+            a2a.spec, self.mesh, embeddable=True,
+            error_tol=error_tol)] = choice
+        swapped = False
+        if choice["variant"] != prev_variant and \
+                getattr(self.cfg.moe, "a2a_variant", None) == "auto":
+            old_digest = a2a.signature.digest
+            self._rebuild_bundle()
+            new_a2a = self._backing_a2a()
+            swapped = new_a2a is not None and \
+                new_a2a.signature.digest != old_digest
+            if swapped:
+                a2a.free()
+                EXEC_TELEMETRY.record_swap(
+                    old=old_digest, new=new_a2a.signature.digest,
+                    reason=reason, variant_from=prev_variant,
+                    variant_to=self.moe_plan.variant)
+        elif self._skew is not None:
+            self._skew.reset()   # incumbent confirmed: fresh baseline
+        ev = {**reason, "variant_from": prev_variant,
+              "variant_to": choice["variant"], "swapped": swapped,
+              "seconds": time.perf_counter() - t0}
+        self.replan_events.append(ev)
+        log.warning("re-plan at step %d: %s -> %s (swapped=%s, %.2fs)",
+                    step, prev_variant, choice["variant"], swapped,
+                    ev["seconds"])
+
+    def _rebuild_bundle(self) -> None:
+        """Rebuild the step bundle in place (same cfg/shape/mesh): the
+        path a changed variant decision — or a device-loss-class failure —
+        takes to refresh compiled state between steps.  Params/opt state
+        survive untouched; only the jitted program and the EP dispatch
+        plan are rebuilt."""
+        from repro.launch import steps as steps_mod
+        kw = dict(self.bundle.meta.get("bundle_kwargs") or {})
+        self.bundle = steps_mod.make_train_bundle(
+            self.cfg, self.shape, self.mesh, **kw)
+        self.moe_plan = self.bundle.meta.get("moe_plan")
+        if self._skew is not None:
+            self._arm_skew_monitor()
 
     def run(self, failure_hook: Optional[Callable[[int], None]] = None) -> dict:
         if self.params is None and not self.try_resume():
@@ -132,6 +257,16 @@ class Trainer:
                 log.info("step %d  %s", step,
                          "  ".join(f"{k}={v:.4f}" for k, v in metrics.items()))
 
+        def rebuild_plans(err: Exception):
+            # Device-loss class: the plan's window + compiled executable
+            # are device state the checkpoint does not cover.
+            if self._backing_a2a() is not None:
+                self._rebuild_bundle()
+
+        def on_recovery(step: int, err: Exception, kind: str):
+            self.recoveries.append({"step": step, "kind": kind,
+                                    "error": str(err)})
+
         final = run_with_recovery(
             self._run_one,
             restore=self._restore,
@@ -140,6 +275,8 @@ class Trainer:
             policy=RetryPolicy(max_restarts=self.tcfg.max_restarts),
             failure_hook=failure_hook,
             on_metrics=on_metrics,
+            rebuild_plans=rebuild_plans,
+            on_recovery=on_recovery,
         )
         if self.ckpt is not None:
             self._save(final)
@@ -147,6 +284,10 @@ class Trainer:
         return {"final_step": final,
                 "last_metrics": self.history[-1] if self.history else {},
                 "stragglers": len(self.straggler.flagged),
+                "recoveries": self.recoveries,
+                "replans": self.replan_events,
+                "chaos": dict(self.chaos.injected)
+                if self.chaos is not None else None,
                 "ep_dispatch": self.ep_dispatch_report()}
 
     def ep_dispatch_report(self) -> dict | None:

@@ -128,5 +128,17 @@ def test_hierarchical_psum(dist):
     dist("hierarchical_psum", devices=8)
 
 
+def test_replan_hot_swap(dist):
+    dist("replan_hot_swap", devices=8, timeout=1800)
+
+
+def test_elastic_resume(dist):
+    dist("elastic_resume", devices=8)
+
+
+def test_chaos_recovery(dist):
+    dist("chaos_recovery", devices=8)
+
+
 def test_production_mesh_mini(dist):
     dist("production_mesh_mini", devices=8, timeout=1800)

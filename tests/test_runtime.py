@@ -1,0 +1,373 @@
+"""Resilience runtime: straggler/skew detection, recovery replay, chaos
+injection, and elastic count resharding (single-device; the end-to-end
+flows run as dist cases replan_hot_swap / elastic_resume / chaos_recovery)."""
+
+import numpy as np
+import pytest
+
+from repro.core._exec_stats import EpochRing, ExecTelemetry
+from repro.runtime import chaos as chaos_mod
+from repro.runtime import fault as fault_mod
+from repro.runtime import replan as replan_mod
+from repro.runtime.straggler import PlanSkewMonitor, StragglerDetector
+
+
+# --- StragglerDetector ------------------------------------------------------
+
+def test_stop_without_start_returns_none():
+    det = StragglerDetector()
+    assert det.stop(step=0) is None
+    assert det.count == 0 and det.ema is None and det.last_step is None
+
+
+def _feed(det, durations, monkeypatch):
+    """Drive the detector with scripted step durations via a fake clock."""
+    from repro.runtime import straggler
+    clock = {"t": 0.0}
+    monkeypatch.setattr(straggler.time, "perf_counter", lambda: clock["t"])
+    out = []
+    for i, dt in enumerate(durations):
+        det.start()
+        clock["t"] += dt
+        out.append(det.stop(i))
+    return out
+
+
+def test_ema_flags_slow_step_after_warmup(monkeypatch):
+    det = StragglerDetector(threshold=2.0, ema_alpha=0.5, warmup_steps=2)
+    reports = _feed(det, [0.1, 0.1, 0.1, 0.1, 0.5, 0.1], monkeypatch)
+    assert [r is not None for r in reports] == [False] * 4 + [True, False]
+    rep = reports[4]
+    assert rep.step == 4 and rep.ratio == pytest.approx(5.0, rel=0.01)
+    # The flagged step entered the EMA at alpha/4, not alpha: the average
+    # must not have jumped toward the outlier.
+    assert det.ema < 0.2
+
+
+def test_checkpoint_early_windows_by_step_recency(monkeypatch):
+    det = StragglerDetector(threshold=2.0, ema_alpha=0.1, warmup_steps=2,
+                            window_steps=5)
+    # Two slow steps far apart: each flags, but never 2 within the window.
+    fast, slow = [0.1] * 20, 0.5
+    durations = fast[:5] + [slow] + fast[:10] + [slow]
+    _feed(det, durations, monkeypatch)
+    assert len(det.flagged) == 2
+    assert not det.should_checkpoint_early()
+    # ...now two slow steps close together => degrading fleet.
+    det2 = StragglerDetector(threshold=2.0, ema_alpha=0.1, warmup_steps=2,
+                             window_steps=5)
+    _feed(det2, fast[:5] + [slow, 0.1, slow], monkeypatch)
+    assert len(det2.flagged) == 2
+    assert det2.should_checkpoint_early()
+
+
+# --- RetryPolicy / classify / recovery replay -------------------------------
+
+def test_retry_policy_decays_on_sustained_progress():
+    pol = fault_mod.RetryPolicy(max_restarts=3, backoff_seconds=0.0,
+                                decay_after=3)
+    pol.record_failure(5, RuntimeError("x"))
+    pol.record_failure(9, RuntimeError("y"))
+    assert pol.restarts == 2
+    for _ in range(3):
+        pol.record_success()
+    assert pol.restarts == 1          # one restart forgiven
+    pol.record_success()              # streak restarts after a decay
+    assert pol.restarts == 1
+    for _ in range(2):
+        pol.record_success()
+    assert pol.restarts == 0
+    for _ in range(10):
+        pol.record_success()          # never decays below zero
+    assert pol.restarts == 0
+
+
+def test_retry_policy_failure_resets_streak():
+    pol = fault_mod.RetryPolicy(max_restarts=5, backoff_seconds=0.0,
+                                decay_after=3)
+    pol.record_failure(1, RuntimeError("a"))
+    pol.record_success()
+    pol.record_success()
+    pol.record_failure(4, RuntimeError("b"))   # streak back to 0
+    pol.record_success()
+    pol.record_success()
+    assert pol.restarts == 2          # 2 clean steps < decay_after
+    pol.record_success()
+    assert pol.restarts == 1
+
+
+def test_retry_policy_exhaustion_raises():
+    pol = fault_mod.RetryPolicy(max_restarts=1, backoff_seconds=0.0)
+    pol.record_failure(0, RuntimeError("a"))
+    with pytest.raises(fault_mod.FaultError):
+        pol.record_failure(1, RuntimeError("b"))
+
+
+def test_classify_failure():
+    assert fault_mod.classify_failure(RuntimeError("oops")) == "transient"
+    assert fault_mod.classify_failure(
+        chaos_mod.ChaosError("chaos: injected step fault at step 4")) \
+        == "transient"
+    assert fault_mod.classify_failure(
+        chaos_mod.ChaosError("chaos: device lost during step 8")) \
+        == "device_loss"
+    assert fault_mod.classify_failure(
+        chaos_mod.ChaosError("chaos: window allocation failed")) \
+        == "device_loss"
+    err = type("XlaRuntimeError", (RuntimeError,), {})("anything")
+    assert fault_mod.classify_failure(err) == "device_loss"
+
+
+def test_run_with_recovery_replays_and_rebuilds():
+    ran, recoveries, rebuilds = [], [], []
+    fired = set()
+
+    def run_step(step):
+        if step == 3 and "t" not in fired:
+            fired.add("t")
+            raise RuntimeError("flaky step")
+        if step == 6 and "d" not in fired:
+            fired.add("d")
+            raise RuntimeError("device dead")
+        ran.append(step)
+        return {"step": step}
+
+    def restore():
+        return (max(ran) + 1) if ran else 0
+
+    final = fault_mod.run_with_recovery(
+        run_step, restore=restore, start_step=0, n_steps=9,
+        policy=fault_mod.RetryPolicy(max_restarts=3, backoff_seconds=0.0),
+        rebuild_plans=lambda err: rebuilds.append(str(err)),
+        on_recovery=lambda s, e, k: recoveries.append((s, k)))
+    assert final == 9
+    assert ran == list(range(9))      # replay is exact: no step skipped/duped
+    assert recoveries == [(3, "transient"), (6, "device_loss")]
+    # Plans rebuilt ONLY for the device-loss-class failure.
+    assert rebuilds == ["device dead"]
+
+
+# --- chaos injection --------------------------------------------------------
+
+def test_chaos_same_seed_same_schedule():
+    def schedule(seed, n=60):
+        inj = chaos_mod.ChaosInjector(seed=seed, window_fail_rate=0.3)
+        out = []
+        for _ in range(n):
+            try:
+                inj.maybe_fail_window()
+                out.append(False)
+            except chaos_mod.ChaosError:
+                out.append(True)
+        return out
+
+    a, b, c = schedule(7), schedule(7), schedule(8)
+    assert a == b                     # identical replay
+    assert a != c                     # a different seed is a different world
+    assert any(a) and not all(a)
+
+
+def test_chaos_step_faults_fire_once_stalls_every_visit():
+    inj = chaos_mod.ChaosInjector(seed=0, fail_steps=(4,),
+                                  device_loss_steps=(8,),
+                                  stall_steps=(2,), stall_seconds=0.001)
+    with pytest.raises(chaos_mod.ChaosError):
+        inj.step_hook(4)
+    inj.step_hook(4)                  # recovery replay makes progress
+    with pytest.raises(chaos_mod.ChaosError):
+        inj.step_hook(8)
+    inj.step_hook(8)
+    inj.step_hook(2)
+    inj.step_hook(2)                  # a degraded host is slow on replay too
+    assert inj.injected == {"window": 0, "poison": 0, "stall": 2,
+                            "step": 1, "device": 1}
+
+
+def test_chaos_parse_spec():
+    inj = chaos_mod.ChaosInjector.parse(
+        "seed=7,window_fail=0.25,fail_step=4+9,device_loss_step=11,"
+        "stall_steps=3-5,stall_seconds=0.1")
+    assert inj.seed == 7 and inj.window_fail_rate == 0.25
+    assert inj.fail_steps == {4, 9}
+    assert inj.device_loss_steps == {11}
+    assert inj.stall_steps == {3, 4, 5} and inj.stall_seconds == 0.1
+    with pytest.raises(ValueError):
+        chaos_mod.ChaosInjector.parse("frobnicate=1")
+    with pytest.raises(ValueError):
+        chaos_mod.ChaosInjector.parse("seed")
+
+
+def test_poison_store_reads_as_miss_not_crash(tmp_path):
+    import jax.numpy as jnp
+
+    from repro.core.autotune import decision_signature
+    from repro.core.plan import AlltoallvSpec
+    from repro.launch.mesh import make_mesh
+    from repro.planstore import PlanStore
+
+    mesh = make_mesh((1,), ("x",))
+    spec = AlltoallvSpec(np.array([[3]]), (4,), jnp.float32, ("x",),
+                         variant="lock")
+    sig = decision_signature(spec, mesh)
+    store = PlanStore(str(tmp_path))
+    store.put_auto(sig, {"variant": "lock", "codec": "identity"})
+    assert store.get_auto(sig)["variant"] == "lock"
+
+    inj = chaos_mod.ChaosInjector(seed=1)
+    assert inj.poison_store(store) >= 1
+    assert inj.injected["poison"] >= 1
+    assert store.get_auto(sig) is None      # corruption degrades to a miss
+    assert store.invalid >= 1 or store.errors >= 1
+
+
+# --- EpochRing / PlanSkewMonitor --------------------------------------------
+
+def test_epoch_ring_wraparound_and_clamping():
+    ring = EpochRing(capacity=4)
+    assert ring.window(0, 10).size == 0 and ring.last(3).size == 0
+    for i in range(10):
+        ring.record(float(i))
+    assert ring.count == 10
+    np.testing.assert_array_equal(ring.last(2), [8.0, 9.0])
+    np.testing.assert_array_equal(ring.window(6, 10), [6.0, 7.0, 8.0, 9.0])
+    assert ring.window(0, 4).size == 0          # fully evicted
+    np.testing.assert_array_equal(ring.window(5, 8), [6.0, 7.0])  # clamped
+    np.testing.assert_array_equal(ring.window(8, 99), [8.0, 9.0])
+
+
+def test_skew_monitor_sustained_not_spike():
+    tel = ExecTelemetry()
+    ring = tel.ring("digest-a")
+    mon = PlanSkewMonitor(ring, threshold=1.5, window=2, sustain=2, warmup=4)
+    for _ in range(4):
+        ring.record(0.010)
+    assert mon.observe() is None                # baseline only
+    ring.record(0.100)
+    ring.record(0.100)
+    assert mon.observe() is None                # 1 hot window: a spike
+    ring.record(0.010)
+    ring.record(0.010)
+    assert mon.observe() is None                # cool window resets the run
+    for _ in range(4):
+        ring.record(0.100)
+    rep = mon.observe()                         # 2 consecutive hot windows
+    assert rep is not None and rep.windows_hot == 2
+    assert rep.ratio == pytest.approx(10.0, rel=0.05)
+    assert rep.baseline == pytest.approx(0.010, rel=0.01)
+
+
+def test_skew_monitor_reset_reanchors_baseline():
+    tel = ExecTelemetry()
+    ring = tel.ring("digest-b")
+    mon = PlanSkewMonitor(ring, threshold=1.5, window=2, sustain=1, warmup=2)
+    for _ in range(2):
+        ring.record(0.010)
+    for _ in range(2):
+        ring.record(0.100)
+    assert mon.observe() is not None
+    mon.reset()
+    # Post-reset the baseline is the NEW normal (0.1s), not the stale one:
+    # the same level that just triggered must no longer count as skew.
+    for _ in range(4):
+        ring.record(0.100)
+    assert mon.observe() is None
+    assert mon.baseline == pytest.approx(0.100, rel=0.01)
+
+
+def test_skew_monitor_attribution_to_compute():
+    tel = ExecTelemetry()
+    plan_ring, compute_ring = tel.ring("plan"), tel.ring("compute")
+    mon = PlanSkewMonitor(plan_ring, threshold=1.5, window=2, sustain=1,
+                          warmup=2, compute_ring=compute_ring,
+                          attribution=1.0)
+    for _ in range(2):
+        plan_ring.record(0.010)
+        compute_ring.record(0.050)
+    for _ in range(2):
+        plan_ring.record(0.100)      # plan 10x...
+        compute_ring.record(0.750)   # ...but compute 15x: whole host is slow
+    assert mon.observe() is None     # not the plan's fault — no re-plan
+    plan2, comp2 = tel.ring("plan2"), tel.ring("compute2")
+    mon2 = PlanSkewMonitor(plan2, threshold=1.5, window=2, sustain=1,
+                           warmup=2, compute_ring=comp2, attribution=1.0)
+    for _ in range(2):
+        plan2.record(0.010)
+        comp2.record(0.050)
+    for _ in range(2):
+        plan2.record(0.100)          # plan 10x, compute flat: blame the plan
+        comp2.record(0.050)
+    assert mon2.observe() is not None
+
+
+# --- replan: degrade-to-fence + reshard_counts ------------------------------
+
+class _StubPlan:
+    def __init__(self, spec, digest):
+        self.spec = spec
+        self.signature = type("Sig", (), {"digest": digest})()
+        self.auto_choice = None
+        self.freed = False
+
+    def free(self):
+        self.freed = True
+
+
+class _StubCache:
+    """PlanCache stand-in: hands out stub plans keyed by spec.variant."""
+
+    def __init__(self):
+        self.auto_choices = {}
+        self.built = []
+
+    def get(self, spec, mesh, store=None):
+        self.built.append(spec.variant)
+        return _StubPlan(spec, f"digest-{spec.variant}")
+
+
+def test_replan_degrades_to_fence_when_autotuner_faults(monkeypatch):
+    import jax.numpy as jnp
+
+    from repro.core.plan import AlltoallvSpec
+    from repro.launch.mesh import make_mesh
+
+    def boom(*a, **k):
+        raise RuntimeError("autotuner exploded")
+
+    monkeypatch.setattr(replan_mod, "autotune_variant", boom)
+    mesh = make_mesh((1,), ("x",))
+    spec = AlltoallvSpec(np.array([[3]]), (4,), jnp.float32, ("x",),
+                         variant="lock")
+    old = _StubPlan(spec, "digest-old")
+    cache = _StubCache()
+    mgr = replan_mod.ReplanManager(old, mesh, cache, background=False)
+    mgr.trigger("unit")
+    assert mgr.observe()                    # degraded plan installs
+    assert mgr.replans_completed == 1
+    new = mgr.plan
+    assert new.spec.variant == "fence" and old.freed
+    choice = new.auto_choice
+    assert choice["variant"] == "fence" and "degraded" in choice
+    assert choice["replan"]["kind"] == "unit"
+    assert list(cache.auto_choices.values()) == [choice]
+    ev = mgr.events[-1]
+    assert ev["event"] == "swap" and ev["variant_to"] == "fence"
+
+
+def test_reshard_counts_shrink_grow_conserve():
+    rng = np.random.default_rng(0)
+    c = rng.integers(0, 9, size=(8, 8))
+    down = replan_mod.reshard_counts(c, 4)
+    assert down.shape == (4, 4) and down.sum() == c.sum()
+    # Block sums exactly: new rank r is old ranks {2r, 2r+1}.
+    np.testing.assert_array_equal(
+        down, c.reshape(4, 2, 4, 2).sum(axis=(1, 3)))
+    up = replan_mod.reshard_counts(c, 16)
+    assert up.shape == (16, 16) and up.sum() == c.sum()
+    # The split is a partition of each old cell over its successor block.
+    np.testing.assert_array_equal(
+        up.reshape(8, 2, 8, 2).sum(axis=(1, 3)), c)
+    np.testing.assert_array_equal(replan_mod.reshard_counts(c, 8), c)
+    with pytest.raises(ValueError):
+        replan_mod.reshard_counts(c, 3)     # coprime: no principled split
+    with pytest.raises(ValueError):
+        replan_mod.reshard_counts(c[0], 4)  # not square
