@@ -28,19 +28,56 @@ import argparse
 import glob
 import json
 import os
+import re
 import subprocess
 import sys
 
 
+def load_raw(text_or_path: str, from_text: bool = False) -> list[dict]:
+    """BENCH json -> the raw row list (full dicts, provenance intact)."""
+    if from_text:
+        return json.loads(text_or_path)
+    with open(text_or_path) as f:
+        return json.load(f)
+
+
 def load_rows(text_or_path: str, from_text: bool = False) -> dict[str, float]:
     """BENCH json -> {row name: us_per_call}, last occurrence wins."""
-    if from_text:
-        rows = json.loads(text_or_path)
-    else:
-        with open(text_or_path) as f:
-            rows = json.load(f)
-    return {r["name"]: float(r["us_per_call"]) for r in rows
+    return {r["name"]: float(r["us_per_call"])
+            for r in load_raw(text_or_path, from_text)
             if "name" in r and "us_per_call" in r}
+
+
+def _provenance(row: dict) -> str:
+    """The row's measurement context, for warning lines: every field that
+    is not the name/value pair, in BENCH key order."""
+    extras = [f"{k}={row[k]}" for k in row if k not in ("name", "us_per_call")]
+    return "; ".join(str(e) for e in extras) if extras else "no provenance"
+
+
+def saving_warnings(raw_rows: list[dict]) -> list[str]:
+    """Negative-saving warnings for one fresh BENCH file.
+
+    A "saving" row records how much the persistent/overlapped/plan-backed
+    path saves over its baseline — negative means persistence is COSTING
+    time at that point, which the tolerance gate deliberately ignores
+    (non-positive baselines are skipped as non-timings).  Ignoring is
+    right for gating, wrong for silence: surface each one explicitly,
+    with the row's provenance, so a sweep whose break-even moved shows up
+    in the job log even when every timing row is within tolerance."""
+    warns = []
+    for row in raw_rows:
+        name = row.get("name", "")
+        if "saving" in name and float(row.get("us_per_call", 0.0)) < 0:
+            warns.append(f"  ? {name}: saving is negative "
+                         f"({row['us_per_call']:.1f}us — persistence costs "
+                         f"here) [{_provenance(row)}]")
+            continue
+        m = re.search(r"savings=(-[0-9.]+)%", str(row.get("derived", "")))
+        if m:
+            warns.append(f"  ? {name}: derived savings {m.group(1)}% is "
+                         f"negative [{_provenance(row)}]")
+    return warns
 
 
 def baseline_rows(fresh_path: str, baseline_dir: str | None,
@@ -109,32 +146,43 @@ def main(argv=None) -> int:
               + (f" matching --only {args.only}" if only else ""))
         return 2
 
-    total_regr, total_cmp = [], 0
+    total_regr, total_cmp, total_warn = [], 0, 0
     for path in files:
-        base = baseline_rows(path, args.baseline, args.baseline_ref)
         name = os.path.basename(path)
+        raw = load_raw(path)
+        warns = saving_warnings(raw)
+        base = baseline_rows(path, args.baseline, args.baseline_ref)
         if base is None:
             print(f"{name}: no committed baseline — skipped")
+            for line in warns:
+                print(line)
+            total_warn += len(warns)
             continue
-        regr, notes, n = compare(load_rows(path), base,
-                                 args.tol_pct, args.abs_us)
+        fresh = {r["name"]: float(r["us_per_call"]) for r in raw
+                 if "name" in r and "us_per_call" in r}
+        regr, notes, n = compare(fresh, base, args.tol_pct, args.abs_us)
         total_cmp += n
         status = "REGRESSED" if regr else "ok"
-        print(f"{name}: {n} rows compared, {len(regr)} regressed [{status}]")
-        for line in regr + notes:
+        print(f"{name}: {n} rows compared, {len(regr)} regressed "
+              f"[{status}]" + (f", {len(warns)} negative-saving warning(s)"
+                               if warns else ""))
+        for line in regr + warns + notes:
             print(line)
         total_regr.extend(regr)
+        total_warn += len(warns)
 
     if total_cmp == 0:
         print("check_regress: no comparable rows (all baselines missing?)")
         return 2
+    warn_note = (f"; {total_warn} negative-saving warning(s) — see '?' "
+                 f"lines" if total_warn else "")
     if total_regr:
         print(f"check_regress: {len(total_regr)} regression(s) over "
               f"{total_cmp} rows (window: +{args.tol_pct:.0f}% "
-              f"+ {args.abs_us:.0f}us)")
+              f"+ {args.abs_us:.0f}us){warn_note}")
         return 1
     print(f"check_regress: clean ({total_cmp} rows within "
-          f"+{args.tol_pct:.0f}% + {args.abs_us:.0f}us)")
+          f"+{args.tol_pct:.0f}% + {args.abs_us:.0f}us){warn_note}")
     return 0
 
 

@@ -26,11 +26,13 @@ record via ``plan.record_epoch`` (what the train loop does).
 
 from __future__ import annotations
 
+import threading
 import time
 
 import numpy as np
 
 DEFAULT_RING_CAPACITY = 512
+DEFAULT_RANK_RING_CAPACITY = 128
 
 
 class EpochRing:
@@ -76,26 +78,74 @@ class EpochRing:
         return {"count": self._n,
                 "mean_s": float(view.mean()),
                 "p50_s": float(np.median(view)),
+                "p95_s": float(np.percentile(view, 95)),
+                "p99_s": float(np.percentile(view, 99)),
                 "max_s": float(view.max()),
                 "last_s": float(view[-1])}
 
 
 class ExecTelemetry:
-    """Registry of per-plan epoch rings + the hot-swap event log."""
+    """Registry of per-plan epoch rings + the hot-swap event log.
+
+    Three kinds of state, three concurrency rules:
+
+    - ``EpochRing.record`` stays lock-free (numpy slot store under the
+      GIL) — it is the epoch hot path and each ring has one writer.
+    - *Registry* mutation (inserting rings, appending swaps, registering
+      fits) takes ``_lock``: ``ReplanManager``'s background thread creates
+      rings and logs swaps concurrently with the step loop, and an
+      unguarded dict insert racing an iteration in ``summary()`` raises
+      ``RuntimeError: dictionary changed size``.
+    - Readers use ``snapshot()``: a lock-free-read view built from shallow
+      copies taken under the lock, so the exporters (Prometheus render,
+      trace report) never hold the lock while formatting.
+
+    ``rank_rings`` extends the per-plan signal per *rank* — keyed
+    ``(digest, rank)`` — giving skew attribution and the hierarchy
+    leader-re-assignment roadmap item the per-rank timing stream the
+    driver-global rings could not provide.  ``fits`` holds the Eq. 1-3
+    break-even fit stored with each auto decision, keyed by the winning
+    plan's digest, for ``obs.breakeven_check`` to validate against the
+    observed rings."""
 
     def __init__(self) -> None:
         self.rings: dict[str, EpochRing] = {}
+        self.rank_rings: dict[tuple[str, int], EpochRing] = {}
         self.swaps: list[dict] = []
+        self.fits: dict[str, dict] = {}
+        self._lock = threading.Lock()
 
     def ring(self, digest: str,
              capacity: int = DEFAULT_RING_CAPACITY) -> EpochRing:
         r = self.rings.get(digest)
         if r is None:
-            r = self.rings[digest] = EpochRing(capacity)
+            with self._lock:
+                r = self.rings.setdefault(digest, EpochRing(capacity))
+        return r
+
+    def rank_ring(self, digest: str, rank: int,
+                  capacity: int = DEFAULT_RANK_RING_CAPACITY) -> EpochRing:
+        key = (digest, int(rank))
+        r = self.rank_rings.get(key)
+        if r is None:
+            with self._lock:
+                r = self.rank_rings.setdefault(key, EpochRing(capacity))
         return r
 
     def record(self, digest: str, seconds: float) -> None:
         self.ring(digest).record(float(seconds))
+
+    def record_rank(self, digest: str, rank: int, seconds: float) -> None:
+        """Record one rank's share of an epoch — the per-rank signal.  On
+        the hot path after the first call per (digest, rank): dict get +
+        ring store, no lock."""
+        self.rank_ring(digest, rank).record(float(seconds))
+
+    def record_fit(self, digest: str, fit: dict) -> None:
+        """Register the Eq. 1-3 fit a plan's auto decision was measured
+        with (``choice["breakeven"]``), for live break-even validation."""
+        with self._lock:
+            self.fits[digest] = dict(fit)
 
     def record_swap(self, *, old: str, new: str, reason,
                     variant_from: str | None = None,
@@ -105,16 +155,43 @@ class ExecTelemetry:
         ev = {"old": old, "new": new, "reason": reason,
               "variant_from": variant_from, "variant_to": variant_to,
               "time": time.time()}
-        self.swaps.append(ev)
+        with self._lock:
+            self.swaps.append(ev)
         return ev
 
+    def rank_summary(self, digest: str) -> dict[int, dict]:
+        """Per-rank ring summaries for one plan, keyed by rank."""
+        with self._lock:
+            items = [(k[1], r) for k, r in self.rank_rings.items()
+                     if k[0] == digest]
+        return {rank: r.summary() for rank, r in sorted(items)}
+
     def reset(self) -> None:
-        self.rings.clear()
-        self.swaps.clear()
+        with self._lock:
+            self.rings.clear()
+            self.rank_rings.clear()
+            self.swaps.clear()
+            self.fits.clear()
+
+    def snapshot(self) -> dict:
+        """Consistent plain-data view for readers: ring summaries, rank
+        summaries, swap list, fits.  The lock covers only the shallow
+        copies; summaries are computed outside it (each ring read is
+        independently safe), so a concurrent recorder is never blocked for
+        longer than four dict copies."""
+        with self._lock:
+            rings = dict(self.rings)
+            rank_rings = dict(self.rank_rings)
+            swaps = list(self.swaps)
+            fits = {d: dict(f) for d, f in self.fits.items()}
+        return {"plans": {d: r.summary() for d, r in rings.items()},
+                "ranks": {k: r.summary() for k, r in rank_rings.items()},
+                "swaps": swaps,
+                "fits": fits}
 
     def summary(self) -> dict:
-        return {"plans": {d: r.summary() for d, r in self.rings.items()},
-                "swaps": list(self.swaps)}
+        snap = self.snapshot()
+        return {"plans": snap["plans"], "swaps": snap["swaps"]}
 
 
 EXEC_TELEMETRY = ExecTelemetry()

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import threading
 
 
 @dataclasses.dataclass
@@ -32,12 +33,29 @@ class InitStats:
     store_puts: int = 0          # artifacts written
     store_invalid: int = 0       # corrupt/mismatched entries treated as misses
 
+    def __post_init__(self) -> None:
+        # Not a dataclass field: locks don't copy/compare and must not
+        # appear in as_dict().
+        object.__setattr__(self, "_lock", threading.Lock())
+
+    def bump(self, field: str, n: int = 1) -> None:
+        """Thread-safe increment.  ``ReplanManager``'s background sweep
+        bumps these concurrently with foreground INITs; a bare ``+=`` is a
+        read-modify-write that can drop counts across threads.  All *src*
+        call sites go through here; plain attribute reads stay valid for
+        tests."""
+        with self._lock:
+            setattr(self, field, getattr(self, field) + n)
+
     def reset(self) -> None:
-        for f in dataclasses.fields(self):
-            setattr(self, f.name, 0)
+        with self._lock:
+            for f in dataclasses.fields(self):
+                setattr(self, f.name, 0)
 
     def as_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        with self._lock:
+            return {f.name: getattr(self, f.name)
+                    for f in dataclasses.fields(self)}
 
 
 INIT_STATS = InitStats()

@@ -29,9 +29,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from .. import compat
+from ..obs.spans import TRACER
 from ..parallel import wirecodec
 from . import breakeven
 from . import metadata as md
+from ._exec_stats import EXEC_TELEMETRY
 from ._init_stats import INIT_STATS
 from .plan import AlltoallvPlan, AlltoallvSpec, PlanCache
 
@@ -159,6 +161,11 @@ def autotune_variant(
                             choice.get("codec", "identity")),
             mesh, store=store)
         plan.auto_choice = choice
+        if choice.get("breakeven"):
+            # A warm decision still carries its sweep's Eq. 1-3 fit — the
+            # live break-even validator checks it against observed epochs.
+            EXEC_TELEMETRY.record_fit(plan.signature.digest,
+                                      choice["breakeven"])
         return plan
 
     t_sweep0 = time.perf_counter()
@@ -175,8 +182,8 @@ def autotune_variant(
             plan.compile()
             plans[key] = plan
 
-    INIT_STATS.autotune_sweeps += 1
-    INIT_STATS.autotune_bursts += bursts * len(plans)
+    INIT_STATS.bump("autotune_sweeps")
+    INIT_STATS.bump("autotune_bursts", bursts * len(plans))
     x = jax.device_put(
         jnp.zeros(next(iter(plans.values())).global_send_shape, spec.dtype),
         next(iter(plans.values()))._x_sharding)
@@ -188,8 +195,10 @@ def autotune_variant(
     for p in plans.values():
         p.record_starts = False
     try:
-        times = breakeven.measure_arms(arms, iters=iters, warmup=warmup,
-                                       bursts=bursts)
+        with TRACER.span("measure_bursts", "init.autotune",
+                         arms=sorted(arms), bursts=bursts, iters=iters):
+            times = breakeven.measure_arms(arms, iters=iters, warmup=warmup,
+                                           bursts=bursts)
 
         # Adaptive refinement: when the top two candidates land within 25%
         # the first (short) round cannot rank them reliably on a noisy
@@ -199,10 +208,13 @@ def autotune_variant(
         ranked = sorted(times, key=times.get)
         if len(ranked) > 1 and times[ranked[1]] < 1.25 * times[ranked[0]]:
             finalists = {v: arms[v] for v in ranked[:2]}
-            INIT_STATS.autotune_bursts += max(bursts, 6) * len(finalists)
-            refined = breakeven.measure_arms(
-                finalists, iters=2 * iters, warmup=warmup,
-                bursts=max(bursts, 6))
+            INIT_STATS.bump("autotune_bursts",
+                            max(bursts, 6) * len(finalists))
+            with TRACER.span("measure_bursts_refine", "init.autotune",
+                             arms=ranked[:2], bursts=max(bursts, 6)):
+                refined = breakeven.measure_arms(
+                    finalists, iters=2 * iters, warmup=warmup,
+                    bursts=max(bursts, 6))
             for v, t in refined.items():
                 times[v] = min(times[v], t)
     finally:
@@ -242,6 +254,11 @@ def autotune_variant(
         choice["codec_fits"] = breakeven.codec_fits(per_codec, sweep_seconds)
     if annotate:
         choice.update(annotate)
+    if TRACER.enabled:
+        TRACER.emit_span("autotune_sweep", "init.autotune",
+                         t_sweep0, t_sweep0 + sweep_seconds,
+                         {"winner": best, "arms": len(plans),
+                          "codecs": sweep_codecs})
     cache.auto_choices[auto_sig] = choice
     if store is not None:
         try:
@@ -250,6 +267,7 @@ def autotune_variant(
             pass                          # best-effort, same rule as put_plan
     plan = plans[best]
     plan.auto_choice = choice
+    EXEC_TELEMETRY.record_fit(plan.signature.digest, choice["breakeven"])
     return plan
 
 

@@ -59,6 +59,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
+from ..obs.spans import TRACER
 from ..parallel import wirecodec
 from . import metadata as md
 from . import variants
@@ -199,10 +200,12 @@ class AlltoallvPlan:
                 self.hier_schedule = warm_sched
                 self.warm_loaded = True
             else:
-                INIT_STATS.table_bakes += 1
-                self.hier_schedule = md.hier_two_stage_schedule(
-                    sc, self.p_outer, self.p_inner, self.recv_rows,
-                    spec.tile_rows)
+                INIT_STATS.bump("table_bakes")
+                with TRACER.span("hier_schedule_bake", "init.bake",
+                                 p=self.p, variant=spec.variant):
+                    self.hier_schedule = md.hier_two_stage_schedule(
+                        sc, self.p_outer, self.p_inner, self.recv_rows,
+                        spec.tile_rows)
             self.hierarchy_remote_needed = self.hier_schedule.remote_needed
             self.cross_group_puts = self.hier_schedule.cross_group_puts
         else:
@@ -260,8 +263,11 @@ class AlltoallvPlan:
                 tables = warm_tables
                 self.warm_loaded = True
             else:
-                INIT_STATS.table_bakes += 1
-                tables = md.baked_index_tables(sc, self.capacity, self.recv_rows)
+                INIT_STATS.bump("table_bakes")
+                with TRACER.span("index_table_bake", "init.bake",
+                                 p=self.p, variant=spec.variant):
+                    tables = md.baked_index_tables(sc, self.capacity,
+                                                   self.recv_rows)
             self.index_tables = tables
             self._table_host = (tables.pack_src, tables.pack_valid,
                                 tables.unpack_src, tables.unpack_valid)
@@ -298,9 +304,21 @@ class AlltoallvPlan:
         # themselves flip record_starts off and call record_epoch instead.
         self.record_starts = True
         if self.warm_loaded:
-            INIT_STATS.warm_inits += 1
+            INIT_STATS.bump("warm_inits")
         else:
-            INIT_STATS.cold_inits += 1
+            INIT_STATS.bump("cold_inits")
+        # Prebuilt once so the epoch hot path emits spans with zero dict
+        # allocation (``TRACER.emit_span`` stores the same dict by ref).
+        self._digest = self.signature.digest
+        self._epoch_span_args = {"digest": self._digest,
+                                 "variant": spec.variant}
+        if TRACER.enabled:
+            TRACER.emit_span("plan_init", "init", t0, time.perf_counter(),
+                             {"digest": self._digest,
+                              "variant": spec.variant,
+                              "warm": self.warm_loaded,
+                              "p": self.p,
+                              "codec": spec.codec})
 
     # -- geometry ------------------------------------------------------------
     @property
@@ -597,6 +615,14 @@ class AlltoallvPlan:
         if self._compiled is not None:
             return self
         t0 = time.perf_counter()
+        with TRACER.span("plan_compile", "init",
+                         digest=self.signature.digest,
+                         variant=self.spec.variant):
+            self._compile_impl()
+        self.init_compile_seconds = time.perf_counter() - t0
+        return self
+
+    def _compile_impl(self) -> None:
         n_tbl = len(self._table_args)
         fn = shard_map(
             self.shard_fn, mesh=self.mesh,
@@ -611,8 +637,6 @@ class AlltoallvPlan:
                                          sharding=self._x_sharding)
                     for t in self._table_args)
         self._compiled = jitted.lower(x_s, w_s, *t_s).compile()
-        self.init_compile_seconds = time.perf_counter() - t0
-        return self
 
     # -- START / WAIT / FREE ----------------------------------------------------
     def start(self, sendbuf: jax.Array) -> jax.Array:
@@ -622,8 +646,11 @@ class AlltoallvPlan:
         t0 = time.perf_counter()
         out = self._compiled(sendbuf, win, *self._table_args)
         if self.record_starts:
-            EXEC_TELEMETRY.record(self.signature.digest,
-                                  time.perf_counter() - t0)
+            t1 = time.perf_counter()
+            EXEC_TELEMETRY.record(self._digest, t1 - t0)
+            if TRACER.enabled:
+                TRACER.emit_span("epoch", "execute", t0, t1,
+                                 self._epoch_span_args)
         self.window.adopt(out)   # donated-in, aliased-out: window reuse
         self.starts += 1
         return out
@@ -648,8 +675,11 @@ class AlltoallvPlan:
         t0 = time.perf_counter()
         out = self._compiled(sendbuf, win, *self._table_args)
         if self.record_starts:
-            EXEC_TELEMETRY.record(self.signature.digest,
-                                  time.perf_counter() - t0)
+            t1 = time.perf_counter()
+            EXEC_TELEMETRY.record(self._digest, t1 - t0)
+            if TRACER.enabled:
+                TRACER.emit_span("epoch", "execute", t0, t1,
+                                 self._epoch_span_args)
         self.window.adopt(out, slot=slot)
         self.starts += 1
         return out
@@ -658,12 +688,38 @@ class AlltoallvPlan:
     def wait(recvbuf: jax.Array) -> jax.Array:
         return jax.block_until_ready(recvbuf)
 
-    def record_epoch(self, seconds: float) -> None:
+    def record_epoch(self, seconds: float, t_end: "float | None" = None) -> None:
         """Record one externally timed epoch into this plan's telemetry
         ring.  The path for consumers whose epochs run inside a larger
         jitted program (``embed()`` bodies cannot self-time) or who want
-        end-to-end start+wait wall time instead of dispatch time."""
-        EXEC_TELEMETRY.record(self.signature.digest, float(seconds))
+        end-to-end start+wait wall time instead of dispatch time.
+
+        ``t_end`` anchors the emitted trace span's end (perf_counter
+        seconds).  Callers that also emit their own enclosing span (the
+        trainer's ``train_step``) must pass the timestamp their window
+        measurement straddles, so the backdated epoch span nests cleanly
+        instead of spilling past the caller's span by the time it took to
+        reach this call."""
+        EXEC_TELEMETRY.record(self._digest, float(seconds))
+        if TRACER.enabled:
+            t1 = time.perf_counter() if t_end is None else float(t_end)
+            TRACER.emit_span("epoch", "execute", t1 - float(seconds), t1,
+                             self._epoch_span_args)
+
+    def record_epoch_ranks(self, seconds_by_rank) -> None:
+        """Per-rank epoch times into the ``(digest, rank)`` rank rings —
+        the per-rank signal skew attribution (and the hierarchy leader
+        re-assignment roadmap item) consumes.  Accepts a mapping
+        ``{rank: seconds}`` or a dense sequence indexed by rank."""
+        items = (seconds_by_rank.items()
+                 if hasattr(seconds_by_rank, "items")
+                 else enumerate(seconds_by_rank))
+        for rank, s in items:
+            EXEC_TELEMETRY.record_rank(self._digest, int(rank), float(s))
+
+    def rank_summaries(self) -> dict[int, dict]:
+        """Per-rank ring summaries for this plan, keyed by rank."""
+        return EXEC_TELEMETRY.rank_summary(self._digest)
 
     @property
     def epoch_ring(self):
@@ -744,7 +800,7 @@ class PlanCache:
                                  warm=warm)
         except WarmStartError:
             # Stale-but-colliding artifact: cold INIT, never wrong tables.
-            INIT_STATS.store_invalid += 1
+            INIT_STATS.bump("store_invalid")
             plan = AlltoallvPlan(spec, mesh, window_cache=self.window_cache)
         if store is not None and not plan.warm_loaded:
             try:

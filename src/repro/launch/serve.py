@@ -35,11 +35,31 @@ def main(argv=None):
                         "in this process — including the built-in "
                         "plan-backed MoE EP dispatch — reuses artifacts of "
                         "previous serving processes")
+    p.add_argument("--trace", default=None, metavar="PATH",
+                   help="enable span tracing (repro.obs) and export a "
+                        "Chrome-trace JSON to PATH at exit — INIT spans plus "
+                        "prefill/decode EXECUTE spans")
+    p.add_argument("--metrics-port", type=int, default=None,
+                   help="serve Prometheus metrics on 127.0.0.1:PORT for the "
+                        "lifetime of the process (repro.obs.MetricsServer); "
+                        "0 picks a free port")
+    p.add_argument("--metrics-file", default=None, metavar="PATH",
+                   help="write a Prometheus text-format metrics snapshot "
+                        "to PATH at exit")
     args = p.parse_args(argv)
 
     import dataclasses
 
     import numpy as np
+
+    if args.trace:
+        from repro.obs import TRACER
+        TRACER.enable()
+    metrics_server = None
+    if args.metrics_port is not None:
+        from repro.obs import MetricsServer
+        metrics_server = MetricsServer(args.metrics_port).start()
+        print(f"metrics: http://127.0.0.1:{metrics_server.port}/metrics")
 
     from repro.configs import get, get_reduced
     from repro.launch.mesh import make_mesh
@@ -76,6 +96,16 @@ def main(argv=None):
     if args.plan_store:
         from repro.core import init_stats
         print("plan-store init stats:", init_stats())
+    if args.trace:
+        from repro.obs import write_trace
+        trace = write_trace(args.trace)
+        print(f"trace: {len(trace['traceEvents'])} events -> {args.trace}")
+    if args.metrics_file:
+        from repro.obs import write_metrics
+        text = write_metrics(args.metrics_file)
+        print(f"metrics: {len(text.splitlines())} lines -> {args.metrics_file}")
+    if metrics_server is not None:
+        metrics_server.stop()
     return stats
 
 

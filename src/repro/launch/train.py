@@ -105,10 +105,25 @@ def main(argv=None) -> dict:
                         "cleanly AND every injected --chaos fault was "
                         "recovered (plus, with --replan-at, the forced "
                         "re-plan ran)")
+    p.add_argument("--trace", default=None, metavar="PATH",
+                   help="enable span tracing (repro.obs) and export a "
+                        "Chrome-trace JSON to PATH at exit — INIT bakes/"
+                        "bursts/store ops, per-epoch EXECUTE, replan/swap "
+                        "events; open in Perfetto or chrome://tracing")
+    p.add_argument("--trace-jsonl", default=None, metavar="PATH",
+                   help="also append the raw span records as JSONL to PATH "
+                        "(implies tracing)")
+    p.add_argument("--metrics-file", default=None, metavar="PATH",
+                   help="write a Prometheus text-format metrics snapshot "
+                        "(repro.obs.metrics) to PATH at exit")
     args = p.parse_args(argv)
 
     logging.basicConfig(level=logging.INFO,
                         format="%(asctime)s %(name)s %(message)s")
+
+    if args.trace or args.trace_jsonl:
+        from repro.obs import TRACER
+        TRACER.enable()
 
     if args.plan_store:
         from repro import planstore
@@ -208,6 +223,20 @@ def main(argv=None) -> dict:
         replan=args.replan, replan_at=args.replan_at), chaos=chaos)
     result = trainer.run()
     print("train finished:", result)
+    # Export observability artifacts BEFORE the assert gates below — a
+    # failed assertion is exactly when the trace is most wanted.
+    if args.trace:
+        from repro.obs import write_trace
+        trace = write_trace(args.trace)
+        print(f"trace: {len(trace['traceEvents'])} events -> {args.trace}")
+    if args.trace_jsonl:
+        from repro.obs import write_jsonl
+        n = write_jsonl(args.trace_jsonl)
+        print(f"trace-jsonl: {n} events -> {args.trace_jsonl}")
+    if args.metrics_file:
+        from repro.obs import write_metrics
+        text = write_metrics(args.metrics_file)
+        print(f"metrics: {len(text.splitlines())} lines -> {args.metrics_file}")
     if args.assert_recovery:
         injected = sum((result.get("chaos") or {}).values())
         problems = []

@@ -45,6 +45,7 @@ from typing import Any, Callable
 
 from repro.core import metadata as md
 from repro.core._init_stats import INIT_STATS
+from repro.obs.spans import TRACER
 
 from . import codec
 from .backend import (ABSENT, FsRemoteBackend, GenerationConflict,
@@ -118,17 +119,25 @@ class PlanStore:
 
     def get(self, sig: "md.PatternSignature") -> PlanArtifact | None:
         """Load + validate the entry for ``sig``; None on miss or any defect."""
+        with TRACER.span("store_get", "store", backend=self.root) as sp:
+            art = self._get(sig, sp)
+            if "result" not in sp.args:
+                sp.args["result"] = "hit" if art is not None else "miss"
+            return art
+
+    def _get(self, sig: "md.PatternSignature", sp) -> PlanArtifact | None:
         key = self.key_for(sig)
         try:
             art = self._load_key(key)
         except FileNotFoundError:
             self.misses += 1
-            INIT_STATS.store_misses += 1
+            INIT_STATS.bump("store_misses")
             return None
         except RemoteUnavailable:
             self.errors += 1
             self.misses += 1
-            INIT_STATS.store_misses += 1
+            INIT_STATS.bump("store_misses")
+            sp.args["result"] = "error"
             return None
         except ArtifactError:
             art = None
@@ -145,10 +154,11 @@ class PlanStore:
                 # Vanished underneath us (another process's eviction): a
                 # plain miss, not corruption.
                 self.misses += 1
-                INIT_STATS.store_misses += 1
+                INIT_STATS.bump("store_misses")
                 return None
             self.invalid += 1
-            INIT_STATS.store_invalid += 1
+            INIT_STATS.bump("store_invalid")
+            sp.args["result"] = "invalid"
             try:
                 self.store_backend.delete(key)
             except OSError:
@@ -159,7 +169,7 @@ class PlanStore:
         except OSError:
             pass
         self.hits += 1
-        INIT_STATS.store_hits += 1
+        INIT_STATS.bump("store_hits")
         return art
 
     def get_auto(self, sig: "md.PatternSignature") -> dict | None:
@@ -181,9 +191,10 @@ class PlanStore:
         """Atomically publish ``art`` under ``sig``'s key; returns the entry
         path (local backends) or key."""
         key = self.key_for(sig)
-        self.store_backend.put_bytes(key, codec.dumps(self._stamp(art)))
+        with TRACER.span("store_put", "store", backend=self.root):
+            self.store_backend.put_bytes(key, codec.dumps(self._stamp(art)))
         self.puts += 1
-        INIT_STATS.store_puts += 1
+        INIT_STATS.bump("store_puts")
         self._evict()
         return self.store_backend.local_path(key) or key
 
@@ -217,31 +228,36 @@ class PlanStore:
         ``retries`` attempts."""
         key = self.key_for(sig)
         last_conflict: GenerationConflict | None = None
-        for attempt in range(max(1, int(retries))):
-            data, gen = self.store_backend.get_with_generation(key)
-            art = None
-            if data is not None:
+        with TRACER.span("store_merge", "store", backend=self.root) as sp:
+            for attempt in range(max(1, int(retries))):
+                data, gen = self.store_backend.get_with_generation(key)
+                art = None
+                if data is not None:
+                    try:
+                        art = codec.loads(data)
+                        art.validate_against(sig, jax_ver=self.jax_ver,
+                                             repro_ver=self.repro_ver,
+                                             backend=self.backend)
+                    except ArtifactError:
+                        art = None   # corrupt/foreign entry: replace wholesale
+                if art is None:
+                    art = PlanArtifact(signature=signature_meta(sig))
+                mutate(art)
                 try:
-                    art = codec.loads(data)
-                    art.validate_against(sig, jax_ver=self.jax_ver,
-                                         repro_ver=self.repro_ver,
-                                         backend=self.backend)
-                except ArtifactError:
-                    art = None       # corrupt/foreign entry: replace wholesale
-            if art is None:
-                art = PlanArtifact(signature=signature_meta(sig))
-            mutate(art)
-            try:
-                self.store_backend.put_bytes(
-                    key, codec.dumps(self._stamp(art)), if_generation=gen)
-            except GenerationConflict as e:
-                last_conflict = e
-                time.sleep(random.random() * min(0.002 * (attempt + 1), 0.05))
-                continue
-            self.puts += 1
-            INIT_STATS.store_puts += 1
-            self._evict()
-            return self.store_backend.local_path(key) or key
+                    self.store_backend.put_bytes(
+                        key, codec.dumps(self._stamp(art)), if_generation=gen)
+                except GenerationConflict as e:
+                    last_conflict = e
+                    time.sleep(random.random()
+                               * min(0.002 * (attempt + 1), 0.05))
+                    continue
+                self.puts += 1
+                INIT_STATS.bump("store_puts")
+                self._evict()
+                sp.args["attempts"] = attempt + 1
+                return self.store_backend.local_path(key) or key
+            sp.args["attempts"] = max(1, int(retries))
+            sp.args["result"] = "conflict"
         raise last_conflict if last_conflict is not None else GenerationConflict(
             f"merge of {key} never converged")
 
@@ -373,12 +389,22 @@ class TieredPlanStore:
         art = self.local.get(sig)
         if art is not None:
             return art
+        with TRACER.span("store_get_remote", "store",
+                         backend=self.remote.root) as sp:
+            art = self._get_remote(sig, sp)
+            if "result" not in sp.args:
+                sp.args["result"] = "hit" if art is not None else "miss"
+            return art
+
+    def _get_remote(self, sig: "md.PatternSignature",
+                    sp) -> PlanArtifact | None:
         key = self.remote.key_for(sig)
         try:
             data = self.remote.store_backend.get_bytes(key)
         except RemoteUnavailable:
             self.remote_errors += 1
             self.remote.errors += 1
+            sp.args["result"] = "error"
             return None
         if data is None:
             # The logical miss was already counted by local.get above;
@@ -392,14 +418,15 @@ class TieredPlanStore:
                                  backend=self.remote.backend)
         except ArtifactError:
             self.remote.invalid += 1
-            INIT_STATS.store_invalid += 1
+            INIT_STATS.bump("store_invalid")
+            sp.args["result"] = "invalid"
             try:
                 self.remote.store_backend.delete(key)
             except OSError:
                 pass
             return None
         self.remote.hits += 1
-        INIT_STATS.store_hits += 1
+        INIT_STATS.bump("store_hits")
         try:
             self.remote.store_backend.touch(key)
         except OSError:

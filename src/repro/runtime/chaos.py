@@ -30,6 +30,8 @@ import random
 import time
 from typing import Iterable, Optional
 
+from repro.obs.spans import TRACER
+
 
 class ChaosError(RuntimeError):
     """An injected fault."""
@@ -87,6 +89,8 @@ class ChaosInjector:
         if self.window_fail_rate and \
                 self._rng.random() < self.window_fail_rate:
             self.injected["window"] += 1
+            TRACER.instant("chaos_injection", "runtime", kind="window",
+                           n=self.injected["window"])
             raise ChaosError("chaos: window allocation failed "
                              f"(injection #{self.injected['window']})")
 
@@ -104,6 +108,9 @@ class ChaosInjector:
             backend.put_bytes(key, b"chaos-poison\x00" + junk)
             poisoned += 1
         self.injected["poison"] += poisoned
+        if poisoned:
+            TRACER.instant("chaos_injection", "runtime", kind="poison",
+                           n=poisoned)
         return poisoned
 
     # -- epoch/step hooks ----------------------------------------------------
@@ -112,6 +119,8 @@ class ChaosInjector:
         the replay too).  Returns the seconds stalled."""
         if step in self.stall_steps and self.stall_seconds > 0:
             self.injected["stall"] += 1
+            TRACER.instant("chaos_injection", "runtime", kind="stall",
+                           step=step, seconds=self.stall_seconds)
             time.sleep(self.stall_seconds)
             return self.stall_seconds
         return 0.0
@@ -125,10 +134,14 @@ class ChaosInjector:
         if step in self.device_loss_steps and step not in self._fired:
             self._fired.add(step)
             self.injected["device"] += 1
+            TRACER.instant("chaos_injection", "runtime", kind="device",
+                           step=step)
             raise ChaosError(f"chaos: device lost during step {step}")
         if step in self.fail_steps and step not in self._fired:
             self._fired.add(step)
             self.injected["step"] += 1
+            TRACER.instant("chaos_injection", "runtime", kind="step",
+                           step=step)
             raise ChaosError(f"chaos: injected step fault at step {step}")
 
     # -- CLI spec ------------------------------------------------------------

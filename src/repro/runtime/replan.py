@@ -44,6 +44,7 @@ from repro.core import PlanCache
 from repro.core._exec_stats import EXEC_TELEMETRY
 from repro.core.autotune import _candidate_spec, autotune_variant, \
     decision_signature
+from repro.obs.spans import TRACER
 from repro.runtime.straggler import PlanSkewMonitor, SkewReport
 
 log = logging.getLogger("repro.replan")
@@ -99,7 +100,8 @@ class ReplanManager:
         self.error_tol = error_tol
         self.background = background
         self.monitor = monitor if monitor is not None else PlanSkewMonitor(
-            EXEC_TELEMETRY.ring(plan.signature.digest))
+            EXEC_TELEMETRY.ring(plan.signature.digest),
+            digest=plan.signature.digest)
         self.events: list[dict] = []
         self.replans_completed = 0
         self._lock = threading.Lock()
@@ -143,6 +145,9 @@ class ReplanManager:
             reason = {"kind": str(rep)}
         log.warning("re-plan triggered for %s: %s",
                     self._plan.signature.digest[:12], reason)
+        TRACER.instant("replan_trigger", "runtime",
+                       digest=self._plan.signature.digest,
+                       kind=reason.get("kind"))
         if self.background:
             self._thread = threading.Thread(
                 target=self._reautotune, args=(reason,), daemon=True,
@@ -160,9 +165,14 @@ class ReplanManager:
         old = self._plan
         annotate = {"replan": {**reason, "prev_variant": old.spec.variant}}
         try:
-            choice = reautotune(old, self.mesh, store=self.store,
-                                iters=self.iters, embeddable=self.embeddable,
-                                error_tol=self.error_tol, annotate=annotate)
+            with TRACER.span("replan_sandbox_sweep", "runtime",
+                             digest=old.signature.digest,
+                             kind=reason.get("kind")):
+                choice = reautotune(old, self.mesh, store=self.store,
+                                    iters=self.iters,
+                                    embeddable=self.embeddable,
+                                    error_tol=self.error_tol,
+                                    annotate=annotate)
             spec = _candidate_spec(old.spec, choice["variant"],
                                    choice.get("codec", "identity"))
         except Exception as err:  # noqa: BLE001 — a faulting autotuner must not kill the run
@@ -215,11 +225,18 @@ class ReplanManager:
             old=old.signature.digest, new=new_plan.signature.digest,
             reason=reason, variant_from=old.spec.variant,
             variant_to=new_plan.spec.variant)
+        TRACER.instant("plan_hot_swap", "runtime",
+                       old=old.signature.digest,
+                       new=new_plan.signature.digest,
+                       variant_from=old.spec.variant,
+                       variant_to=new_plan.spec.variant,
+                       kind=reason.get("kind"))
         self.events.append({"event": "swap",
                             "variant_from": old.spec.variant,
                             "variant_to": new_plan.spec.variant, **reason})
         self.monitor = self.monitor.clone_for(
-            EXEC_TELEMETRY.ring(new_plan.signature.digest))
+            EXEC_TELEMETRY.ring(new_plan.signature.digest),
+            digest=new_plan.signature.digest)
         log.warning("hot-swapped plan %s (%s) -> %s (%s)",
                     old.signature.digest[:12], old.spec.variant,
                     new_plan.signature.digest[:12], new_plan.spec.variant)

@@ -92,6 +92,12 @@ class SkewReport:
     baseline: float      # warmup-median baseline (seconds)
     ratio: float         # recent_mean / baseline
     windows_hot: int     # consecutive hot windows observed
+    # Per-rank attribution (from the (digest, rank) rank rings, when the
+    # driver feeds them): which rank is slowest and by how much over the
+    # across-rank median — the signal the hierarchy leader re-assignment
+    # item needs to know WHICH member of a group degraded.
+    worst_rank: "int | None" = None
+    worst_rank_ratio: "float | None" = None
 
 
 class PlanSkewMonitor:
@@ -112,7 +118,7 @@ class PlanSkewMonitor:
 
     def __init__(self, ring, threshold: float = 1.5, window: int = 8,
                  sustain: int = 3, warmup: int = 8, compute_ring=None,
-                 attribution: float = 1.0):
+                 attribution: float = 1.0, digest: "str | None" = None):
         self.ring = ring
         self.threshold = float(threshold)
         self.window = int(window)
@@ -120,6 +126,9 @@ class PlanSkewMonitor:
         self.warmup = int(warmup)
         self.compute_ring = compute_ring
         self.attribution = float(attribution)
+        # Plan digest for per-rank attribution: when set, a SkewReport
+        # names the slowest rank from the (digest, rank) rank rings.
+        self.digest = digest
         self.baseline: Optional[float] = None
         self._compute_baseline: Optional[float] = None
         # Samples recorded before this monitor existed (or before its last
@@ -129,14 +138,16 @@ class PlanSkewMonitor:
         self._cursor = self._origin
         self._hot = 0
 
-    def clone_for(self, ring, compute_ring=None) -> "PlanSkewMonitor":
+    def clone_for(self, ring, compute_ring=None,
+                  digest: "str | None" = None) -> "PlanSkewMonitor":
         """Fresh monitor with the same policy over a new plan's ring —
         used after a hot-swap so the new plan earns its own baseline."""
         return PlanSkewMonitor(ring, threshold=self.threshold,
                                window=self.window, sustain=self.sustain,
                                warmup=self.warmup,
                                compute_ring=compute_ring or self.compute_ring,
-                               attribution=self.attribution)
+                               attribution=self.attribution,
+                               digest=digest)
 
     def reset(self) -> None:
         self.baseline = None
@@ -178,9 +189,32 @@ class PlanSkewMonitor:
         ratio = float(recent.mean()) / self.baseline
         if not self._attributable(ratio):
             return None
+        worst_rank, worst_ratio = self.rank_attribution()
         return SkewReport(epoch=n, recent_mean=float(recent.mean()),
                           baseline=self.baseline, ratio=ratio,
-                          windows_hot=self._hot)
+                          windows_hot=self._hot,
+                          worst_rank=worst_rank,
+                          worst_rank_ratio=worst_ratio)
+
+    def rank_attribution(self) -> "tuple[int | None, float | None]":
+        """Slowest rank and its ratio over the across-rank median p50,
+        from the ``(digest, rank)`` rank rings — ``(None, None)`` when the
+        driver feeds no per-rank signal or fewer than two ranks have
+        samples.  Read-only over a telemetry snapshot: safe to call from
+        the observe path while the step loop records."""
+        if self.digest is None:
+            return None, None
+        from repro.core._exec_stats import EXEC_TELEMETRY
+        per_rank = {r: s["p50_s"]
+                    for r, s in EXEC_TELEMETRY.rank_summary(self.digest).items()
+                    if s.get("count")}
+        if len(per_rank) < 2:
+            return None, None
+        med = float(np.median(list(per_rank.values())))
+        worst = max(per_rank, key=per_rank.get)
+        if med <= 0.0:
+            return None, None
+        return int(worst), float(per_rank[worst] / med)
 
     def _attributable(self, plan_ratio: float) -> bool:
         """Blame the plan only when its slowdown outpaces compute's."""

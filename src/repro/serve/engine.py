@@ -18,6 +18,7 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from repro.launch import steps as steps_mod
 from repro.models import api as model_api
 from repro.models import transformer, whisper
+from repro.obs.spans import TRACER
 
 
 @dataclasses.dataclass
@@ -95,6 +96,9 @@ class ServeEngine:
                     self.params, jnp.asarray(prompts))
         jax.block_until_ready(logits)
         t_prefill = time.perf_counter() - t0
+        if TRACER.enabled:
+            TRACER.emit_span("prefill", "execute", t0, t0 + t_prefill,
+                             {"batch": self.batch, "prompt_len": prompt_len})
 
         # prefill caches were sized for the prompt; decode caches are sized
         # max_seq — copy the primed prefix in.
@@ -110,9 +114,23 @@ class ServeEngine:
                     self.params, caches, next_tok, jnp.int32(index + i))
                 out.append(np.asarray(next_tok))
         jax.block_until_ready(next_tok)
-        t_decode = (time.perf_counter() - t0) / max(n_tokens - 1, 1)
+        t1 = time.perf_counter()
+        t_decode = (t1 - t0) / max(n_tokens - 1, 1)
+        if TRACER.enabled:
+            TRACER.emit_span("decode", "execute", t0, t1,
+                             {"batch": self.batch, "tokens": n_tokens,
+                              "seconds_per_token": t_decode})
         tokens = np.concatenate(out, axis=1)
         return tokens, ServeStats(t_prefill, t_decode, tokens.size)
+
+    def metrics_text(self) -> str:
+        """Prometheus text snapshot of the process-global observability
+        state as seen from this engine: INIT counters (warm/cold, store
+        hit ratio for the plan store this replica warmed from), epoch
+        latency summaries for ``self.moe_plan``'s digest, and break-even
+        residuals.  The ``--metrics-port`` endpoint serves the same text."""
+        from repro.obs.metrics import render_metrics
+        return render_metrics()
 
     def _grow_caches(self, prefill_caches):
         """Pad prefill-sized caches out to the decode bundle's cache shapes."""

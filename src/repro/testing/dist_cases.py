@@ -1679,6 +1679,103 @@ def chaos_recovery():
                               "store": stats})
 
 
+@case
+def obs_trace_contract():
+    """The repro.obs acceptance contract, end to end on one traced run:
+    the exported Chrome trace validates and contains INIT spans (autotune
+    bursts, table bakes, store get/put), per-epoch EXECUTE spans, and the
+    replan-swap instant; a warm INIT traces with zero bake/burst children;
+    the per-rank rings feed PlanSkewMonitor's rank attribution; and a
+    break-even residual is computed against the stored Eq.1-3 fit."""
+    import tempfile
+
+    from repro.core import EXEC_TELEMETRY, INIT_STATS, PlanCache, alltoallv_init
+    from repro.core.autotune import _candidate_spec
+    from repro.launch.mesh import make_host_mesh
+    from repro.obs import (TRACER, check_breakeven, chrome_trace,
+                           render_metrics, validate_trace)
+    from repro.planstore import PlanStore
+    from repro.runtime import replan as replan_mod
+    from repro.runtime.straggler import PlanSkewMonitor
+
+    p = len(jax.devices())
+    counts, bufs, expect, rc, send_rows, recv_rows = _setup_pattern(p, seed=33)
+    mesh = make_host_mesh(p)
+    x = jax.device_put(jnp.asarray(bufs.reshape(p * send_rows, 4)),
+                       NamedSharding(mesh, P("x")))
+
+    EXEC_TELEMETRY.reset()
+    INIT_STATS.reset()
+    TRACER.enable()
+    try:
+        with tempfile.TemporaryDirectory() as d:
+            store, cache = PlanStore(d), PlanCache()
+            plan = alltoallv_init(counts, (4,), jnp.float32, mesh, axis="x",
+                                  variant="auto", cache=cache, store=store,
+                                  autotune_iters=4)
+            digest = plan.signature.digest
+            for _ in range(8):
+                got = np.asarray(plan.wait(plan.start(x)))
+            _check(got.reshape(p, recv_rows, 4), expect, rc, p)
+
+            # Per-rank signal: rank p-1 is the synthetic straggler.  The
+            # monitor's attribution must name it from the rank rings.
+            for _ in range(8):
+                plan.record_epoch_ranks(
+                    {r: 0.001 * (3.0 if r == p - 1 else 1.0)
+                     for r in range(p)})
+            mon = PlanSkewMonitor(plan.epoch_ring, digest=digest)
+            worst, ratio = mon.rank_attribution()
+            assert worst == p - 1, (worst, ratio)
+            assert ratio is not None and ratio > 2.0, ratio
+            assert set(plan.rank_summaries()) == set(range(p))
+
+            # Break-even residual against the fit the sweep stored.
+            residuals = check_breakeven()
+            assert any(r["digest"] == digest for r in residuals), residuals
+            r0 = next(r for r in residuals if r["digest"] == digest)
+            assert np.isfinite(r0["residual"]) and r0["epochs"] >= 8
+
+            # Operator-forced hot swap to the runner-up -> swap instant.
+            times = {v.partition("@")[0]: t
+                     for v, t in plan.auto_choice["times"].items()}
+            runner = min((v for v in times if v != plan.spec.variant),
+                         key=times.get)
+            mgr = replan_mod.ReplanManager(plan, mesh, cache, store=store)
+            alt = cache.get(_candidate_spec(plan.spec, runner), mesh,
+                            store=store)
+            assert mgr.force_swap(alt, reason="operator")
+
+            # Warm INIT against the now-populated store: its init span
+            # must carry warm=True and contain no bake/burst children —
+            # validate_trace enforces exactly that.
+            warm = alltoallv_init(counts, (4,), jnp.float32, mesh, axis="x",
+                                  variant="auto", cache=PlanCache(),
+                                  store=PlanStore(d), autotune_iters=4)
+            assert warm.warm_loaded
+
+        summary = validate_trace(
+            chrome_trace(),
+            expect_cats=("init", "init.bake", "init.autotune", "store",
+                         "execute", "runtime"))
+        assert summary["warm_inits"] >= 1, summary
+        assert summary["cold_inits"] >= 1, summary
+        by_cat = summary["by_cat"]
+        assert by_cat["execute"] >= 8, by_cat        # per-epoch spans
+        assert by_cat["runtime"] >= 1, by_cat        # the swap instant
+
+        text = render_metrics()
+        assert f'repro_breakeven_residual{{digest="{digest}"}}' in text
+        assert "repro_epoch_rank_seconds" in text
+        assert 'repro_store_requests_total{result="hit"}' in text
+    finally:
+        TRACER.disable()
+        TRACER.reset()
+    print("obs_trace_contract:", summary["by_cat"],
+          "residual:", round(r0["residual"], 3),
+          "worst_rank:", worst)
+
+
 def main():
     import argparse
     ap = argparse.ArgumentParser()

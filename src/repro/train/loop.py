@@ -20,6 +20,7 @@ from repro.ckpt.reshard import put_tree
 from repro.core._exec_stats import EXEC_TELEMETRY
 from repro.data.pipeline import DataPipeline
 from repro.models import api as model_api
+from repro.obs.spans import TRACER
 from repro.runtime.fault import RetryPolicy, run_with_recovery
 from repro.runtime.straggler import PlanSkewMonitor, StragglerDetector
 from repro.train import optimizer as opt_mod
@@ -44,6 +45,9 @@ class TrainerConfig:
     replan_at: Optional[int] = None
     replan_threshold: float = 1.75
     replan_iters: int = 4
+    # Per-rank epoch timing: probe each device shard's readiness after the
+    # step and feed the (digest, rank) rank rings (skew attribution).
+    rank_timing: bool = True
 
 
 class Trainer:
@@ -94,7 +98,8 @@ class Trainer:
         self._skew = PlanSkewMonitor(
             EXEC_TELEMETRY.ring(a2a.signature.digest),
             threshold=self.tcfg.replan_threshold,
-            window=4, sustain=2, warmup=4)
+            window=4, sustain=2, warmup=4,
+            digest=a2a.signature.digest)
 
     # -- state management ----------------------------------------------------
     def init_state(self) -> None:
@@ -138,13 +143,19 @@ class Trainer:
             # the straggler/skew monitors see them.
             self.chaos.step_hook(step)
         self.straggler.start()
+        t_step0 = time.perf_counter()
         # Resolve batch shardings under the bundle's rule profile (a
         # non-default profile, e.g. hier_ep, maps "batch" differently).
         with self.bundle.trace_context():
             batch = self.pipe.batch_at(step)
         self.params, self.opt_state, metrics = self.bundle.jitted(
             self.params, self.opt_state, batch, jnp.int32(step))
+        rank_seconds = self._probe_rank_times(metrics, t_step0)
         jax.block_until_ready(metrics)
+        t_step1 = time.perf_counter()
+        if TRACER.enabled:
+            TRACER.emit_span("train_step", "execute", t_step0, t_step1,
+                             {"step": step})
         report = self.straggler.stop(step)
         if report is not None:
             log.warning("straggler step %d: %.3fs (%.1fx EMA %.3fs)",
@@ -156,7 +167,13 @@ class Trainer:
             # cannot self-time; the step wall time is the epoch-level
             # signal the skew monitor watches (attribution to the exchange
             # vs compute is the monitor's job, not the recorder's).
-            a2a.record_epoch(self.straggler.last_seconds)
+            # Anchor the epoch span at t_step1: the straggler window opened
+            # before t_step0 and closed after it, so [t_end - seconds,
+            # t_end] then strictly contains the train_step span — proper
+            # nesting instead of spilling past it by the stop-to-here gap.
+            a2a.record_epoch(self.straggler.last_seconds, t_end=t_step1)
+            if rank_seconds:
+                a2a.record_epoch_ranks(rank_seconds)
         out = {k: float(v) for k, v in metrics.items()}
         self._maybe_replan(step)
         if (step + 1) % self.tcfg.ckpt_every == 0 or \
@@ -164,6 +181,29 @@ class Trainer:
                  and self.ckpt is not None):
             self._save(step + 1)
         return out
+
+    def _probe_rank_times(self, metrics, t0: float) -> "dict[int, float] | None":
+        """Per-rank step-completion probe for the rank rings.
+
+        Blocks on each addressable device shard of one metrics array in
+        turn, recording when each becomes ready relative to dispatch.  The
+        probe is a skyline: a shard that finished before an earlier one is
+        charged the earlier one's wait, so values are upper bounds — but a
+        straggling device still stands out, which is all the skew monitor's
+        rank attribution needs.  On a single-host CPU mesh the times are
+        near-uniform; the signal gets honest exactly where it matters
+        (real multi-device backends with async dispatch)."""
+        if not self.tcfg.rank_timing or self._backing_a2a() is None:
+            return None
+        try:
+            arr = next(iter(metrics.values()))
+            out: dict[int, float] = {}
+            for shard in arr.addressable_shards:
+                jax.block_until_ready(shard.data)
+                out[int(shard.device.id)] = time.perf_counter() - t0
+            return out
+        except (AttributeError, TypeError, StopIteration):
+            return None     # non-array metrics (tests with stub bundles)
 
     # -- online re-planning --------------------------------------------------
     def _maybe_replan(self, step: int) -> None:
@@ -188,6 +228,9 @@ class Trainer:
                       "ratio": skew.ratio, "baseline_s": skew.baseline}
         error_tol = getattr(self.cfg.moe, "codec_tol", None) \
             if getattr(self.cfg, "moe", None) is not None else None
+        TRACER.instant("replan_trigger", "runtime",
+                       digest=a2a.signature.digest, kind=reason["kind"],
+                       step=step)
         t0 = time.perf_counter()
         store = planstore.default_store()
         prev_variant = self.moe_plan.variant
@@ -222,6 +265,12 @@ class Trainer:
                     old=old_digest, new=new_a2a.signature.digest,
                     reason=reason, variant_from=prev_variant,
                     variant_to=self.moe_plan.variant)
+                TRACER.instant("plan_hot_swap", "runtime",
+                               old=old_digest,
+                               new=new_a2a.signature.digest,
+                               variant_from=prev_variant,
+                               variant_to=self.moe_plan.variant,
+                               kind=reason["kind"])
         elif self._skew is not None:
             self._skew.reset()   # incumbent confirmed: fresh baseline
         ev = {**reason, "variant_from": prev_variant,

@@ -142,3 +142,7 @@ def test_chaos_recovery(dist):
 
 def test_production_mesh_mini(dist):
     dist("production_mesh_mini", devices=8, timeout=1800)
+
+
+def test_obs_trace_contract(dist):
+    dist("obs_trace_contract", devices=8)
