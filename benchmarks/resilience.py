@@ -16,6 +16,13 @@ Rows:
   detect            epochs from injected-stall onset to the SkewReport
   replan_sandbox    one background re-measure (sandbox sweep, wall ms)
   post_replan       epoch time on the re-measured winner
+  leader_rebake     ladder rung 0: health-weighted re-election + schedule
+                    re-bake (what the swap install costs; must be >= 5x
+                    cheaper than replan_sandbox, the rung above it)
+  skew_degraded     hierarchy epoch under a 3x rank_slow on a carrying
+                    leader, round-robin leadership (no re-election)
+  skew_recovered    same injected skew on the re-elected schedule (the
+                    slow rank demoted to a carry-free role)
   recover_cold      device-loss rebuild, empty store (bake + publish)
   recover_warm      device-loss rebuild, store hit (the healing fast path)
 
@@ -161,6 +168,73 @@ def main(repeats=30, json_out=None, out="experiments/bench/resilience.csv"):
                 f"ms={replan_ms:.1f};winner={choice['variant']}")
         csv.row("resilience/post_replan", post_us,
                 f"vs_baseline={post_us / base_us:.2f}x")
+
+        # -- ladder rung 0: leader re-bake vs the sandbox sweep ----------
+        # The re-election is host-side numpy plus ONE hierarchy-schedule
+        # bake (no measurement bursts, no candidate compiles) — the whole
+        # point of sitting below the sandbox sweep on the ladder.
+        import dataclasses
+
+        from repro.launch.mesh import make_mesh
+        from repro.runtime import leader as leader_mod
+
+        hmesh = make_mesh((2, p // 2), ("outer", "inner"))
+        hplan = alltoallv_init(counts, (64,), jnp.float32, hmesh,
+                               axis=("outer", "inner"),
+                               variant="fence_hierarchy", cache=cache,
+                               store=store)
+        hx = jax.device_put(
+            jnp.zeros(hplan.global_send_shape, jnp.float32),
+            hplan._x_sharding)
+
+        def hepoch(pl):
+            jax.block_until_ready(pl.wait(pl.start(hx)))
+
+        def carrying(pl):
+            return {int(r) for rnd in pl.hier_schedule.round_perms
+                    for pair in rnd for r in pair}
+
+        slow = min(carrying(hplan))     # a round-robin leader
+        health = np.ones(p)
+        health[slow] = 3.0
+        t0 = time.perf_counter()
+        perm = leader_mod.choose_leader_perm(
+            hplan.send_counts, 2, p // 2, health, exclude=(slow,))
+        rplan = cache.get(
+            dataclasses.replace(hplan.spec, hier_leader_perm=perm),
+            hmesh, store=store)
+        rebake_ms = (time.perf_counter() - t0) * 1e3
+        csv.row("resilience/leader_rebake", rebake_ms * 1e3,
+                f"ms={rebake_ms:.2f};"
+                f"vs_sandbox={replan_ms / rebake_ms:.1f}x")
+        assert rebake_ms * 5 <= replan_ms, (
+            f"leader re-bake ({rebake_ms:.1f}ms) is not >=5x cheaper than "
+            f"the sandbox sweep ({replan_ms:.1f}ms)")
+
+        # -- recovered vs degraded epochs under the injected skew --------
+        hplan.record_starts = rplan.record_starts = False
+        inj2 = ChaosInjector(seed=0, rank_slow={slow: 3.0},
+                             rank_slow_weight=0.05)
+
+        def skewed_epoch_us(pl):
+            carriers = carrying(pl)
+            for _ in range(3):
+                hepoch(pl)
+            tot = 0.0
+            for i in range(iters):
+                te = time.perf_counter()
+                hepoch(pl)
+                work = time.perf_counter() - te
+                tot += work + inj2.maybe_rank_stall(i, carriers, work)
+            return tot / iters * 1e6
+
+        deg_us = skewed_epoch_us(hplan)     # slow rank leads group 0
+        rec_us = skewed_epoch_us(rplan)     # slow rank demoted
+        csv.row("resilience/skew_degraded", deg_us,
+                f"rank_slow={slow}:3.0;leader_perm=identity")
+        csv.row("resilience/skew_recovered", rec_us,
+                f"vs_degraded={deg_us / rec_us:.2f}x;"
+                f"leader_perm={'/'.join(''.join(map(str, r)) for r in perm)}")
 
         # -- device-loss rebuild: cold vs warm store ---------------------
         t_cold = t_warm = float("inf")

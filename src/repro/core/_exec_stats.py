@@ -166,6 +166,18 @@ class ExecTelemetry:
                      if k[0] == digest]
         return {rank: r.summary() for rank, r in sorted(items)}
 
+    def reset_rank_rings(self, digest: str) -> int:
+        """Drop the per-rank rings of one plan.  Called on plan hot-swap:
+        samples recorded under the old schedule (where the slow rank may
+        have carried leader slabs) must not blame that rank under the new
+        one — attribution after a swap restarts from fresh evidence.
+        Returns the number of rings dropped."""
+        with self._lock:
+            stale = [k for k in self.rank_rings if k[0] == digest]
+            for k in stale:
+                del self.rank_rings[k]
+        return len(stale)
+
     def reset(self) -> None:
         with self._lock:
             self.rings.clear()

@@ -89,6 +89,7 @@ def alltoallv_init(
     embeddable: bool = False,
     codec: str = "identity",
     error_tol: float | None = None,
+    hier_leader_perm: Sequence[Sequence[int]] | None = None,
 ) -> AlltoallvPlan:
     """Build (or fetch from cache) a persistent plan for a frozen pattern.
 
@@ -128,10 +129,12 @@ def alltoallv_init(
         wirecodec.require(codec, error_tol)   # unknown names / lossy opt-in
     if variant == "auto":
         # auto resolves to a measured concrete variant below; the spec needs
-        # a valid placeholder to pass construction.  fused+2-axis is only
-        # valid for the hierarchy, so that combination placeholds there.
+        # a valid placeholder to pass construction.  fused+2-axis (and a
+        # non-identity leader perm) are only valid for the hierarchy, so
+        # those combinations placehold there.
         placeholder = ("fence_hierarchy"
-                       if pack_impl == "fused" and len(axis_t) == 2
+                       if len(axis_t) == 2 and (pack_impl == "fused"
+                                                or hier_leader_perm)
                        else "fence")
     else:
         placeholder = variant
@@ -146,6 +149,7 @@ def alltoallv_init(
         pack_impl=pack_impl,
         baked_metadata=baked_metadata,
         codec=codec,
+        hier_leader_perm=hier_leader_perm,
     )
     if capturing_inits():
         # Everything a prewarm host needs to replay this INIT verbatim
@@ -167,6 +171,8 @@ def alltoallv_init(
             "codec": spec.codec,
             "error_tol": (float(error_tol) if error_tol is not None
                           else None),
+            "hier_leader_perm": ([list(r) for r in spec.hier_leader_perm]
+                                 if spec.hier_leader_perm else None),
         })
     resolved_store = _resolve_store(store)
     if variant == "auto":

@@ -287,4 +287,8 @@ def _candidate_spec(spec: AlltoallvSpec, variant: str,
         # hierarchy leader stage; other candidates use the pallas gather
         # (ragged bypasses pack entirely, but its spec must still validate).
         kw["pack_impl"] = "pallas"
+    if spec.hier_leader_perm is not None and variant != "fence_hierarchy":
+        # A leader permutation is a hierarchy-only dimension; flat
+        # candidates of the same pattern must not carry (or key on) it.
+        kw["hier_leader_perm"] = None
     return dataclasses.replace(spec, variant=variant, codec=codec, **kw)

@@ -309,6 +309,10 @@ class HierSchedule:
     s3_cap: int                       # stage-3 bucket capacity (rows)
     round_perms: tuple[tuple[tuple[int, int], ...], ...]  # per round, linearized
     cross_group_puts: int             # total inter-group messages per epoch
+    # leader_perm[o][role] = inner rank of group o playing leader ``role``.
+    # Identity reproduces the round-robin assignment above; a re-bake swaps
+    # a degraded rank out of the carrying roles without touching geometry.
+    leader_perm: tuple[tuple[int, ...], ...]
     # Per-rank gather tables, [P, width]; uploaded axis-sharded.
     s1_src: np.ndarray
     s1_valid: np.ndarray              # [P, p_inner * s1_cap]   from send buffer
@@ -332,11 +336,51 @@ def hier_offset(m: int, q: int, p_inner: int) -> int:
 
 def hier_leader_of(src_outer: int, dst_outer: int, p_outer: int,
                    p_inner: int) -> tuple[int, int]:
-    """(macro_round, inner_leader) that carries the (src -> dst) group slab."""
+    """(macro_round, leader_role) that carries the (src -> dst) group slab.
+
+    The second element is the leader *role*, not a physical inner rank: under
+    a non-identity ``leader_perm`` the rank playing role ``r`` in group ``o``
+    is ``leader_perm[o][r]``.  With the identity permutation (today's
+    round-robin) role and rank coincide.
+    """
     d = (dst_outer - src_outer) % p_outer
     if d == 0:
         raise ValueError("intra-group traffic has no inter-group leader")
     return (d - 1) // p_inner, (d - 1) % p_inner
+
+
+def identity_leader_perm(p_outer: int, p_inner: int) -> tuple[tuple[int, ...], ...]:
+    """The round-robin default: role ``r`` is played by inner rank ``r``."""
+    return tuple(tuple(range(p_inner)) for _ in range(p_outer))
+
+
+def normalize_leader_perm(
+    leader_perm, p_outer: int, p_inner: int
+) -> tuple[tuple[int, ...], ...]:
+    """Validate and canonicalize a per-group leader permutation.
+
+    ``leader_perm[o][role]`` names the inner rank of group ``o`` that plays
+    leader ``role``; every row must be a permutation of ``range(p_inner)``.
+    ``None`` means identity.
+    """
+    if leader_perm is None:
+        return identity_leader_perm(p_outer, p_inner)
+    perm = tuple(tuple(int(x) for x in row) for row in leader_perm)
+    if len(perm) != p_outer or any(len(row) != p_inner for row in perm):
+        raise ValueError(
+            f"leader_perm must be [{p_outer}][{p_inner}], got "
+            f"{[len(r) for r in perm] if perm else perm}")
+    for o, row in enumerate(perm):
+        if sorted(row) != list(range(p_inner)):
+            raise ValueError(
+                f"leader_perm[{o}]={row} is not a permutation of "
+                f"range({p_inner})")
+    return perm
+
+
+def leader_perm_is_identity(leader_perm) -> bool:
+    return leader_perm is None or all(
+        tuple(row) == tuple(range(len(row))) for row in leader_perm)
 
 
 def hier_two_stage_schedule(
@@ -345,17 +389,31 @@ def hier_two_stage_schedule(
     p_inner: int,
     recv_rows: int,
     tile_rows: int = TILE_ROWS,
+    leader_perm=None,
 ) -> HierSchedule:
     """Bake the full leader-combined schedule for a frozen pattern.
 
     Ranks are outer-major: global rank ``g = o * p_inner + q``.  Everything
     here is host-side numpy run once at INIT; the returned tables are the
     only per-rank state the epoch hot path touches.
+
+    ``leader_perm`` remaps which physical inner rank plays each leader role
+    per group (``leader_perm[o][role] -> inner rank``); ``None`` is the
+    round-robin identity and reproduces the historical schedule exactly.
+    Slab shapes, capacities, and ``cross_group_puts`` depend only on the
+    cross-group traffic matrix, so they are invariant under the permutation —
+    only *who* carries each slab changes.
     """
     c = _as_counts(send_counts)
     p = c.shape[0]
     if p != p_outer * p_inner:
         raise ValueError(f"{p} ranks != {p_outer} x {p_inner}")
+    perm = normalize_leader_perm(leader_perm, p_outer, p_inner)
+    # inv[o][rank] = role that inner rank plays in group o.
+    inv = [[0] * p_inner for _ in range(p_outer)]
+    for o, row in enumerate(perm):
+        for role, rank in enumerate(row):
+            inv[o][rank] = role
     sd = displacements(c)
     rc = recv_counts(c)
     rd = displacements(rc)
@@ -377,11 +435,13 @@ def hier_two_stage_schedule(
 
     # --- stage-1 bucket layout: sender (o, sq) -> leader (o, q') ----------
     # Rows in bucket order: for m, for ti: the c[(o,sq), (to(m,q'), ti)] rows.
+    # The inner all_to_all buckets are addressed by *physical* inner rank, so
+    # the bucket for rank qp carries the rows of whatever role qp plays.
     def s1_bucket_rows(g: int, qp: int) -> list[int]:
         o = g // p_inner
         rows: list[int] = []
         for m in range(n_macro):
-            d = valid_d(m, qp)
+            d = valid_d(m, inv[o][qp])
             if d is None:
                 continue
             to = (o + d) % p_outer
@@ -414,7 +474,7 @@ def hier_two_stage_schedule(
         o = g // p_inner
         off = 0
         for m in range(n_macro):
-            d = valid_d(m, qp)
+            d = valid_d(m, inv[o][qp])
             if d is None:
                 continue
             to = (o + d) % p_outer
@@ -439,7 +499,8 @@ def hier_two_stage_schedule(
                 if cross[o, to] == 0:
                     continue       # empty slab: dropped from the permutation
                 cap_m = max(cap_m, int(cross[o, to]))
-                perm_m.append((o * p_inner + q, to * p_inner + q))
+                perm_m.append((o * p_inner + perm[o][q],
+                               to * p_inner + perm[to][q]))
         s2_caps.append(0 if cap_m == 0 else
                        max(round_up(cap_m, tile_rows), tile_rows))
         round_perms.append(tuple(perm_m))
@@ -456,7 +517,7 @@ def hier_two_stage_schedule(
     for g in range(p):
         o, q = g // p_inner, g % p_inner
         for m in range(n_macro):
-            d = valid_d(m, q)
+            d = valid_d(m, inv[o][q])
             if d is None or s2_caps[m] == 0:
                 continue
             to = (o + d) % p_outer
@@ -493,7 +554,7 @@ def hier_two_stage_schedule(
         o, q = g // p_inner, g % p_inner
         rows: list[int] = []
         for m in range(n_macro):
-            d = valid_d(m, q)
+            d = valid_d(m, inv[o][q])
             if d is None or s2_caps[m] == 0:
                 continue
             so = (o - d) % p_outer
@@ -529,7 +590,7 @@ def hier_two_stage_schedule(
         o, q = g_leader // p_inner, g_leader % p_inner
         off = 0
         for m in range(n_macro):
-            d = valid_d(m, q)
+            d = valid_d(m, inv[o][q])
             if d is None or s2_caps[m] == 0:
                 continue
             so = (o - d) % p_outer
@@ -557,7 +618,8 @@ def hier_two_stage_schedule(
             if so == o:
                 q = sq                      # local rows ride their own rank's bucket
             else:
-                _, q = hier_leader_of(so, o, p_outer, p_inner)
+                _, role = hier_leader_of(so, o, p_outer, p_inner)
+                q = perm[o][role]           # physical rank playing that role
             base = q * s3_cap + s3_block_off(o * p_inner + q, ti, gs)
             out = int(rd[gr, gs])
             unpack_src[gr, out:out + n] = np.arange(base, base + n)
@@ -569,7 +631,7 @@ def hier_two_stage_schedule(
         s1_cap=s1_cap, s2_caps=tuple(int(x) for x in s2_caps),
         s2_offs=tuple(int(x) for x in s2_offs), total_s2=total_s2,
         s3_cap=s3_cap, round_perms=tuple(round_perms),
-        cross_group_puts=cross_group_puts,
+        cross_group_puts=cross_group_puts, leader_perm=perm,
         s1_src=s1_src, s1_valid=s1_valid, s2_src=s2_src, s2_valid=s2_valid,
         s3_src=s3_src, s3_valid=s3_valid,
         unpack_src=unpack_src, unpack_valid=unpack_valid)
@@ -597,6 +659,10 @@ class PatternSignature:
     # Wire codec, an explicit field for the same reason: a plan persisted
     # with an int8 wire must never warm-start an identity INIT.
     codec: str = "identity"
+    # Per-group leader permutation for the hierarchical variant; () means
+    # identity (round-robin).  Explicit so rebaked schedules never alias the
+    # round-robin artifact in the store.
+    hier_leader_perm: tuple[tuple[int, ...], ...] = ()
 
     @staticmethod
     def build(
@@ -612,6 +678,7 @@ class PatternSignature:
         baked_metadata: bool = True,
         axis_sizes: Sequence[int] = (),
         codec: str = "identity",
+        hier_leader_perm: Sequence[Sequence[int]] = (),
     ) -> "PatternSignature":
         # Every spec field that changes the compiled executable must land in
         # the digest: two specs differing only in lock_schedule / tile_rows /
@@ -637,6 +704,14 @@ class PatternSignature:
             # pre-codec era — an identity plan keys (and warm-starts)
             # exactly as before this dimension existed.
             h.update(("codec:" + codec).encode())
+        lp = tuple(tuple(int(x) for x in row) for row in hier_leader_perm)
+        if lp and not leader_perm_is_identity(lp):
+            # Same conditional rule as codec: only a non-identity leader
+            # permutation perturbs the digest, so round-robin plans keep
+            # their historical keys while rebaked schedules never alias.
+            h.update(("leader_perm:" + repr(lp)).encode())
+        else:
+            lp = ()
         return PatternSignature(
             digest=h.hexdigest()[:16],
             p=c.shape[0],
@@ -647,4 +722,5 @@ class PatternSignature:
             total_recv_bytes=int(c.sum()) * row_bytes,
             axis_sizes=tuple(int(s) for s in axis_sizes),
             codec=codec,
+            hier_leader_perm=lp,
         )

@@ -90,10 +90,27 @@ class AlltoallvSpec:
     pack_impl: str = "jnp"                # jnp | pallas | fused
     baked_metadata: bool = True           # False: seed-style in-graph maps (A/B)
     codec: str = "identity"               # wire codec (parallel.wirecodec)
+    # Per-group leader permutation for fence_hierarchy (leader.py re-bakes);
+    # None means identity (round-robin).  Canonicalized so identity specs
+    # key exactly as before this dimension existed.
+    hier_leader_perm: tuple[tuple[int, ...], ...] | None = None
 
     def __post_init__(self):
         if self.variant not in VARIANTS:
             raise ValueError(f"variant must be one of {VARIANTS}")
+        if self.hier_leader_perm is not None:
+            lp = tuple(tuple(int(x) for x in row)
+                       for row in self.hier_leader_perm)
+            for row in lp:
+                if sorted(row) != list(range(len(row))):
+                    raise ValueError(
+                        f"hier_leader_perm row {row} is not a permutation")
+            if md.leader_perm_is_identity(lp):
+                lp = None                 # identity keys as the perm-free era
+            elif self.variant != "fence_hierarchy":
+                raise ValueError("hier_leader_perm only applies to "
+                                 "variant='fence_hierarchy'")
+            object.__setattr__(self, "hier_leader_perm", lp)
         if self.codec not in wirecodec.CODECS:
             raise ValueError(f"unknown wire codec {self.codec!r}; "
                              f"have {sorted(wirecodec.CODECS)}")
@@ -187,6 +204,8 @@ class AlltoallvPlan:
         # --- leader-combined two-stage schedule (hierarchy only) ---
         if spec.variant == "fence_hierarchy":
             self.p_outer, self.p_inner = axis_sizes
+            want_perm = md.normalize_leader_perm(
+                spec.hier_leader_perm, self.p_outer, self.p_inner)
             warm_sched = getattr(warm, "hier_schedule", None)
             if warm_sched is not None:
                 if (warm_sched.p_outer != self.p_outer
@@ -197,6 +216,10 @@ class AlltoallvPlan:
                         f"{warm_sched.p_inner}, unpack {warm_sched.unpack_src.shape})"
                         f" does not fit plan ({self.p_outer}x{self.p_inner},"
                         f" recv_rows {self.recv_rows})")
+                if warm_sched.leader_perm != want_perm:
+                    raise WarmStartError(
+                        f"hier schedule leader_perm {warm_sched.leader_perm} "
+                        f"does not match requested {want_perm}")
                 self.hier_schedule = warm_sched
                 self.warm_loaded = True
             else:
@@ -205,7 +228,7 @@ class AlltoallvPlan:
                                  p=self.p, variant=spec.variant):
                     self.hier_schedule = md.hier_two_stage_schedule(
                         sc, self.p_outer, self.p_inner, self.recv_rows,
-                        spec.tile_rows)
+                        spec.tile_rows, leader_perm=want_perm)
             self.hierarchy_remote_needed = self.hier_schedule.remote_needed
             self.cross_group_puts = self.hier_schedule.cross_group_puts
         else:
@@ -220,7 +243,8 @@ class AlltoallvPlan:
             sc, spec.feature_shape, spec.dtype, spec.variant, spec.axis, row_bytes,
             lock_schedule=spec.lock_schedule, tile_rows=spec.tile_rows,
             pack_impl=spec.pack_impl, baked_metadata=spec.baked_metadata,
-            axis_sizes=axis_sizes, codec=spec.codec)
+            axis_sizes=axis_sizes, codec=spec.codec,
+            hier_leader_perm=spec.hier_leader_perm or ())
 
         # --- window (paper: reuse while total_recv_bytes unchanged) ---
         self._window_cache = window_cache if window_cache is not None else WindowCache()
@@ -788,7 +812,8 @@ class PlanCache:
             lock_schedule=spec.lock_schedule, tile_rows=spec.tile_rows,
             pack_impl=spec.pack_impl, baked_metadata=spec.baked_metadata,
             axis_sizes=tuple(mesh.shape[a] for a in spec.axis),
-            codec=spec.codec)
+            codec=spec.codec,
+            hier_leader_perm=spec.hier_leader_perm or ())
         plan = self._plans.get(sig)
         if plan is not None:
             self.hits += 1

@@ -108,6 +108,7 @@ def make_train_bundle(
     rules: Optional[dict] = None,
     fsdp_threshold_bytes: float = 3 * 2**30,
     grad_compression: bool = False,
+    hier_leader_perm=None,
 ) -> StepBundle:
     sched = sched or sched_mod.ScheduleConfig()
     adamw = adamw or opt_mod.AdamWConfig(
@@ -141,7 +142,8 @@ def make_train_bundle(
         batch_abs = model_api.batch_spec(cfg, shape.global_batch, shape.seq_len)
         batch_sh = _batch_shardings(cfg, mesh, batch_abs)
         moe_plan = model_api.build_moe_plan(
-            cfg, _moe_tokens_per_shard(cfg, shape, mesh), mesh)
+            cfg, _moe_tokens_per_shard(cfg, shape, mesh), mesh,
+            hier_leader_perm=hier_leader_perm)
 
         # Compressed DP gradient sync runs at TP-only sharding (every leaf
         # DP-replicated) so the int8 mean-reduce over the data axes sees
@@ -205,7 +207,8 @@ def make_train_bundle(
                                 "clip_norm": clip_norm, "n_micro": n_micro,
                                 "rules": rules,
                                 "fsdp_threshold_bytes": fsdp_threshold_bytes,
-                                "grad_compression": grad_compression}},
+                                "grad_compression": grad_compression,
+                                "hier_leader_perm": hier_leader_perm}},
     )
 
 

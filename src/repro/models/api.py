@@ -22,19 +22,23 @@ def init_model(key: Optional[jax.Array], cfg: ModelConfig,
 
 
 def build_moe_plan(cfg: ModelConfig, tokens_per_dp_shard: int, mesh,
-                   store=None):
+                   store=None, hier_leader_perm=None):
     """One plan-backed EP dispatch plan per (config geometry, mesh).
 
     This is the model-INIT half of the persistent MoE dispatch: the backing
     ``AlltoallvPlan`` is built (or warm-started from the plan ``store`` —
     None means the process default, i.e. the launchers' ``--plan-store``
-    flag) here, once, and every jitted step replays it."""
+    flag) here, once, and every jitted step replays it.
+    ``hier_leader_perm`` overrides the hierarchical exchange's per-group
+    leader assignment (``runtime.leader`` re-elections); None keeps the
+    round-robin default."""
     if cfg.moe is None:
         return None
     dtype = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
     return moe_mod.MoEDispatchPlan.build(
         cfg.moe, tokens_per_dp_shard, mesh,
-        d_model=cfg.d_model, dtype=dtype, store=store)
+        d_model=cfg.d_model, dtype=dtype, store=store,
+        hier_leader_perm=hier_leader_perm)
 
 
 def model_loss(params, cfg: ModelConfig, batch: dict, *,

@@ -172,7 +172,8 @@ class MoEDispatchPlan:
               d_model: int | None = None, dtype=None,
               plan_backed: bool = True, store=None, cache=None,
               pack_impl: str = "jnp", autotune_iters: int = 8,
-              overlap_chunks: int | None = None) -> "MoEDispatchPlan":
+              overlap_chunks: int | None = None,
+              hier_leader_perm=None) -> "MoEDispatchPlan":
         """Build the INIT-time dispatch plan for one layer geometry.
 
         The EP axis (or (outer, inner) pair) is derived from the active
@@ -229,6 +230,8 @@ class MoEDispatchPlan:
         variant = moe.a2a_variant
         if variant == "fence_hierarchy" and hier_axes is None:
             variant = "fence"          # no (outer, inner) pair to group over
+        if hier_axes is None:
+            hier_leader_perm = None    # leadership needs the grouped exchange
         # Lossy codecs are opt-in via an explicit tolerance, enforced here
         # for every dispatch impl (the fused path bypasses the generic
         # plan-level gate by handing the plan pre-encoded wire rows).
@@ -250,7 +253,8 @@ class MoEDispatchPlan:
                 counts, (wire_d,), wire_dt,
                 mesh, axis=axis, variant=variant, tile_rows=tile,
                 pack_impl=pack_impl, cache=cache, store=store,
-                autotune_iters=autotune_iters, embeddable=True)
+                autotune_iters=autotune_iters, embeddable=True,
+                hier_leader_perm=hier_leader_perm)
             variant = a2a.spec.variant   # "auto" resolved to the winner
         elif variant == "auto":
             if (moe.dispatch == "persistent_a2a" and axis is not None

@@ -75,6 +75,13 @@ def render_metrics(exec_snapshot: dict | None = None,
     out.append("# TYPE repro_plan_swaps_total counter")
     _line(out, "repro_plan_swaps_total", len(ex.get("swaps", [])))
 
+    rebakes = sum(1 for s in ex.get("swaps", [])
+                  if isinstance(s.get("reason"), dict)
+                  and s["reason"].get("kind") == "leader_rebake")
+    out.append("# HELP repro_leader_rebakes_total Hot-swaps installed by a leader re-election (ladder rung 0).")
+    out.append("# TYPE repro_leader_rebakes_total counter")
+    _line(out, "repro_leader_rebakes_total", rebakes)
+
     out.append("# HELP repro_epoch_seconds Per-plan epoch wall time over the retained ring window.")
     out.append("# TYPE repro_epoch_seconds summary")
     for digest, s in sorted(ex.get("plans", {}).items()):

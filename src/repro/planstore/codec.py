@@ -87,6 +87,7 @@ def dump(art: PlanArtifact, f: IO[bytes]) -> None:
             "round_perms": [[list(pair) for pair in pm]
                             for pm in sched.round_perms],
             "cross_group_puts": sched.cross_group_puts,
+            "leader_perm": [list(row) for row in sched.leader_perm],
         }
     arrays = _collect_arrays(art)
 
@@ -287,6 +288,8 @@ def _load_hier(segment, specs, h: dict) -> "md.HierSchedule":
                 tuple((int(a), int(b)) for a, b in pm)
                 for pm in h["round_perms"]),
             "cross_group_puts": int(h["cross_group_puts"]),
+            "leader_perm": md.normalize_leader_perm(
+                h.get("leader_perm"), int(h["p_outer"]), int(h["p_inner"])),
         }
     except (KeyError, TypeError, ValueError) as e:
         raise ArtifactError(f"bad hierarchy scalars: {e}") from e

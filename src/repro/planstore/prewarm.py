@@ -31,7 +31,8 @@ from typing import Iterable
 #: Record field order is irrelevant; this canonical form keys deduplication.
 _REQ_FIELDS = ("send_counts", "feature_shape", "dtype", "axis", "axis_sizes",
                "variant", "lock_schedule", "tile_rows", "pack_impl",
-               "baked_metadata", "embeddable", "codec", "error_tol")
+               "baked_metadata", "embeddable", "codec", "error_tol",
+               "hier_leader_perm")
 
 
 def request_key(req: dict) -> str:
@@ -133,6 +134,7 @@ def replay_request(req: dict, store, cache=None,
         embeddable=req.get("embeddable", False),
         codec=req.get("codec", "identity"),
         error_tol=req.get("error_tol"),
+        hier_leader_perm=req.get("hier_leader_perm"),
     )
     row = {"digest": plan.signature.digest,
            "variant": plan.spec.variant,

@@ -38,7 +38,11 @@ from repro.core import metadata as md
 # plan persisted under an int8 wire must never warm an identity INIT, and
 # vice versa.  Old v1 entries get a different store key and are clean
 # misses, never validation crashes.
-SCHEMA_VERSION = 2
+# v3: signature_meta + hier payload carry the leader permutation
+# (PatternSignature.hier_leader_perm / HierSchedule.leader_perm) — a
+# rebaked-leadership schedule must never warm a round-robin INIT or vice
+# versa.  Same upgrade rule: old entries become clean misses.
+SCHEMA_VERSION = 3
 
 
 class ArtifactError(Exception):
@@ -98,6 +102,7 @@ def signature_meta(sig: "md.PatternSignature") -> dict:
         "total_recv_bytes": sig.total_recv_bytes,
         "axis_sizes": [int(s) for s in sig.axis_sizes],
         "codec": sig.codec,
+        "hier_leader_perm": [list(row) for row in sig.hier_leader_perm],
     }
 
 

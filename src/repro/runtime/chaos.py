@@ -22,6 +22,14 @@ Fault kinds:
 * **step** / **device** — ``step_hook`` raises once per listed step
   (transient class, and device-loss class respectively); recovery replays
   the step, so firing is once-per-step-number, not once-per-visit.
+* **rank_slow** — a deterministic per-rank slowdown (``rank_slow=R:F``:
+  rank R runs F× slow from ``rank_slow_from`` on).  Two injection points
+  drive the leader re-election loop end to end: ``scale_rank_times``
+  inflates the slowed ranks' per-rank epoch samples (feeding skew
+  attribution), and ``maybe_rank_stall`` stalls the epoch by the slow
+  rank's share — the full ``(F-1)×base`` while the rank carries leader
+  slabs, only ``rank_slow_weight`` of that once demoted to a carry-free
+  role — so a successful re-bake measurably recovers the epoch p50.
 """
 
 from __future__ import annotations
@@ -72,17 +80,26 @@ class ChaosInjector:
                  fail_steps: Iterable[int] = (),
                  device_loss_steps: Iterable[int] = (),
                  stall_steps: Iterable[int] = (),
-                 stall_seconds: float = 0.0):
+                 stall_seconds: float = 0.0,
+                 rank_slow=(),
+                 rank_slow_from: int = 0,
+                 rank_slow_weight: float = 0.1):
         self.seed = int(seed)
         self.window_fail_rate = float(window_fail_rate)
         self.fail_steps = frozenset(int(s) for s in fail_steps)
         self.device_loss_steps = frozenset(int(s) for s in device_loss_steps)
         self.stall_steps = frozenset(int(s) for s in stall_steps)
         self.stall_seconds = float(stall_seconds)
+        # rank -> slowdown factor (>= 1.0), active from rank_slow_from on.
+        items = rank_slow.items() if hasattr(rank_slow, "items") else rank_slow
+        self.rank_slow = {int(r): float(f) for r, f in items}
+        self.rank_slow_from = int(rank_slow_from)
+        self.rank_slow_weight = float(rank_slow_weight)
         self._rng = random.Random(self.seed)
         self._fired: set[int] = set()
+        self._rank_slow_announced: set[int] = set()
         self.injected = {"window": 0, "poison": 0, "stall": 0,
-                         "step": 0, "device": 0}
+                         "step": 0, "device": 0, "rank_slow": 0}
 
     # -- window allocation ---------------------------------------------------
     def maybe_fail_window(self) -> None:
@@ -125,6 +142,61 @@ class ChaosInjector:
             return self.stall_seconds
         return 0.0
 
+    # -- per-rank slowdown ---------------------------------------------------
+    def rank_slow_factors(self, step: int) -> dict[int, float]:
+        """Active ``{rank: factor}`` slowdowns at ``step`` (empty before
+        ``rank_slow_from``)."""
+        if not self.rank_slow or step < self.rank_slow_from:
+            return {}
+        return dict(self.rank_slow)
+
+    def scale_rank_times(self, step: int, times) -> dict[int, float]:
+        """Inflate slowed ranks' per-rank epoch samples.  ``times`` is a
+        ``{rank: seconds}`` mapping (or pairs); returns a new dict with the
+        active factors applied — the attribution-side half of the fault,
+        feeding ``EXEC_TELEMETRY.record_rank`` so the skew monitor blames
+        the right rank."""
+        items = times.items() if hasattr(times, "items") else times
+        factors = self.rank_slow_factors(step)
+        return {int(r): float(t) * factors.get(int(r), 1.0)
+                for r, t in items}
+
+    def maybe_rank_stall(self, step: int, carrying_ranks, base_seconds: float,
+                         ) -> float:
+        """Stall the epoch by the slow ranks' share (really sleeps).
+
+        A slowed rank costs the epoch ``(factor-1) * base_seconds`` while it
+        sits in ``carrying_ranks`` (the set of ranks carrying leader slabs
+        under the live schedule), but only ``rank_slow_weight`` of that once
+        demoted to a carry-free role — member-stage work doesn't gate the
+        inter-group epoch.  ``carrying_ranks=None`` means every rank gates
+        the epoch (flat variants).  Returns the seconds stalled."""
+        factors = self.rank_slow_factors(step)
+        if not factors or base_seconds <= 0:
+            return 0.0
+        carrying = None if carrying_ranks is None \
+            else {int(r) for r in carrying_ranks}
+        extra = 0.0
+        for rank, factor in factors.items():
+            share = (factor - 1.0) * float(base_seconds)
+            if carrying is not None and rank not in carrying:
+                share *= self.rank_slow_weight
+            if share <= 0:
+                continue
+            extra = max(extra, share)
+            self.injected["rank_slow"] += 1
+            if rank not in self._rank_slow_announced:
+                # One instant per rank, not per epoch: the span ring is a
+                # fixed-size buffer and a per-epoch instant would evict the
+                # leader_rebake instant the chaos-smoke CI asserts on.
+                self._rank_slow_announced.add(rank)
+                TRACER.instant("chaos_injection", "runtime",
+                               kind="rank_slow", step=step, rank=rank,
+                               factor=factor)
+        if extra > 0:
+            time.sleep(extra)
+        return extra
+
     def step_hook(self, step: int) -> None:
         """Per-step injection point (call at the top of the step body, so
         raised faults are caught by ``run_with_recovery``).  Stalls fire
@@ -150,7 +222,8 @@ class ChaosInjector:
         """Build from a CLI spec: comma-separated ``k=v`` pairs, e.g.
         ``seed=7,window_fail=0.2,fail_step=6,device_loss_step=9,``
         ``stall_steps=3-5,stall_seconds=0.1`` (step lists accept ``a+b``
-        unions and ``a-b`` inclusive ranges)."""
+        unions and ``a-b`` inclusive ranges).  Per-rank slowdowns:
+        ``rank_slow=0:3.0+2:2.0,rank_slow_from=4,rank_slow_weight=0.05``."""
         kw: dict = {}
         for pair in filter(None, (p.strip() for p in spec.split(","))):
             k, _, v = pair.partition("=")
@@ -169,6 +242,20 @@ class ChaosInjector:
                 kw["stall_steps"] = _parse_steps(v)
             elif k == "stall_seconds":
                 kw["stall_seconds"] = float(v)
+            elif k == "rank_slow":
+                # R:F pairs, "+"-separated: rank_slow=0:3.0+2:2.0
+                pairs = []
+                for item in str(v).split("+"):
+                    r, _, f = item.partition(":")
+                    if not _:
+                        raise ValueError(
+                            f"rank_slow entry {item!r} is not R:F")
+                    pairs.append((int(r), float(f)))
+                kw["rank_slow"] = pairs
+            elif k == "rank_slow_from":
+                kw["rank_slow_from"] = int(v)
+            elif k == "rank_slow_weight":
+                kw["rank_slow_weight"] = float(v)
             else:
                 raise ValueError(f"unknown chaos knob {k!r}")
         return cls(**kw)

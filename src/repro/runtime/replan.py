@@ -7,19 +7,31 @@ INIT time.  Two things invalidate it mid-run:
 
 * **A degraded host.**  A slow NIC or thermally throttled chip perturbs
   exactly the fence/lock/hierarchy break-even the autotuner measured.
-  ``ReplanManager`` closes the loop: a ``PlanSkewMonitor`` watches the
-  plan's EXECUTE telemetry ring; sustained skew triggers
-  ``autotune_variant(force_measure=True)`` in a background thread —
-  measuring in a *sandbox* ``PlanCache`` with its own ``WindowCache``, so
-  the sweep never donates the live plan's window out from under an
-  in-flight epoch — and the fresh verdict is hot-swapped in between
-  epochs: the manager's ``plan`` flips atomically under a lock, the old
-  plan's window slots are released (``free()``), the swap is logged to
-  ``EXEC_TELEMETRY``, and the re-measured decision is CAS-merged into the
-  plan store (``put_auto``) with re-plan provenance — one replica's
-  degradation teaches the fleet.  If the autotuner *itself* faults
-  mid-re-plan, the manager degrades to the paper's safe default
-  (``fence``) rather than keep a stale auto decision.
+  ``ReplanManager`` closes the loop with a graceful-degradation *ladder*,
+  one rung per sustained-skew trigger:
+
+  0. **Leader re-bake** (hierarchy plans with a blamed rank): re-elect the
+     per-group leaders around the slow rank (``runtime.leader``'s
+     health-weighted cost model), re-bake the two-stage schedule with the
+     new permutation, and hot-swap it in.  Pure host work — one schedule
+     bake, zero measurement bursts — so it is far cheaper than a sweep.
+  1. **Re-autotune**: ``autotune_variant(force_measure=True)`` in a
+     background thread, measuring in a *sandbox* ``PlanCache`` with its
+     own ``WindowCache`` so the sweep never donates the live plan's
+     window out from under an in-flight epoch.
+  2. **Degrade-to-fence**: stop tuning and install the paper's safe
+     default.
+
+  Every rung hot-swaps between epochs: the manager's ``plan`` flips
+  atomically under a lock, the old plan's window slots are released
+  (``free()``), the swap is logged to ``EXEC_TELEMETRY``, and the verdict
+  (or re-election provenance) is CAS-merged into the plan store
+  (``put_auto``) — one replica's degradation teaches the fleet.  After a
+  swap the manager compares the new plan's earned baseline against the
+  pre-skew one: recovery re-arms the ladder at rung 0, a still-degraded
+  baseline escalates to the next rung.  If the autotuner *itself* faults
+  mid-re-plan, the manager degrades to ``fence`` rather than keep a stale
+  auto decision.
 
 * **A changed mesh.**  Losing (or gaining) a pod invalidates every plan's
   geometry outright.  ``reshard_plans`` replays the INIT requests captured
@@ -34,6 +46,7 @@ INIT time.  Two things invalidate it mid-run:
 
 from __future__ import annotations
 
+import dataclasses
 import logging
 import threading
 from typing import Optional
@@ -45,6 +58,7 @@ from repro.core._exec_stats import EXEC_TELEMETRY
 from repro.core.autotune import _candidate_spec, autotune_variant, \
     decision_signature
 from repro.obs.spans import TRACER
+from repro.runtime import leader as leader_mod
 from repro.runtime.straggler import PlanSkewMonitor, SkewReport
 
 log = logging.getLogger("repro.replan")
@@ -104,9 +118,16 @@ class ReplanManager:
             digest=plan.signature.digest)
         self.events: list[dict] = []
         self.replans_completed = 0
+        self.leader_rebakes = 0
         self._lock = threading.Lock()
         self._thread: Optional[threading.Thread] = None
         self._pending: Optional[tuple] = None   # (new_plan, reason)
+        # Escalation ladder position: 0 = leader re-bake, 1 = re-autotune,
+        # 2 = degrade-to-fence, 3 = exhausted.  Advanced per trigger,
+        # re-armed to 0 when a swap's earned baseline shows recovery.
+        self._ladder_stage = 0
+        # Pre-skew baseline to judge the next swap's recovery against.
+        self._expect_baseline: Optional[float] = None
 
     @property
     def plan(self):
@@ -128,39 +149,195 @@ class ReplanManager:
         rep = self.monitor.observe()
         if rep is not None:
             self.trigger(rep)
+            return False
+        if self._expect_baseline is not None \
+                and self.monitor.baseline is not None:
+            # The post-swap plan has earned its own baseline: judge the
+            # swap against the pre-skew one.  Recovery re-arms the ladder
+            # at the cheapest rung; a still-degraded baseline escalates —
+            # the cloned monitor alone cannot, since it normalizes to the
+            # degraded level it baselined on.
+            expect, self._expect_baseline = self._expect_baseline, None
+            post = self.monitor.baseline
+            if expect > 0 and post > self.monitor.threshold * expect:
+                self.trigger({"kind": "unrecovered",
+                              "baseline_s": expect,
+                              "post_swap_baseline_s": post,
+                              "ratio": post / expect})
+            else:
+                self._ladder_stage = 0
+                self.events.append({"event": "recovered",
+                                    "baseline_s": expect,
+                                    "post_swap_baseline_s": post})
         return False
 
     def trigger(self, rep: "SkewReport | dict | str") -> None:
-        """Kick off a re-measure (monitor-triggered or operator-forced)."""
+        """Advance the ladder one rung (monitor-triggered or forced).
+
+        Rung 0 — leader re-bake — only engages for a hierarchy plan whose
+        skew names a ``worst_rank`` and whose re-election would actually
+        lower the modeled bottleneck; otherwise the trigger falls through
+        to the re-autotune rung immediately.  Past the fence rung, triggers
+        only re-baseline the monitor (we're already on the safe default).
+        """
         if self._thread is not None or self._pending is not None:
             return                      # one re-plan in flight at a time
         if isinstance(rep, SkewReport):
             reason = {"kind": "sustained_skew", "ratio": rep.ratio,
                       "baseline_s": rep.baseline,
                       "recent_mean_s": rep.recent_mean,
-                      "windows_hot": rep.windows_hot, "epoch": rep.epoch}
+                      "windows_hot": rep.windows_hot, "epoch": rep.epoch,
+                      "worst_rank": rep.worst_rank,
+                      "worst_rank_ratio": rep.worst_rank_ratio}
         elif isinstance(rep, dict):
             reason = rep
         else:
             reason = {"kind": str(rep)}
-        log.warning("re-plan triggered for %s: %s",
-                    self._plan.signature.digest[:12], reason)
+        stage = self._ladder_stage
+        log.warning("re-plan triggered for %s (ladder rung %d): %s",
+                    self._plan.signature.digest[:12], stage, reason)
         TRACER.instant("replan_trigger", "runtime",
                        digest=self._plan.signature.digest,
-                       kind=reason.get("kind"))
-        if self.background:
-            self._thread = threading.Thread(
-                target=self._reautotune, args=(reason,), daemon=True,
-                name="repro-replan")
-            self._thread.start()
-        else:
-            self._reautotune(reason)
+                       kind=reason.get("kind"), stage=stage)
+        if stage == 0:
+            self._ladder_stage = 1
+            perm = self._rebake_perm(reason)
+            if perm is not None:
+                self._run(self._leader_rebake, reason, perm)
+                return
+            stage = 1   # ineligible: fall through to the sweep now
+        if stage == 1:
+            self._ladder_stage = 2
+            self._run(self._reautotune, reason)
+            return
+        if stage == 2:
+            self._ladder_stage = 3
+            self._run(self._degrade_fence, reason)
+            return
+        # Exhausted: already on the safe default.  Re-baseline so the
+        # monitor stops re-firing every window on the degraded world.
+        self.events.append({"event": "ladder_exhausted", **reason})
+        self.monitor.reset()
 
     def force_swap(self, new_plan, reason: str = "forced") -> bool:
         """Install ``new_plan`` immediately (operator-forced swap)."""
         return self._install(new_plan, {"kind": reason})
 
+    def close(self) -> None:
+        """Shutdown path: join an in-flight background re-plan and free a
+        pending-but-never-installed plan's window slots.  Without it, a
+        re-plan landing after the last ``observe()`` leaks the new plan's
+        window for the rest of the process.  Idempotent.  The live plan is
+        NOT freed — its owner (trainer / bundle) controls its lifetime."""
+        t = self._thread
+        if t is not None:
+            t.join()
+            self._thread = None
+        pend, self._pending = self._pending, None
+        if pend is not None:
+            new_plan = pend[0]
+            if new_plan is not None and new_plan is not self._plan:
+                new_plan.free()
+
     # -- internals -----------------------------------------------------------
+    def _run(self, fn, *args) -> None:
+        if self.background:
+            self._thread = threading.Thread(target=fn, args=args,
+                                            daemon=True, name="repro-replan")
+            self._thread.start()
+        else:
+            fn(*args)
+
+    def _rebake_perm(self, reason: dict):
+        """Rung-0 eligibility: a health-weighted leader permutation that
+        would actually lower the modeled bottleneck, or None.
+
+        Host-side numpy over telemetry summaries — cheap enough to run
+        inline in ``trigger`` before any thread is spawned."""
+        old = self._plan
+        worst = reason.get("worst_rank")
+        if old.spec.variant != "fence_hierarchy" or worst is None:
+            return None
+        health = leader_mod.rank_health(old.signature.digest, old.p)
+        perm = leader_mod.choose_leader_perm(
+            old.send_counts, old.p_outer, old.p_inner, health,
+            exclude=(int(worst),))
+        if perm == old.hier_schedule.leader_perm:
+            return None                 # nothing to demote: escalate
+        cur_cost = leader_mod.permutation_cost(
+            old.send_counts, old.p_outer, old.p_inner,
+            old.hier_schedule.leader_perm, health)
+        new_cost = leader_mod.permutation_cost(
+            old.send_counts, old.p_outer, old.p_inner, perm, health)
+        if new_cost >= cur_cost:
+            return None                 # the model says it cannot help
+        return perm
+
+    def _leader_rebake(self, reason: dict, perm) -> None:
+        """Rung 0: re-elect leaders around the blamed rank and re-bake the
+        two-stage schedule.  One host-side schedule bake plus a compile —
+        zero measurement bursts, zero index-table bakes beyond the
+        hierarchy schedule itself — which is why it sits below the full
+        sandbox sweep on the ladder."""
+        old = self._plan
+        spec = dataclasses.replace(old.spec, hier_leader_perm=perm)
+        with TRACER.span("leader_rebake_bake", "runtime",
+                         digest=old.signature.digest,
+                         worst_rank=reason.get("worst_rank")):
+            new_plan = self.cache.get(spec, self.mesh, store=self.store)
+        self.leader_rebakes += 1
+        TRACER.instant("leader_rebake", "runtime",
+                       old=old.signature.digest,
+                       new=new_plan.signature.digest,
+                       worst_rank=reason.get("worst_rank"),
+                       leader_perm=[list(r) for r in perm])
+        # Fleet provenance: merge the re-election into the pattern's
+        # decision entry.  put_auto is a CAS conditional put, so a
+        # concurrent publish from another replica is merged with, never
+        # clobbered.  Keyed on the perm-free spec: the decision "use this
+        # leadership for this pattern" belongs to the pattern, not to one
+        # permutation's plan entry.
+        base = dataclasses.replace(old.spec, hier_leader_perm=None)
+        sig = decision_signature(base, self.mesh, embeddable=self.embeddable,
+                                 error_tol=self.error_tol)
+        choice = dict(getattr(old, "auto_choice", None)
+                      or {"variant": old.spec.variant})
+        choice["leader_rebake"] = {
+            **reason, "kind": "leader_rebake",
+            "prev_digest": old.signature.digest,
+            "new_digest": new_plan.signature.digest,
+            "leader_perm": [list(r) for r in perm]}
+        self.cache.auto_choices[sig] = choice
+        if self.store is not None:
+            try:
+                self.store.put_auto(sig, choice)
+            except OSError:
+                pass
+        self._pending = (new_plan, {**reason, "kind": "leader_rebake",
+                                    "leader_perm": [list(r) for r in perm]})
+
+    def _degrade_fence(self, reason: dict) -> None:
+        """Final rung: stop tuning, install the paper's safe default."""
+        old = self._plan
+        choice = {"variant": "fence", "codec": "identity",
+                  "degraded": "ladder",
+                  "replan": {**reason, "prev_variant": old.spec.variant}}
+        spec = _candidate_spec(old.spec, "fence", "identity")
+        sig = decision_signature(
+            dataclasses.replace(old.spec, hier_leader_perm=None), self.mesh,
+            embeddable=self.embeddable, error_tol=self.error_tol)
+        self.cache.auto_choices[sig] = choice
+        if self.store is not None:
+            try:
+                self.store.put_auto(sig, choice)
+            except OSError:
+                pass
+        new_plan = self.cache.get(spec, self.mesh, store=self.store)
+        TRACER.instant("degrade_fence", "runtime",
+                       old=old.signature.digest,
+                       new=new_plan.signature.digest)
+        self._pending = (new_plan, {**reason, "kind": "degrade_fence"})
+
     def _reautotune(self, reason: dict) -> None:
         old = self._plan
         annotate = {"replan": {**reason, "prev_variant": old.spec.variant}}
@@ -218,9 +395,18 @@ class ReplanManager:
                 # trigger — sustained_skew / forced / operator.
                 self.events.append({"event": "confirmed", **reason})
                 self.monitor.reset()
+                # A confirmed incumbent under real skew still needs the
+                # recovery check: if the fresh baseline stays degraded,
+                # escalate rather than normalize to it.
+                self._expect_baseline = reason.get("baseline_s")
                 return False
             self._plan = new_plan
         old.free()   # window slots back to the cache; executable dropped
+        # Re-anchor the incoming plan's per-rank rings: samples recorded
+        # under a previous tenure of this schedule (e.g. swapping back to
+        # the round-robin digest) must not blame a rank for slab work it
+        # no longer carries.
+        EXEC_TELEMETRY.reset_rank_rings(new_plan.signature.digest)
         EXEC_TELEMETRY.record_swap(
             old=old.signature.digest, new=new_plan.signature.digest,
             reason=reason, variant_from=old.spec.variant,
@@ -237,6 +423,7 @@ class ReplanManager:
         self.monitor = self.monitor.clone_for(
             EXEC_TELEMETRY.ring(new_plan.signature.digest),
             digest=new_plan.signature.digest)
+        self._expect_baseline = reason.get("baseline_s")
         log.warning("hot-swapped plan %s (%s) -> %s (%s)",
                     old.signature.digest[:12], old.spec.variant,
                     new_plan.signature.digest[:12], new_plan.spec.variant)

@@ -1477,6 +1477,132 @@ def replan_hot_swap():
 
 
 @case
+def leader_rebake_recovery():
+    """Skew-adaptive leader re-election, end to end: a deterministic 3x
+    single-rank slowdown (chaos ``rank_slow``) on a carrying leader trips
+    the skew monitor, whose rank attribution names the slow rank; ladder
+    rung 0 re-elects leaders around it — one hierarchy-schedule re-bake,
+    zero autotune bursts, zero index-table bakes beyond it — the demoted
+    rank leaves the carrying set, every epoch (before, across, and after
+    the hot swap) stays bit-identical to the dense oracle, and the
+    post-rebake steady p50 recovers to within 15% of the pre-injection
+    baseline.  The old plan's window slots are freed, the new digest's
+    rank rings are re-anchored, and the recovered baseline re-arms the
+    ladder at rung 0."""
+    import time
+
+    from repro.core import EXEC_TELEMETRY, INIT_STATS, PlanCache, alltoallv_init
+    from repro.runtime import chaos as chaos_mod
+    from repro.runtime import replan as replan_mod
+    from repro.launch.mesh import make_mesh
+    from repro.runtime.straggler import PlanSkewMonitor
+
+    p = len(jax.devices())
+    assert p % 4 == 0, "needs a (2, p//2) grouped mesh"
+    mesh = make_mesh((2, p // 2), ("outer", "inner"))
+    counts, bufs, expect, rc, send_rows, recv_rows = _setup_pattern(p, seed=11)
+    x = jax.device_put(jnp.asarray(bufs.reshape(p * send_rows, 4)),
+                       NamedSharding(mesh, P(("outer", "inner"))))
+
+    EXEC_TELEMETRY.reset()
+    cache = PlanCache()
+    plan = alltoallv_init(counts, (4,), jnp.float32, mesh,
+                          axis=("outer", "inner"), variant="fence_hierarchy",
+                          cache=cache)
+    base = np.asarray(plan.wait(plan.start(x))).reshape(p, recv_rows, 4)
+    _check(base, expect, rc, p)
+    bursts0, bakes0 = INIT_STATS.autotune_bursts, INIT_STATS.table_bakes
+
+    def carrying(pl):
+        return {int(r) for rnd in pl.hier_schedule.round_perms
+                for pair in rnd for r in pair}
+
+    slow = min(carrying(plan))          # a round-robin leader (group 0, role 0)
+    # Injection starts the epoch after the monitor's warmup baseline is
+    # earned, so the baseline is clean and every post-warmup window is hot.
+    inj = chaos_mod.ChaosInjector(seed=0, rank_slow={slow: 3.0},
+                                  rank_slow_from=6, rank_slow_weight=0.05)
+    monitor = PlanSkewMonitor(EXEC_TELEMETRY.ring(plan.signature.digest),
+                              threshold=1.6, window=4, sustain=2, warmup=6,
+                              digest=plan.signature.digest)
+    mgr = replan_mod.ReplanManager(plan, mesh, cache, monitor=monitor,
+                                   background=False)
+
+    def run_epoch(e):
+        """One driver-timed epoch: exchange, chaos stall, telemetry feed."""
+        cur = mgr.plan
+        cur.record_starts = False       # the driver times whole epochs
+        t0 = time.perf_counter()
+        got = np.asarray(cur.wait(cur.start(x))).reshape(p, recv_rows, 4)
+        work = time.perf_counter() - t0
+        extra = inj.maybe_rank_stall(e, carrying(cur), work)
+        cur.record_epoch(work + extra)
+        # Per-rank signal: uniform shard times, chaos-inflated on the slow
+        # rank — exactly what the trainer's shard probe would observe.
+        for r, t in inj.scale_rank_times(
+                e, {r: work for r in range(p)}).items():
+            EXEC_TELEMETRY.record_rank(cur.signature.digest, r, t)
+        np.testing.assert_array_equal(got, base)   # bit-identical always
+        return work + extra
+
+    pre_p50 = None
+    deadline = time.time() + 300
+    for e in range(10_000):
+        run_epoch(e)
+        if e == 5:    # last clean epoch: the pre-injection baseline
+            pre_p50 = EXEC_TELEMETRY.ring(
+                plan.signature.digest).summary()["p50_s"]
+        mgr.observe()
+        if mgr.replans_completed >= 1:
+            break
+        assert time.time() < deadline, "leader re-bake never installed"
+    assert inj.injected["rank_slow"] > 0 and pre_p50 is not None
+
+    # Rung 0 and nothing above it: a leader re-bake, not a sweep.
+    assert mgr.leader_rebakes == 1
+    ev = mgr.events[-1]
+    assert ev["event"] == "swap" and ev["kind"] == "leader_rebake"
+    assert ev["worst_rank"] == slow, ev
+    new = mgr.plan
+    assert new.spec.variant == "fence_hierarchy"
+    assert new.spec.hier_leader_perm is not None
+    assert slow not in carrying(new), "slow rank still carries slabs"
+    assert INIT_STATS.autotune_bursts == bursts0, "re-bake ran a sweep"
+    assert INIT_STATS.table_bakes == bakes0 + 1, \
+        "re-bake re-baked more than the hierarchy schedule"
+    # Old plan released; incoming digest's rank rings re-anchored.
+    assert len(plan.window._slots) == 0, "old plan's window slots leaked"
+    assert plan._compiled is None
+    assert EXEC_TELEMETRY.rank_summary(new.signature.digest) == {}
+    swap = EXEC_TELEMETRY.swaps[-1]
+    assert swap["reason"]["kind"] == "leader_rebake"
+    assert swap["new"] == new.signature.digest
+
+    # Steady state on the re-elected schedule: the slow host still exists
+    # but no longer gates the epoch.  Skip the first post-swap epochs (the
+    # new executable's compile) before sampling.
+    steady = []
+    e0 = e + 1
+    for e2 in range(e0, e0 + 14):
+        dt = run_epoch(e2)
+        if e2 >= e0 + 3:
+            steady.append(dt)
+        mgr.observe()
+    post_p50 = float(np.median(steady))
+    assert post_p50 <= 1.15 * pre_p50, \
+        f"post-rebake p50 {post_p50:.6f}s vs baseline {pre_p50:.6f}s"
+    # The earned baseline shows recovery: the ladder re-arms at rung 0.
+    assert any(ev["event"] == "recovered" for ev in mgr.events), mgr.events
+    assert mgr._ladder_stage == 0
+    mgr.close()                         # teardown: idempotent, leak-free
+    mgr.close()
+    print("leader_rebake_recovery: slow rank", slow, "->",
+          [list(r) for r in new.spec.hier_leader_perm],
+          f"p50 {pre_p50 * 1e3:.2f}ms -> {post_p50 * 1e3:.2f}ms,",
+          "events:", [ev["event"] for ev in mgr.events])
+
+
+@case
 def elastic_resume():
     """Elastic-mesh resume, end to end: INIT requests captured on the full
     mesh are resharded onto a shrunk mesh (reshard_plans publishes the new

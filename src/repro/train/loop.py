@@ -151,6 +151,17 @@ class Trainer:
         self.params, self.opt_state, metrics = self.bundle.jitted(
             self.params, self.opt_state, batch, jnp.int32(step))
         rank_seconds = self._probe_rank_times(metrics, t_step0)
+        if self.chaos is not None and rank_seconds:
+            # rank_slow, attribution side: inflate the slowed ranks' samples
+            # so the skew monitor blames the right rank.
+            rank_seconds = self.chaos.scale_rank_times(step, rank_seconds)
+        if self.chaos is not None:
+            # rank_slow, wall-time side: stall by the slow ranks' share of
+            # the work done so far this step (pre-stall, so no feedback
+            # loop through the EMA) — the full factor while a slowed rank
+            # carries leader slabs, the member share once demoted.
+            self.chaos.maybe_rank_stall(step, self._carrying_ranks(),
+                                        time.perf_counter() - t_step0)
         jax.block_until_ready(metrics)
         t_step1 = time.perf_counter()
         if TRACER.enabled:
@@ -205,6 +216,17 @@ class Trainer:
         except (AttributeError, TypeError, StopIteration):
             return None     # non-array metrics (tests with stub bundles)
 
+    def _carrying_ranks(self) -> "set[int] | None":
+        """Ranks carrying inter-group leader slabs under the live hierarchy
+        schedule (src or dst of any stage-2 put).  None means every rank
+        gates the epoch — flat variants, or no plan-backed dispatch."""
+        a2a = self._backing_a2a()
+        sched = getattr(a2a, "hier_schedule", None) if a2a is not None else None
+        if sched is None:
+            return None
+        return {int(r) for rnd in sched.round_perms
+                for pair in rnd for r in pair}
+
     # -- online re-planning --------------------------------------------------
     def _maybe_replan(self, step: int) -> None:
         a2a = self._backing_a2a()
@@ -216,6 +238,8 @@ class Trainer:
                               for ev in self.replan_events))
         skew = self._skew.observe() if self._skew is not None else None
         if not forced and skew is None:
+            return
+        if not forced and self._try_leader_rebake(step, skew):
             return
         from repro import planstore
         from repro.core import global_plan_cache
@@ -260,7 +284,8 @@ class Trainer:
             swapped = new_a2a is not None and \
                 new_a2a.signature.digest != old_digest
             if swapped:
-                a2a.free()
+                # _rebuild_bundle already freed the old plan and re-anchored
+                # the incoming plan's rank rings.
                 EXEC_TELEMETRY.record_swap(
                     old=old_digest, new=new_a2a.signature.digest,
                     reason=reason, variant_from=prev_variant,
@@ -281,19 +306,95 @@ class Trainer:
                     step, prev_variant, choice["variant"], swapped,
                     ev["seconds"])
 
+    def _try_leader_rebake(self, step: int, skew) -> bool:
+        """Ladder rung 0: demote the blamed rank out of leadership.
+
+        Hierarchy plans with a ``worst_rank`` attribution get a cheap
+        health-weighted leader re-election first (``runtime.leader``):
+        host-side schedule bake + recompile, zero measurement bursts.  The
+        full sandbox re-autotune only runs when re-election is ineligible
+        or the cost model says it cannot lower the bottleneck."""
+        a2a = self._backing_a2a()
+        worst = getattr(skew, "worst_rank", None)
+        if a2a is None or a2a.spec.variant != "fence_hierarchy" \
+                or worst is None:
+            return False
+        from repro.runtime import leader as leader_mod
+        health = leader_mod.rank_health(a2a.signature.digest, a2a.p)
+        perm = leader_mod.choose_leader_perm(
+            a2a.send_counts, a2a.p_outer, a2a.p_inner, health,
+            exclude=(int(worst),))
+        if perm == a2a.hier_schedule.leader_perm:
+            return False
+        cur_cost = leader_mod.permutation_cost(
+            a2a.send_counts, a2a.p_outer, a2a.p_inner,
+            a2a.hier_schedule.leader_perm, health)
+        new_cost = leader_mod.permutation_cost(
+            a2a.send_counts, a2a.p_outer, a2a.p_inner, perm, health)
+        if new_cost >= cur_cost:
+            return False
+        reason = {"kind": "leader_rebake", "step": step,
+                  "ratio": skew.ratio, "baseline_s": skew.baseline,
+                  "worst_rank": int(worst),
+                  "worst_rank_ratio": skew.worst_rank_ratio}
+        t0 = time.perf_counter()
+        old_digest = a2a.signature.digest
+        prev_variant = self.moe_plan.variant
+        # Persist the election in bundle_kwargs so recovery rebuilds (and
+        # any later re-plan's rebuild) keep the demotion.
+        self.bundle.meta["bundle_kwargs"]["hier_leader_perm"] = perm
+        self._rebuild_bundle()
+        new_a2a = self._backing_a2a()
+        if new_a2a is None or new_a2a.signature.digest == old_digest:
+            return False     # identity election resolved back: escalate
+        EXEC_TELEMETRY.record_swap(
+            old=old_digest, new=new_a2a.signature.digest, reason=reason,
+            variant_from=prev_variant, variant_to=self.moe_plan.variant)
+        TRACER.instant("leader_rebake", "runtime", old=old_digest,
+                       new=new_a2a.signature.digest, worst_rank=int(worst),
+                       leader_perm=[list(r) for r in perm])
+        ev = {**reason, "variant_from": prev_variant,
+              "variant_to": self.moe_plan.variant, "swapped": True,
+              "leader_perm": [list(r) for r in perm],
+              "seconds": time.perf_counter() - t0}
+        self.replan_events.append(ev)
+        log.warning("leader re-bake at step %d: demoted rank %d "
+                    "(%s -> %s, %.2fs)", step, int(worst), old_digest[:12],
+                    new_a2a.signature.digest[:12], ev["seconds"])
+        return True
+
     def _rebuild_bundle(self) -> None:
         """Rebuild the step bundle in place (same cfg/shape/mesh): the
         path a changed variant decision — or a device-loss-class failure —
         takes to refresh compiled state between steps.  Params/opt state
         survive untouched; only the jitted program and the EP dispatch
-        plan are rebuilt."""
+        plan are rebuilt.  When the rebuild lands on a *different* backing
+        plan (changed variant or leader perm), the replaced plan's window
+        slots are released and the incoming plan's per-rank rings are
+        re-anchored — stale samples from the old schedule must not blame a
+        now-demoted rank."""
         from repro.launch import steps as steps_mod
+        old_a2a = self._backing_a2a()
         kw = dict(self.bundle.meta.get("bundle_kwargs") or {})
         self.bundle = steps_mod.make_train_bundle(
             self.cfg, self.shape, self.mesh, **kw)
         self.moe_plan = self.bundle.meta.get("moe_plan")
+        new_a2a = self._backing_a2a()
+        if old_a2a is not None and new_a2a is not None \
+                and new_a2a is not old_a2a:
+            old_a2a.free()
+            EXEC_TELEMETRY.reset_rank_rings(new_a2a.signature.digest)
         if self._skew is not None:
             self._arm_skew_monitor()
+
+    def close(self) -> None:
+        """Teardown: drain the async checkpoint writer.  The trainer's
+        re-plans run synchronously inside ``_maybe_replan`` (no background
+        thread to join — the ``ReplanManager.close()`` analogue for
+        manager-driven loops), so this is idempotent and safe to call
+        after a faulted run."""
+        if self.ckpt is not None:
+            self.ckpt.wait()
 
     def run(self, failure_hook: Optional[Callable[[int], None]] = None) -> dict:
         if self.params is None and not self.try_resume():
@@ -329,7 +430,7 @@ class Trainer:
         )
         if self.ckpt is not None:
             self._save(final)
-            self.ckpt.wait()
+        self.close()
         return {"final_step": final,
                 "last_metrics": self.history[-1] if self.history else {},
                 "stragglers": len(self.straggler.flagged),

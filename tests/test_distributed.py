@@ -132,6 +132,10 @@ def test_replan_hot_swap(dist):
     dist("replan_hot_swap", devices=8, timeout=1800)
 
 
+def test_leader_rebake_recovery(dist):
+    dist("leader_rebake_recovery", devices=8, timeout=1800)
+
+
 def test_elastic_resume(dist):
     dist("elastic_resume", devices=8)
 

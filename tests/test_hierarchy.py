@@ -23,13 +23,15 @@ def _gather(src_tbl, valid_tbl, source):
     return np.where(mask, out, 0)
 
 
-def simulate_two_stage(counts, p_outer, p_inner, bufs, recv_rows):
+def simulate_two_stage(counts, p_outer, p_inner, bufs, recv_rows,
+                       leader_perm=None):
     """Run the schedule with every collective spelled out in numpy.
 
     bufs: [P, send_rows, F...] per-rank ragged send buffers.
     Returns [P, recv_rows, F...].
     """
-    hs = md.hier_two_stage_schedule(counts, p_outer, p_inner, recv_rows)
+    hs = md.hier_two_stage_schedule(counts, p_outer, p_inner, recv_rows,
+                                    leader_perm=leader_perm)
     p = p_outer * p_inner
     feat = bufs.shape[2:]
 
@@ -74,14 +76,15 @@ def simulate_two_stage(counts, p_outer, p_inner, bufs, recv_rows):
          for g in range(p)])
 
 
-def _roundtrip(counts, p_outer, p_inner, feature=(3,)):
+def _roundtrip(counts, p_outer, p_inner, feature=(3,), leader_perm=None):
     counts = np.asarray(counts, np.int64)
     p = counts.shape[0]
     send_rows = max(md.round_up(md.max_total_send(counts), 8), 8)
     recv_rows = max(md.round_up(md.max_total_recv(counts), 8), 8)
     bufs = reference.make_testbufs(counts, feature, np.float32, send_rows)
     want = reference.alltoallv_global(bufs, counts, recv_rows)
-    got = simulate_two_stage(counts, p_outer, p_inner, bufs, recv_rows)
+    got = simulate_two_stage(counts, p_outer, p_inner, bufs, recv_rows,
+                             leader_perm=leader_perm)
     rc = md.recv_counts(counts)
     for r in range(p):
         n = int(rc[r].sum())
@@ -147,6 +150,102 @@ counts_and_shape = st.integers(0, 5).flatmap(
 def test_two_stage_roundtrip_property(arg):
     counts, (p_outer, p_inner) = arg
     _roundtrip(counts, p_outer, p_inner)
+
+
+# --- leader permutations (runtime.leader re-bakes) --------------------------
+
+def _perm_for(seed, p_outer, p_inner):
+    rng = np.random.default_rng(seed)
+    return tuple(tuple(int(x) for x in rng.permutation(p_inner))
+                 for _ in range(p_outer))
+
+
+counts_shape_and_perm = counts_and_shape.flatmap(
+    lambda cs_: st.integers(0, 2**16).map(
+        lambda seed: (cs_[0], cs_[1], _perm_for(seed, *cs_[1]))))
+
+
+@given(counts_shape_and_perm)
+def test_two_stage_roundtrip_any_leader_perm(arg):
+    """Oracle parity holds for EVERY per-group leader permutation — a
+    re-bake can never change the exchange's result."""
+    counts, (p_outer, p_inner), perm = arg
+    _roundtrip(counts, p_outer, p_inner, leader_perm=perm)
+
+
+@given(counts_shape_and_perm)
+def test_leader_perm_invariants(arg):
+    """Leadership re-assignment moves WHO carries, never WHAT is carried:
+    cross_group_puts, slab capacities, and buffer geometry are pure
+    functions of the traffic pattern, invariant under the permutation."""
+    counts, (p_outer, p_inner), perm = arg
+    counts = np.asarray(counts, np.int64)
+    recv_rows = max(md.round_up(md.max_total_recv(counts), 8), 8)
+    base = md.hier_two_stage_schedule(counts, p_outer, p_inner, recv_rows)
+    got = md.hier_two_stage_schedule(counts, p_outer, p_inner, recv_rows,
+                                     leader_perm=perm)
+    assert got.cross_group_puts == base.cross_group_puts
+    assert got.s2_caps == base.s2_caps
+    # s1 buckets hold (member -> leader ROLE) rows, so the max over pairs
+    # is assignment-invariant.  s3 buckets mix a role's scatter rows with
+    # the physical rank's own local-bypass rows, so s3_cap may legitimately
+    # change with the pairing — geometry, not pattern identity.
+    assert got.s1_cap == base.s1_cap
+    assert got.remote_needed == base.remote_needed
+    assert got.leader_perm == md.normalize_leader_perm(perm, p_outer, p_inner)
+
+
+@given(counts_shape_and_perm)
+def test_leader_perm_slabs_carried_exactly_once(arg):
+    """Every active group pair's slab crosses the inter-group hop exactly
+    once per epoch, by exactly one (leader, leader) put — under any
+    permutation.  The carriers are the permuted leaders of their groups."""
+    counts, (p_outer, p_inner), perm = arg
+    counts = np.asarray(counts, np.int64)
+    recv_rows = max(md.round_up(md.max_total_recv(counts), 8), 8)
+    hs = md.hier_two_stage_schedule(counts, p_outer, p_inner, recv_rows,
+                                    leader_perm=perm)
+    grp = np.arange(p_outer * p_inner) // p_inner
+    cross = np.zeros((p_outer, p_outer), np.int64)
+    for so in range(p_outer):
+        for to in range(p_outer):
+            if so != to:
+                cross[so, to] = counts[np.ix_(grp == so, grp == to)].sum()
+    pairs = [(src, dst) for rnd in hs.round_perms for (src, dst) in rnd]
+    group_pairs = [(s // p_inner, d // p_inner) for s, d in pairs]
+    # once each, and exactly the active pairs
+    assert len(group_pairs) == len(set(group_pairs))
+    assert set(group_pairs) == {(so, to) for so in range(p_outer)
+                                for to in range(p_outer)
+                                if so != to and cross[so, to] > 0}
+    # each put runs between the groups' elected leaders for that round
+    norm = md.normalize_leader_perm(perm, p_outer, p_inner)
+    for m, rnd in enumerate(hs.round_perms):
+        for src, dst in rnd:
+            so, to = src // p_inner, dst // p_inner
+            q_src = src % p_inner
+            # the sending leader's role q satisfies perm[so][q] == q_src,
+            # and the receiving side uses the SAME role in its own group
+            role = norm[so].index(q_src)
+            assert norm[to][role] == dst % p_inner
+
+
+def test_identity_leader_perm_matches_default():
+    """identity perm bakes byte-identical tables to the perm-free call —
+    the digest-stability guarantee the plan-store keying relies on."""
+    p_outer, p_inner = 2, 4
+    p = p_outer * p_inner
+    rng = np.random.default_rng(11)
+    c = rng.integers(0, 9, (p, p))
+    recv_rows = max(md.round_up(md.max_total_recv(c), 8), 8)
+    a = md.hier_two_stage_schedule(c, p_outer, p_inner, recv_rows)
+    b = md.hier_two_stage_schedule(
+        c, p_outer, p_inner, recv_rows,
+        leader_perm=md.identity_leader_perm(p_outer, p_inner))
+    assert a.round_perms == b.round_perms
+    for fld in ("s1_src", "s1_valid", "s2_src", "s2_valid",
+                "s3_src", "s3_valid", "unpack_src", "unpack_valid"):
+        np.testing.assert_array_equal(getattr(a, fld), getattr(b, fld))
 
 
 def test_cross_group_put_count_scaling():

@@ -180,7 +180,7 @@ def test_chaos_step_faults_fire_once_stalls_every_visit():
     inj.step_hook(2)
     inj.step_hook(2)                  # a degraded host is slow on replay too
     assert inj.injected == {"window": 0, "poison": 0, "stall": 2,
-                            "step": 1, "device": 1}
+                            "step": 1, "device": 1, "rank_slow": 0}
 
 
 def test_chaos_parse_spec():
@@ -371,3 +371,281 @@ def test_reshard_counts_shrink_grow_conserve():
         replan_mod.reshard_counts(c, 3)     # coprime: no principled split
     with pytest.raises(ValueError):
         replan_mod.reshard_counts(c[0], 4)  # not square
+
+
+# --- leader election: cost model + graceful-degradation ladder ---------------
+
+class _TrackingCache(_StubCache):
+    """_StubCache that also keeps the plan objects it handed out (so tests
+    can check free()) and tags digests to keep the global telemetry rings
+    of different tests from aliasing."""
+
+    def __init__(self, tag=""):
+        super().__init__()
+        self.plans = []
+        self.tag = tag
+
+    def get(self, spec, mesh, store=None):
+        self.built.append(spec.variant)
+        p = _StubPlan(spec, f"digest{self.tag}-{spec.variant}")
+        self.plans.append(p)
+        return p
+
+
+def _hier_stub_plan(digest, p_outer=2, p_inner=4):
+    """A fence_hierarchy plan stand-in with the attributes rung 0 reads."""
+    import jax.numpy as jnp
+
+    from repro.core import metadata as md
+    from repro.core.plan import AlltoallvSpec
+
+    p = p_outer * p_inner
+    counts = np.ones((p, p), np.int64)
+    spec = AlltoallvSpec(counts, (4,), jnp.float32, ("o", "i"),
+                         variant="fence_hierarchy")
+    plan = _StubPlan(spec, digest)
+    plan.p, plan.p_outer, plan.p_inner = p, p_outer, p_inner
+    plan.send_counts = counts
+    plan.hier_schedule = type("HS", (), {
+        "leader_perm": md.normalize_leader_perm(None, p_outer, p_inner)})()
+    return plan
+
+
+def test_role_carry_dense_concentrates_on_role_zero():
+    from repro.runtime import leader as leader_mod
+
+    # (2, 4): one macro round, offsets q+1 — only q=0 reaches the other
+    # group (d=1 < p_outer); roles 1..3 are carry-free slack.
+    carry = leader_mod.role_carry(np.ones((8, 8), np.int64), 2, 4)
+    assert carry.shape == (2, 4)
+    # role 0 of each group sends its group's 16 cross rows and receives
+    # the other group's 16.
+    np.testing.assert_array_equal(carry[:, 0], [32, 32])
+    np.testing.assert_array_equal(carry[:, 1:], np.zeros((2, 3), np.int64))
+
+
+def test_choose_leader_perm_identity_under_uniform_health():
+    from repro.runtime import leader as leader_mod
+
+    counts = np.ones((8, 8), np.int64)
+    assert leader_mod.choose_leader_perm(counts, 2, 4) \
+        == ((0, 1, 2, 3), (0, 1, 2, 3))
+    # ...and with an explicit all-ones health vector.
+    assert leader_mod.choose_leader_perm(counts, 2, 4, np.ones(8)) \
+        == ((0, 1, 2, 3), (0, 1, 2, 3))
+
+
+def test_choose_leader_perm_demotes_slow_or_excluded_rank():
+    from repro.runtime import leader as leader_mod
+
+    counts = np.ones((8, 8), np.int64)
+    health = np.ones(8)
+    health[0] = 3.0            # global rank 0 = group 0 inner rank 0
+    perm = leader_mod.choose_leader_perm(counts, 2, 4, health)
+    # The carrying role 0 goes to the healthiest rank; the slow rank is
+    # parked in a carry-free role.  Group 1 (uniform) stays identity.
+    assert perm == ((1, 2, 3, 0), (0, 1, 2, 3))
+    assert leader_mod.permutation_cost(counts, 2, 4, perm, health) \
+        < leader_mod.permutation_cost(counts, 2, 4, None, health)
+    # Exclusion demotes even when health carries no signal.
+    assert leader_mod.choose_leader_perm(counts, 2, 4, exclude=(0,)) \
+        == ((1, 2, 3, 0), (0, 1, 2, 3))
+
+
+def test_rank_health_from_rank_rings():
+    from repro.core._exec_stats import EXEC_TELEMETRY
+    from repro.runtime import leader as leader_mod
+
+    digest = "unit-rank-health"
+    try:
+        for r in range(4):
+            for _ in range(3):
+                EXEC_TELEMETRY.record_rank(digest, r,
+                                           0.3 if r == 2 else 0.1)
+        h = leader_mod.rank_health(digest, 4)
+        assert h[2] == pytest.approx(3.0, rel=0.01)
+        np.testing.assert_allclose(h[[0, 1, 3]], 1.0, rtol=0.01)
+    finally:
+        EXEC_TELEMETRY.reset_rank_rings(digest)
+    # A single sampled rank has no median to anchor on: all nominal.
+    try:
+        EXEC_TELEMETRY.record_rank("unit-rank-health-one", 0, 9.0)
+        np.testing.assert_array_equal(
+            leader_mod.rank_health("unit-rank-health-one", 4), np.ones(4))
+    finally:
+        EXEC_TELEMETRY.reset_rank_rings("unit-rank-health-one")
+
+
+def test_replan_rung0_leader_rebake_then_recovery_rearms():
+    from repro.core._exec_stats import EXEC_TELEMETRY
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1, 1), ("o", "i"))
+    old = _hier_stub_plan("lead-old")
+    cache = _TrackingCache("-r0")
+    try:
+        # Rank rings blame global rank 0 (3x the median p50).
+        for r in range(8):
+            for _ in range(4):
+                EXEC_TELEMETRY.record_rank("lead-old", r,
+                                           0.3 if r == 0 else 0.1)
+        mgr = replan_mod.ReplanManager(old, mesh, cache, background=False)
+        mgr.trigger({"kind": "sustained_skew", "worst_rank": 0,
+                     "baseline_s": 0.1})
+        assert mgr.observe()               # rung 0 swap installs
+        new = mgr.plan
+        assert new.spec.variant == "fence_hierarchy"
+        assert new.spec.hier_leader_perm == ((1, 2, 3, 0), (0, 1, 2, 3))
+        assert mgr.leader_rebakes == 1 and old.freed
+        assert cache.built == ["fence_hierarchy"]   # no sweep, no fence
+        ev = mgr.events[-1]
+        assert ev["event"] == "swap" and ev["kind"] == "leader_rebake"
+        # Provenance landed in the live decision tier, keyed perm-free.
+        (choice,) = cache.auto_choices.values()
+        assert choice["leader_rebake"]["leader_perm"] == \
+            [[1, 2, 3, 0], [0, 1, 2, 3]]
+        # The new plan earns a healthy baseline: the ladder re-arms at 0.
+        assert mgr._ladder_stage == 1
+        ring = EXEC_TELEMETRY.ring(new.signature.digest)
+        for _ in range(mgr.monitor.warmup):
+            ring.record(0.1)
+        assert not mgr.observe()
+        assert mgr.events[-1]["event"] == "recovered"
+        assert mgr._ladder_stage == 0
+    finally:
+        EXEC_TELEMETRY.reset_rank_rings("lead-old")
+
+
+def test_replan_rung0_ineligible_without_blamed_rank(monkeypatch):
+    """No worst_rank -> rung 0 falls through to the sandbox sweep."""
+    from repro.launch.mesh import make_mesh
+
+    def fake_autotune(spec, mesh, cache, **kw):
+        w = _StubPlan(spec, "sandbox-winner")
+        w.auto_choice = {"variant": "fence", "codec": "identity"}
+        return w
+
+    monkeypatch.setattr(replan_mod, "autotune_variant", fake_autotune)
+    mesh = make_mesh((1, 1), ("o", "i"))
+    old = _hier_stub_plan("lead-noblame")
+    cache = _TrackingCache("-nb")
+    mgr = replan_mod.ReplanManager(old, mesh, cache, background=False)
+    mgr.trigger({"kind": "sustained_skew", "worst_rank": None})
+    assert mgr.observe()
+    assert mgr.leader_rebakes == 0
+    assert mgr.plan.spec.variant == "fence" and mgr._ladder_stage == 2
+
+
+def test_replan_ladder_escalates_to_fence_then_exhausts(monkeypatch):
+    import jax.numpy as jnp
+
+    from repro.core.plan import AlltoallvSpec
+    from repro.launch.mesh import make_mesh
+
+    def fake_autotune(spec, mesh, cache, **kw):
+        w = _StubPlan(spec, "sandbox-winner")
+        w.auto_choice = {"variant": "lock", "codec": "identity"}
+        return w
+
+    monkeypatch.setattr(replan_mod, "autotune_variant", fake_autotune)
+    mesh = make_mesh((1,), ("x",))
+    spec = AlltoallvSpec(np.array([[3]]), (4,), jnp.float32, ("x",),
+                         variant="lock")
+    old = _StubPlan(spec, "ladder-old")
+    cache = _TrackingCache("-lad")
+    mgr = replan_mod.ReplanManager(old, mesh, cache, background=False)
+    # Rung 0 is ineligible (not a hierarchy plan): trigger 1 re-autotunes.
+    mgr.trigger("unit")
+    assert mgr.observe() and mgr.plan.spec.variant == "lock"
+    assert mgr._ladder_stage == 2
+    # Trigger 2: degrade to the paper's safe default.
+    mgr.trigger("unit")
+    assert mgr.observe() and mgr.plan.spec.variant == "fence"
+    assert mgr._ladder_stage == 3
+    # Trigger 3: ladder exhausted — no further builds, monitor re-baselined.
+    built_before = list(cache.built)
+    mgr.trigger("unit")
+    assert not mgr.observe()
+    assert cache.built == built_before
+    assert mgr.events[-1]["event"] == "ladder_exhausted"
+    assert [e["event"] for e in mgr.events] == \
+        ["swap", "swap", "ladder_exhausted"]
+    assert mgr.leader_rebakes == 0
+
+
+def test_replan_close_joins_and_frees_pending_plan(monkeypatch):
+    """Satellite: close() must not leak a re-planned-but-never-installed
+    plan's window slots when the loop stops before the next observe()."""
+    import time as _time
+
+    import jax.numpy as jnp
+
+    from repro.core.plan import AlltoallvSpec
+    from repro.launch.mesh import make_mesh
+
+    def slow_autotune(spec, mesh, cache, **kw):
+        _time.sleep(0.05)
+        w = _StubPlan(spec, "sandbox-winner")
+        w.auto_choice = {"variant": "fence", "codec": "identity"}
+        return w
+
+    monkeypatch.setattr(replan_mod, "autotune_variant", slow_autotune)
+    mesh = make_mesh((1,), ("x",))
+    spec = AlltoallvSpec(np.array([[3]]), (4,), jnp.float32, ("x",),
+                         variant="lock")
+    old = _StubPlan(spec, "close-old")
+    cache = _TrackingCache("-close")
+    mgr = replan_mod.ReplanManager(old, mesh, cache, background=True)
+    mgr.trigger("unit")                    # background sweep in flight
+    mgr.close()
+    assert mgr._thread is None and mgr._pending is None
+    assert cache.plans and cache.plans[-1].freed   # pending plan released
+    assert mgr.plan is old and not old.freed       # live plan untouched
+    mgr.close()                            # idempotent
+    assert not mgr.observe()               # nothing left to install
+
+
+def test_install_resets_stale_rank_rings():
+    """Satellite: a hot-swap re-anchors the incoming digest's per-rank
+    rings so stale samples from a prior tenure cannot drive attribution."""
+    import jax.numpy as jnp
+
+    from repro.core._exec_stats import EXEC_TELEMETRY
+    from repro.core.plan import AlltoallvSpec
+    from repro.launch.mesh import make_mesh
+
+    # Direct unit: reset drops exactly the digest's rings.
+    tel = ExecTelemetry()
+    tel.record_rank("d", 0, 0.1)
+    tel.record_rank("d", 1, 0.2)
+    tel.record_rank("e", 0, 0.1)
+    assert tel.reset_rank_rings("d") == 2
+    assert tel.rank_summary("d") == {}
+    assert list(tel.rank_summary("e")) == [0]
+
+    # End to end through ReplanManager._install.
+    mesh = make_mesh((1,), ("x",))
+    spec = AlltoallvSpec(np.array([[3]]), (4,), jnp.float32, ("x",),
+                         variant="lock")
+    old = _StubPlan(spec, "s2-old")
+    new = _StubPlan(spec, "s2-new")
+    EXEC_TELEMETRY.record_rank("s2-new", 0, 0.4)   # stale prior tenure
+    EXEC_TELEMETRY.record_rank("s2-new", 1, 0.1)
+    assert EXEC_TELEMETRY.rank_summary("s2-new")
+    mgr = replan_mod.ReplanManager(
+        old, mesh, _TrackingCache("-s2"), background=False)
+    assert mgr.force_swap(new)
+    assert EXEC_TELEMETRY.rank_summary("s2-new") == {}
+    assert old.freed and mgr.plan is new
+
+
+def test_metrics_count_leader_rebakes():
+    from repro.obs.metrics import render_metrics
+
+    snap = {"swaps": [{"reason": {"kind": "leader_rebake"}},
+                      {"reason": {"kind": "sustained_skew"}},
+                      {"reason": "forced"}],
+            "plans": {}, "ranks": {}}
+    text = render_metrics(exec_snapshot=snap)
+    assert "repro_plan_swaps_total 3" in text
+    assert "repro_leader_rebakes_total 1" in text
