@@ -14,6 +14,8 @@ jax initializes) and prints ``name,us_per_call,derived`` CSV rows.
   moe_dispatch     framework integration (persistent vs per-call vs gspmd;
                    steady-state payload sweep: gspmd vs table-free vs
                    plan-backed vs plan-backed+overlap per-step rows)
+  collective_sweep plan-backed allgatherv / reduce-scatter epochs vs raw
+                   all_gather / psum_scatter on a ragged hot-rank pattern
   compression      int8 error-feedback gradient all-reduce
   resilience       self-healing costs: monitored-epoch overhead, skew
                    detection latency, sandbox re-plan, cold vs warm
@@ -40,6 +42,7 @@ BENCHES = [
     ("hierarchy_sweep", []),
     ("init_cost", []),
     ("moe_dispatch", []),
+    ("collective_sweep", []),
     ("compression", []),
     ("resilience", []),
     ("roofline_table", []),
@@ -48,15 +51,15 @@ BENCHES = [
 QUICK_ITERS = {"weak_scaling": None, "msg_sweep": "8", "breakeven_model": "8",
                "sparse_pattern": "8", "hierarchy_sweep": "8",
                "init_cost": "1", "moe_dispatch": "5", "compression": "5",
-               "resilience": "8"}
+               "collective_sweep": "8", "resilience": "8"}
 
 # Benchmarks with a native --json flag write their own BENCH_<name>.json
 # (structured rows); for the rest run.py scrapes the captured stdout.  One
 # writer per file — never both.
 JSON_NATIVE = {"msg_sweep", "sparse_pattern", "hierarchy_sweep",
                "weak_scaling", "moe_dispatch", "init_cost",
-               "breakeven_model", "compression", "resilience",
-               "roofline_table"}
+               "breakeven_model", "compression", "collective_sweep",
+               "resilience", "roofline_table"}
 
 
 def main(argv=None) -> int:

@@ -1,27 +1,38 @@
-"""Persistent RMA-style Alltoallv for JAX/TPU (the paper's contribution).
+"""Persistent plan-backed collectives for JAX/TPU (the paper's contribution).
 
 Public surface:
-    alltoallv_init / AlltoallvPlan.start / .wait / .free   persistent path
+    exchange_init / ExchangePlan.start / .wait / .free     persistent path
+    alltoallv_init / allgatherv_init / reduce_scatter_init per-collective INIT
     baseline.make_nonpersistent                            MPI_Alltoallv stand-in
     breakeven                                              Eq. 1-3 model
-    reference.alltoallv_global                             numpy oracle
+    reference.alltoallv_global / patterns.get(...).reference  numpy oracles
+
+``AlltoallvSpec``/``AlltoallvPlan`` remain as aliases of the generic
+``ExchangeSpec``/``ExchangePlan`` (the engine is collective-agnostic; the
+pattern lives in ``core.patterns``).
 """
 
-from .api import (alltoallv_init, global_plan_cache, init_stats,
+from .api import (allgatherv_init, alltoallv_init, exchange_init,
+                  global_plan_cache, init_stats, reduce_scatter_init,
                   reset_global_plan_cache, reset_init_stats)
 from ._exec_stats import EXEC_TELEMETRY, EpochRing, ExecTelemetry
 from ._init_stats import (INIT_STATS, capture_init_requests,
                           start_init_capture, stop_init_capture)
-from .plan import AlltoallvPlan, AlltoallvSpec, PlanCache, VARIANTS, WarmStartError
+from .plan import (AlltoallvPlan, AlltoallvSpec, ExchangePlan, ExchangeSpec,
+                   PlanCache, VARIANTS, WarmStartError)
 from .window import Window, WindowCache
-from . import autotune, baseline, breakeven, metadata, reference, variants
+from . import (autotune, baseline, breakeven, metadata, patterns, reference,
+               variants)
 
 __all__ = [
-    "alltoallv_init", "global_plan_cache", "reset_global_plan_cache",
+    "exchange_init", "alltoallv_init", "allgatherv_init",
+    "reduce_scatter_init", "global_plan_cache", "reset_global_plan_cache",
     "init_stats", "reset_init_stats", "INIT_STATS",
     "EXEC_TELEMETRY", "EpochRing", "ExecTelemetry",
     "capture_init_requests", "start_init_capture", "stop_init_capture",
-    "AlltoallvPlan", "AlltoallvSpec", "PlanCache", "VARIANTS",
+    "AlltoallvPlan", "AlltoallvSpec", "ExchangePlan", "ExchangeSpec",
+    "PlanCache", "VARIANTS",
     "WarmStartError", "Window", "WindowCache",
-    "autotune", "baseline", "breakeven", "metadata", "reference", "variants",
+    "autotune", "baseline", "breakeven", "metadata", "patterns", "reference",
+    "variants",
 ]

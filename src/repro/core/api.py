@@ -53,7 +53,7 @@ import jax
 import numpy as np
 
 from ._init_stats import INIT_STATS, capturing_inits, record_init_request
-from .plan import AlltoallvPlan, AlltoallvSpec, PlanCache
+from .plan import AlltoallvPlan, AlltoallvSpec, ExchangePlan, ExchangeSpec, PlanCache
 from .window import WindowCache
 
 _GLOBAL_CACHE = PlanCache()
@@ -72,7 +72,8 @@ def _resolve_store(store):
     return planstore.default_store()
 
 
-def alltoallv_init(
+def exchange_init(
+    collective: str,
     send_counts: np.ndarray,
     feature_shape: Sequence[int],
     dtype,
@@ -90,8 +91,15 @@ def alltoallv_init(
     codec: str = "identity",
     error_tol: float | None = None,
     hier_leader_perm: Sequence[Sequence[int]] | None = None,
-) -> AlltoallvPlan:
-    """Build (or fetch from cache) a persistent plan for a frozen pattern.
+) -> ExchangePlan:
+    """Collective-agnostic INIT: build (or fetch) a persistent plan.
+
+    ``collective`` names the exchange family (``core.patterns``);
+    ``send_counts`` is the family's natural counts form — the ``[P, P]``
+    matrix for alltoallv, a ``[P]`` vector (or its expanded matrix) for
+    allgatherv / reduce_scatter.  Everything else matches
+    ``alltoallv_init``, which (with ``allgatherv_init`` and
+    ``reduce_scatter_init``) is a thin wrapper over this function.
 
     ``variant="auto"`` measures all applicable variants once at INIT and
     returns the fastest plan (see the decision tree above); the chosen
@@ -122,6 +130,7 @@ def alltoallv_init(
     window).
     """
     from . import metadata as md
+    from . import patterns
     from ..parallel import wirecodec
 
     axis_t = (axis,) if isinstance(axis, str) else tuple(axis)
@@ -138,8 +147,8 @@ def alltoallv_init(
                        else "fence")
     else:
         placeholder = variant
-    spec = AlltoallvSpec(
-        send_counts=np.asarray(send_counts, np.int64),
+    spec = ExchangeSpec(
+        send_counts=patterns.as_matrix(collective, send_counts),
         feature_shape=tuple(int(s) for s in feature_shape),
         dtype=dtype,
         axis=axis_t,
@@ -150,12 +159,14 @@ def alltoallv_init(
         baked_metadata=baked_metadata,
         codec=codec,
         hier_leader_perm=hier_leader_perm,
+        collective=collective,
     )
     if capturing_inits():
         # Everything a prewarm host needs to replay this INIT verbatim
         # (``planstore.prewarm``): the exchange mesh is reconstructible from
         # axis names + sizes alone — the signature never covers other axes.
         record_init_request({
+            "collective": collective,
             "send_counts": spec.send_counts.tolist(),
             "feature_shape": list(spec.feature_shape),
             "dtype": str(jax.numpy.dtype(dtype)),
@@ -181,6 +192,94 @@ def alltoallv_init(
                                 iters=autotune_iters, store=resolved_store,
                                 embeddable=embeddable, error_tol=error_tol)
     return (cache or _GLOBAL_CACHE).get(spec, mesh, store=resolved_store)
+
+
+def alltoallv_init(
+    send_counts: np.ndarray,
+    feature_shape: Sequence[int],
+    dtype,
+    mesh: jax.sharding.Mesh,
+    axis: str | Sequence[str] = "x",
+    variant: str = "fence",
+    lock_schedule: str = "ring",
+    tile_rows: int | None = None,
+    pack_impl: str = "jnp",
+    baked_metadata: bool = True,
+    cache: PlanCache | None = None,
+    autotune_iters: int = 12,
+    store=None,
+    embeddable: bool = False,
+    codec: str = "identity",
+    error_tol: float | None = None,
+    hier_leader_perm: Sequence[Sequence[int]] | None = None,
+) -> AlltoallvPlan:
+    """Persistent alltoallv INIT (see ``exchange_init`` for the contract)."""
+    return exchange_init(
+        "alltoallv", send_counts, feature_shape, dtype, mesh, axis=axis,
+        variant=variant, lock_schedule=lock_schedule, tile_rows=tile_rows,
+        pack_impl=pack_impl, baked_metadata=baked_metadata, cache=cache,
+        autotune_iters=autotune_iters, store=store, embeddable=embeddable,
+        codec=codec, error_tol=error_tol, hier_leader_perm=hier_leader_perm)
+
+
+def allgatherv_init(
+    counts: np.ndarray,
+    feature_shape: Sequence[int],
+    dtype,
+    mesh: jax.sharding.Mesh,
+    axis: str | Sequence[str] = "x",
+    variant: str = "fence",
+    lock_schedule: str = "ring",
+    tile_rows: int | None = None,
+    cache: PlanCache | None = None,
+    autotune_iters: int = 12,
+    store=None,
+    embeddable: bool = False,
+) -> ExchangePlan:
+    """Persistent allgatherv INIT: ``counts[i]`` = rows rank i contributes.
+
+    Every rank's epoch input is its own ``[send_rows, F...]`` contribution;
+    the output is the ragged concatenation of all contributions (identical
+    on every rank).  Variants: fence (one ``all_gather``), lock (ring
+    broadcast), fence_hierarchy (nested inner/outer gathers on a grouped
+    mesh), or auto.  Uniform tile-aligned counts hit the identity fast path
+    — the embedded epoch is the bare ``all_gather``.
+    """
+    return exchange_init(
+        "allgatherv", counts, feature_shape, dtype, mesh, axis=axis,
+        variant=variant, lock_schedule=lock_schedule, tile_rows=tile_rows,
+        cache=cache, autotune_iters=autotune_iters, store=store,
+        embeddable=embeddable)
+
+
+def reduce_scatter_init(
+    counts: np.ndarray,
+    feature_shape: Sequence[int],
+    dtype,
+    mesh: jax.sharding.Mesh,
+    axis: str | Sequence[str] = "x",
+    variant: str = "fence",
+    lock_schedule: str = "ring",
+    tile_rows: int | None = None,
+    cache: PlanCache | None = None,
+    autotune_iters: int = 12,
+    store=None,
+    embeddable: bool = False,
+) -> ExchangePlan:
+    """Persistent reduce-scatter INIT: ``counts[j]`` = rows rank j receives.
+
+    Every rank's epoch input is the full per-destination concatenation
+    (``sum(counts)`` rows); rank j's output is the element-wise SUM
+    (``op="sum"``) of the P blocks destined for it, the reduction fused
+    into unpack.  Variants: fence (``all_to_all`` + fused sum), lock
+    (ring-accumulate), or auto — the leader-combined hierarchy and wire
+    codecs are structurally forbidden (see ``core.patterns``).
+    """
+    return exchange_init(
+        "reduce_scatter", counts, feature_shape, dtype, mesh, axis=axis,
+        variant=variant, lock_schedule=lock_schedule, tile_rows=tile_rows,
+        cache=cache, autotune_iters=autotune_iters, store=store,
+        embeddable=embeddable)
 
 
 def global_plan_cache() -> PlanCache:

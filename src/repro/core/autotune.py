@@ -33,6 +33,7 @@ from ..obs.spans import TRACER
 from ..parallel import wirecodec
 from . import breakeven
 from . import metadata as md
+from . import patterns
 from ._exec_stats import EXEC_TELEMETRY
 from ._init_stats import INIT_STATS
 from .plan import AlltoallvPlan, AlltoallvSpec, PlanCache
@@ -49,6 +50,10 @@ def candidate_variants(spec: AlltoallvSpec, mesh) -> list[str]:
     this jax (``compat.HAS_RAGGED_ALL_TO_ALL``) and the backend can execute
     it (XLA:TPU; CPU has no ragged emitter) — and only on a single-axis
     exchange (the ragged spec takes one mesh axis).
+
+    The spec's collective further restricts the set: reduce-scatter has no
+    leader-combined hierarchy (combining distinct routed blocks vs summing)
+    and no ragged form, allgatherv no ragged form (see ``core.patterns``).
     """
     cands = ["fence", "lock"]
     if (len(spec.axis) == 2 and int(mesh.shape[spec.axis[0]]) > 1
@@ -56,7 +61,8 @@ def candidate_variants(spec: AlltoallvSpec, mesh) -> list[str]:
         cands.append("fence_hierarchy")
     if len(spec.axis) == 1 and compat.ragged_alltoall_executes():
         cands.append("ragged")
-    return cands
+    supported = patterns.get(spec.collective).supported_variants
+    return [v for v in cands if v in supported]
 
 
 def decision_signature(spec: AlltoallvSpec, mesh,
@@ -74,6 +80,8 @@ def decision_signature(spec: AlltoallvSpec, mesh,
     row_elems = int(np.prod(spec.feature_shape)) if spec.feature_shape else 1
     row_bytes = row_elems * jnp.dtype(spec.dtype).itemsize
     codecs = wirecodec.allowed(error_tol)
+    if not patterns.get(spec.collective).supports_codec:
+        codecs = ["identity"]
     sweep_codecs = len(codecs) > 1
     return md.PatternSignature.build(
         sc, spec.feature_shape, spec.dtype,
@@ -82,7 +90,8 @@ def decision_signature(spec: AlltoallvSpec, mesh,
         pack_impl=spec.pack_impl, baked_metadata=spec.baked_metadata,
         axis_sizes=tuple(mesh.shape[a] for a in spec.axis),
         codec=("auto[" + ",".join(codecs) + "]" if sweep_codecs
-               else "identity"))
+               else "identity"),
+        collective=spec.collective)
 
 
 def autotune_variant(
@@ -130,6 +139,8 @@ def autotune_variant(
     the fresh decision before it is cached/published.
     """
     codecs = wirecodec.allowed(error_tol)
+    if not patterns.get(spec.collective).supports_codec:
+        codecs = ["identity"]     # can't sum/reorder encoded wire rows
     sweep_codecs = len(codecs) > 1
     auto_sig = decision_signature(spec, mesh, embeddable=embeddable,
                                   error_tol=error_tol)

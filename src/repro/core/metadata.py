@@ -663,6 +663,11 @@ class PatternSignature:
     # identity (round-robin).  Explicit so rebaked schedules never alias the
     # round-robin artifact in the store.
     hier_leader_perm: tuple[tuple[int, ...], ...] = ()
+    # Exchange pattern family (core.patterns).  "alltoallv" is the founding
+    # collective and keys exactly as before this dimension existed; other
+    # families (allgatherv, reduce_scatter) perturb the digest so their
+    # plans and artifacts never alias an alltoallv entry.
+    collective: str = "alltoallv"
 
     @staticmethod
     def build(
@@ -679,6 +684,7 @@ class PatternSignature:
         axis_sizes: Sequence[int] = (),
         codec: str = "identity",
         hier_leader_perm: Sequence[Sequence[int]] = (),
+        collective: str = "alltoallv",
     ) -> "PatternSignature":
         # Every spec field that changes the compiled executable must land in
         # the digest: two specs differing only in lock_schedule / tile_rows /
@@ -712,6 +718,11 @@ class PatternSignature:
             h.update(("leader_perm:" + repr(lp)).encode())
         else:
             lp = ()
+        if collective != "alltoallv":
+            # Conditional for the same reason again: alltoallv digests are
+            # byte-identical to the pre-patterns era, so every stored
+            # alltoallv artifact keeps warm-starting without a re-bake.
+            h.update(("collective:" + collective).encode())
         return PatternSignature(
             digest=h.hexdigest()[:16],
             p=c.shape[0],
@@ -723,4 +734,5 @@ class PatternSignature:
             axis_sizes=tuple(int(s) for s in axis_sizes),
             codec=codec,
             hier_leader_perm=lp,
+            collective=collective,
         )

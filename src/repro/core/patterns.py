@@ -1,0 +1,400 @@
+"""Exchange patterns — the collective-agnostic core of a persistent plan.
+
+The paper's INIT/EXECUTE split is not an alltoallv property: any collective
+whose communication pattern is frozen can bake its metadata (count matrix,
+capacity schedule, pack/unpack index tables, window geometry) once and
+replay it every epoch.  An ``ExchangePattern`` captures exactly what varies
+between collective families and nothing else:
+
+  * count derivation — how the user-facing counts (a ``[P, P]`` matrix for
+    alltoallv, a ``[P]`` vector for allgatherv / reduce-scatter) expand into
+    the square send-count matrix the shared machinery consumes,
+  * buffer geometry — which side of the exchange is ragged-per-rank
+    (allgatherv sends one bucket and receives all; reduce-scatter sends all
+    buckets and receives one),
+  * pack/unpack table baking — the gather maps each side needs, with
+    reduce-scatter's reduction fused into the unpack step,
+  * identity-map detection — the uniform tile-aligned fast path where both
+    gathers vanish and the epoch is the bare collective,
+  * the numpy oracle the test suites compare against,
+  * the variant families that can implement the pattern (reduce-scatter
+    forbids the leader-combined hierarchy: the slab schedule routes
+    *distinct* blocks between groups, while the reduction needs every
+    contribution for one destination combined — a different schedule
+    entirely; ragged is alltoallv-only, it writes raw window bytes).
+
+``ExchangePlan`` (core.plan) holds one pattern instance and threads it
+through geometry, warm-start validation, and the epoch body; everything
+else — variants, autotune, the plan store, obs — is shared verbatim.
+
+Wire layout notes
+-----------------
+
+allgatherv packs the rank's OWN contribution into a single ``[C, F]``
+bucket and rides ``all_gather`` (fence), a ring broadcast of that bucket
+(lock), or nested inner-then-outer gathers (fence_hierarchy — rank
+linearization is outer-major, so the nested concatenation lands in global
+bucket order).  The post-exchange ``[P*C, F]`` layout is bucket-identical
+to the alltoallv fence layout, so the standard unpack tables restore the
+ragged concatenated recv buffer unchanged.
+
+reduce_scatter packs the standard per-destination bucketed ``[P*C, F]``
+layout (every rank's table row is identical — the count matrix is
+row-constant), exchanges with ``all_to_all`` (fence) or a ring of
+accumulating ppermutes (lock), and reduces the P received contributions
+into one ``[C, F]`` bucket *inside the unpack step*: pack masking zeroes
+every invalid row, so the sum over contributions is exact.  Wire codecs
+are forbidden — encoded int8 rows cannot be summed on the wire.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import metadata as md
+from . import variants
+
+COLLECTIVES = ("alltoallv", "allgatherv", "reduce_scatter")
+
+
+def _counts_vector(counts, p_hint: int | None = None) -> np.ndarray:
+    c = np.asarray(counts, np.int64)
+    if c.ndim != 1:
+        raise ValueError(f"counts must be a [P] vector, got shape {c.shape}")
+    if np.any(c < 0):
+        raise ValueError("counts must be non-negative")
+    if p_hint is not None and c.shape[0] != p_hint:
+        raise ValueError(f"counts length {c.shape[0]} != P {p_hint}")
+    return c
+
+
+class ExchangePattern:
+    """Protocol base: one collective family's pattern-specific pieces.
+
+    Concrete patterns are stateless singletons; ``get(name)`` resolves them.
+    Every method takes the *expanded* square count matrix ``sc`` — vector
+    counts are expanded once at INIT (``expand_counts``) so the signature
+    digest, recv-count transpose, displacements, and capacity schedule all
+    run on the shared ``[P, P]`` machinery.
+    """
+
+    name: str = ""
+    #: variants that can implement this pattern (autotune candidate filter)
+    supported_variants: tuple[str, ...] = ()
+    #: whether non-identity wire codecs are meaningful for this pattern
+    supports_codec: bool = False
+
+    def expand_counts(self, counts) -> np.ndarray:
+        raise NotImplementedError
+
+    def validate_matrix(self, sc: np.ndarray) -> None:
+        """Cheap structural check that ``sc`` is derivable for this family."""
+
+    def send_rows(self, sc: np.ndarray, tile_rows: int) -> int:
+        raise NotImplementedError
+
+    def recv_rows(self, sc: np.ndarray, tile_rows: int) -> int:
+        raise NotImplementedError
+
+    def bake_tables(self, sc: np.ndarray, capacity: int,
+                    recv_rows: int) -> md.BakedIndexTables:
+        raise NotImplementedError
+
+    def table_shapes(self, p: int, capacity: int, recv_rows: int
+                     ) -> tuple[tuple[int, int], tuple[int, int]]:
+        """Expected (pack_src, unpack_src) shapes — warm-start validation."""
+        raise NotImplementedError
+
+    def identity_maps(self, sc: np.ndarray, capacity: int,
+                      send_rows: int, recv_rows: int) -> bool:
+        raise NotImplementedError
+
+    def reference(self, sendbufs: np.ndarray, counts,
+                  recv_rows: int) -> np.ndarray:
+        """Numpy oracle on the global view; ``counts`` in user-facing form."""
+        raise NotImplementedError
+
+    def build_exchange(self, plan) -> Callable:
+        """The bare wire move for this pattern (variant-dispatched).  Also
+        the whole epoch on the identity fast path — uniform tile-aligned
+        patterns need no pack/unpack gathers, so ``plan.embed()`` returns
+        exactly this.  Only non-alltoallv patterns provide it — the
+        alltoallv body (codec lanes, fused kernels, hierarchy schedule)
+        lives in ``ExchangePlan`` itself, behavior-preserving."""
+        raise NotImplementedError
+
+    def build_epoch(self, plan) -> Callable:
+        """``fn(x, psrc, pvalid, rsrc, rvalid) -> out`` — the traced epoch
+        body: pack → ``build_exchange`` → unpack, with the reduction fused
+        into unpack where the pattern calls for it.  Invalid output rows
+        are zeroed; the caller owns the window write-through."""
+        exchange = self.build_exchange(plan)
+
+        def epoch(x, psrc, pvalid, rsrc, rvalid):
+            moved = exchange(variants.pack_rows(x, psrc, pvalid))
+            return variants.unpack_rows(moved, rsrc, rvalid)
+
+        return epoch
+
+
+class AlltoallvPattern(ExchangePattern):
+    """The founding collective: counts are already the square matrix."""
+
+    name = "alltoallv"
+    supported_variants = ("fence", "lock", "fence_hierarchy", "ragged")
+    supports_codec = True
+
+    def expand_counts(self, counts) -> np.ndarray:
+        return md._as_counts(counts)
+
+    def send_rows(self, sc, tile_rows):
+        return max(md.round_up(md.max_total_send(sc), tile_rows), tile_rows)
+
+    def recv_rows(self, sc, tile_rows):
+        return max(md.round_up(md.max_total_recv(sc), tile_rows), tile_rows)
+
+    def bake_tables(self, sc, capacity, recv_rows):
+        return md.baked_index_tables(sc, capacity, recv_rows)
+
+    def table_shapes(self, p, capacity, recv_rows):
+        return (p, p * capacity), (p, recv_rows)
+
+    def identity_maps(self, sc, capacity, send_rows, recv_rows):
+        return bool(sc.size > 0 and (sc == capacity).all()
+                    and send_rows == sc.shape[0] * capacity
+                    and recv_rows == sc.shape[0] * capacity)
+
+    def reference(self, sendbufs, counts, recv_rows):
+        from . import reference
+        return reference.alltoallv_global(sendbufs, counts, recv_rows)
+
+
+class AllgathervPattern(ExchangePattern):
+    """Everyone receives the concatenation of every rank's contribution.
+
+    ``counts[i]`` = rows rank i contributes; the equivalent send matrix is
+    row-constant (``sc[i, j] = counts[i]``) but the wire ships each
+    contribution ONCE: pack gathers the own ``[C, F]`` bucket, the exchange
+    replicates it (all_gather / ring broadcast / nested gathers), and the
+    post-exchange layout equals the alltoallv fence bucket layout, so the
+    standard unpack tables apply verbatim.
+    """
+
+    name = "allgatherv"
+    supported_variants = ("fence", "lock", "fence_hierarchy")
+    supports_codec = False
+
+    def expand_counts(self, counts) -> np.ndarray:
+        c = _counts_vector(counts)
+        return np.repeat(c[:, None], c.shape[0], axis=1)
+
+    def validate_matrix(self, sc) -> None:
+        if sc.size and not (sc == sc[:, :1]).all():
+            raise ValueError("allgatherv count matrix must be row-constant "
+                             "(sc[i, j] = counts[i])")
+
+    def send_rows(self, sc, tile_rows):
+        # The send buffer holds ONE contribution, not P buckets.
+        return md.global_capacity(sc, tile_rows)
+
+    def recv_rows(self, sc, tile_rows):
+        return max(md.round_up(md.max_total_recv(sc), tile_rows), tile_rows)
+
+    def bake_tables(self, sc, capacity, recv_rows):
+        p = sc.shape[0]
+        c_vec = sc[:, 0] if sc.size else np.zeros(p, np.int64)
+        k = np.arange(capacity, dtype=np.int64)
+        pack_valid = k[None, :] < c_vec[:, None]           # [P, C]
+        pack_src = np.where(pack_valid, k[None, :], 0).astype(np.int32)
+        rc = md.recv_counts(sc)
+        rd = md.displacements(rc)
+        unpack_src = np.zeros((p, recv_rows), np.int32)
+        unpack_valid = np.zeros((p, recv_rows), bool)
+        for i in range(p):
+            unpack_src[i], unpack_valid[i] = md.unpack_index_map(
+                rc[i], rd[i], capacity, recv_rows)
+        return md.BakedIndexTables(pack_src, pack_valid,
+                                   unpack_src, unpack_valid)
+
+    def table_shapes(self, p, capacity, recv_rows):
+        return (p, capacity), (p, recv_rows)
+
+    def identity_maps(self, sc, capacity, send_rows, recv_rows):
+        return bool(sc.size > 0 and (sc == capacity).all()
+                    and send_rows == capacity
+                    and recv_rows == sc.shape[0] * capacity)
+
+    def reference(self, sendbufs, counts, recv_rows):
+        bufs = np.asarray(sendbufs)
+        c = _counts_vector(counts, bufs.shape[0])
+        p = c.shape[0]
+        out = np.zeros((p, recv_rows) + bufs.shape[2:], bufs.dtype)
+        off = 0
+        for i in range(p):
+            n = int(c[i])
+            out[:, off:off + n] = bufs[i, :n][None]
+            off += n
+        return out
+
+    def build_exchange(self, plan) -> Callable:
+        """``fn(own [C, F...]) -> buckets [P*C, F...]`` in global order."""
+        spec = plan.spec
+        p, cap = plan.p, plan.capacity
+        a2a_axis = spec.axis[0] if len(spec.axis) == 1 else tuple(spec.axis)
+
+        def exchange(own):
+            if spec.variant == "fence_hierarchy":
+                # Nested gathers over the outer-major linearization: the
+                # inner concat then the outer concat IS global bucket order.
+                inner_g = jax.lax.all_gather(
+                    own, spec.axis[1], axis=0, tiled=True)
+                return jax.lax.all_gather(
+                    inner_g, spec.axis[0], axis=0, tiled=True)
+            if spec.variant == "fence":
+                return jax.lax.all_gather(own, a2a_axis, axis=0, tiled=True)
+            # lock: ring broadcast of the own bucket, one ppermute per round
+            # (same total volume as a ring allgather, same per-round shape).
+            i = plan._axis_index()
+            buckets = jnp.zeros((p * cap,) + own.shape[1:], own.dtype)
+            buckets = jax.lax.dynamic_update_slice_in_dim(
+                buckets, own, i * cap, axis=0)
+            for r in range(1, p):
+                perm = [(s, (s + r) % p) for s in range(p)]
+                got = jax.lax.ppermute(own, a2a_axis, perm=perm)
+                buckets = jax.lax.dynamic_update_slice_in_dim(
+                    buckets, got, ((i - r) % p) * cap, axis=0)
+            return buckets
+
+        return exchange
+
+
+class ReduceScatterPattern(ExchangePattern):
+    """Each destination receives the element-wise SUM of its blocks.
+
+    ``counts[j]`` = rows destined for rank j; every rank's send buffer is
+    the full per-destination concatenation, so the send matrix is
+    column-constant (``sc[i, j] = counts[j]``) and the standard pack tables
+    apply (every row identical).  The reduction is fused into unpack: the
+    P received buckets collapse with one sum — pack masking already zeroed
+    invalid rows, so the sum is exact — and the unpack mask keeps only this
+    rank's valid rows.  The leader-combined hierarchy is forbidden (its
+    slab schedule routes distinct blocks; a reduction needs a combining
+    schedule this engine does not bake), as are wire codecs (encoded rows
+    cannot be summed).
+    """
+
+    name = "reduce_scatter"
+    supported_variants = ("fence", "lock")
+    supports_codec = False
+
+    def expand_counts(self, counts) -> np.ndarray:
+        c = _counts_vector(counts)
+        return np.repeat(c[None, :], c.shape[0], axis=0)
+
+    def validate_matrix(self, sc) -> None:
+        if sc.size and not (sc == sc[:1, :]).all():
+            raise ValueError("reduce_scatter count matrix must be column-"
+                             "constant (sc[i, j] = counts[j])")
+
+    def send_rows(self, sc, tile_rows):
+        return max(md.round_up(md.max_total_send(sc), tile_rows), tile_rows)
+
+    def recv_rows(self, sc, tile_rows):
+        # The recv buffer holds ONE reduced bucket, not P.
+        return md.global_capacity(sc, tile_rows)
+
+    def bake_tables(self, sc, capacity, recv_rows):
+        p = sc.shape[0]
+        c_vec = sc[0, :] if sc.size else np.zeros(p, np.int64)
+        sd = md.displacements(sc)
+        pack_src = np.zeros((p, p * capacity), np.int32)
+        pack_valid = np.zeros((p, p * capacity), bool)
+        for i in range(p):
+            pack_src[i], pack_valid[i] = md.pack_index_map(
+                sc[i], sd[i], capacity)
+        k = np.arange(recv_rows, dtype=np.int64)
+        unpack_valid = k[None, :] < c_vec[:, None]          # [P, recv_rows]
+        unpack_src = np.where(unpack_valid, k[None, :], 0).astype(np.int32)
+        return md.BakedIndexTables(pack_src, pack_valid,
+                                   unpack_src, unpack_valid)
+
+    def table_shapes(self, p, capacity, recv_rows):
+        return (p, p * capacity), (p, recv_rows)
+
+    def identity_maps(self, sc, capacity, send_rows, recv_rows):
+        return bool(sc.size > 0 and (sc == capacity).all()
+                    and send_rows == sc.shape[0] * capacity
+                    and recv_rows == capacity)
+
+    def reference(self, sendbufs, counts, recv_rows):
+        bufs = np.asarray(sendbufs)
+        c = _counts_vector(counts, bufs.shape[0])
+        p = c.shape[0]
+        sd = np.concatenate([[0], np.cumsum(c)[:-1]])
+        out = np.zeros((p, recv_rows) + bufs.shape[2:], bufs.dtype)
+        for j in range(p):
+            n = int(c[j])
+            if n == 0:
+                continue
+            out[j, :n] = bufs[:, sd[j]:sd[j] + n].sum(axis=0)
+        return out
+
+    def build_exchange(self, plan) -> Callable:
+        """``fn(packed [P*C, F...]) -> summed [C, F...]`` — exchange plus
+        the fused reduction over the P received contributions."""
+        spec = plan.spec
+        p, cap = plan.p, plan.capacity
+        a2a_axis = spec.axis[0] if len(spec.axis) == 1 else tuple(spec.axis)
+
+        def exchange(packed):
+            if spec.variant == "fence":
+                buckets = variants.fence_exchange(packed, a2a_axis)
+                return buckets.reshape(
+                    (p, cap) + buckets.shape[1:]).sum(axis=0)
+            # lock: ring-accumulate — round r ships my bucket for rank
+            # (i + r) % p and adds the bucket arriving from (i - r) % p.
+            i = plan._axis_index()
+            acc = jax.lax.dynamic_slice_in_dim(packed, i * cap, cap, axis=0)
+            for r in range(1, p):
+                perm = [(s, (s + r) % p) for s in range(p)]
+                tgt = (i + r) % p
+                send = jax.lax.dynamic_slice_in_dim(
+                    packed, tgt * cap, cap, axis=0)
+                acc = acc + jax.lax.ppermute(send, a2a_axis, perm=perm)
+            return acc
+
+        return exchange
+
+
+_PATTERNS: dict[str, ExchangePattern] = {
+    p.name: p for p in (AlltoallvPattern(), AllgathervPattern(),
+                        ReduceScatterPattern())
+}
+
+
+def get(name: str) -> ExchangePattern:
+    try:
+        return _PATTERNS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown collective {name!r}; have {sorted(_PATTERNS)}") from None
+
+
+def as_matrix(collective: str, counts) -> np.ndarray:
+    """User-facing counts -> the expanded square ``[P, P]`` matrix.
+
+    Accepts either the family's natural form (a ``[P]`` vector for
+    allgatherv / reduce_scatter) or an already-expanded matrix (the prewarm
+    replay path persists the expanded form); matrices are structurally
+    validated against the family."""
+    pat = get(collective)
+    c = np.asarray(counts)
+    if c.ndim == 2:
+        m = md._as_counts(c)
+        pat.validate_matrix(m)
+        return m
+    return pat.expand_counts(c)

@@ -62,6 +62,7 @@ from ..compat import shard_map
 from ..obs.spans import TRACER
 from ..parallel import wirecodec
 from . import metadata as md
+from . import patterns as patterns_mod
 from . import variants
 from ._exec_stats import EXEC_TELEMETRY
 from ._init_stats import INIT_STATS
@@ -77,8 +78,18 @@ class WarmStartError(Exception):
 
 
 @dataclasses.dataclass(frozen=True, eq=False)  # eq=False: ndarray field
-class AlltoallvSpec:
-    """Frozen description of one alltoallv pattern (the INIT arguments)."""
+class ExchangeSpec:
+    """Frozen description of one exchange pattern (the INIT arguments).
+
+    ``collective`` names the exchange family (``core.patterns``):
+    ``"alltoallv"`` (default — the founding collective, byte-identical
+    semantics and signatures to the pre-patterns era), ``"allgatherv"``, or
+    ``"reduce_scatter"``.  ``send_counts`` is always the *expanded* square
+    ``[P, P]`` matrix — the family-specific INIT entry points
+    (``allgatherv_init`` / ``reduce_scatter_init``) expand their ``[P]``
+    count vectors before building the spec, so every downstream consumer
+    (signature digest, displacements, capacity schedule) is shared.
+    """
 
     send_counts: Any                      # [P, P] host array, rows = sender
     feature_shape: tuple[int, ...]        # trailing dims of one row
@@ -94,10 +105,35 @@ class AlltoallvSpec:
     # None means identity (round-robin).  Canonicalized so identity specs
     # key exactly as before this dimension existed.
     hier_leader_perm: tuple[tuple[int, ...], ...] | None = None
+    collective: str = "alltoallv"         # exchange family (core.patterns)
 
     def __post_init__(self):
         if self.variant not in VARIANTS:
             raise ValueError(f"variant must be one of {VARIANTS}")
+        pattern = patterns_mod.get(self.collective)   # validates the name
+        if self.collective != "alltoallv":
+            if self.variant not in pattern.supported_variants:
+                raise ValueError(
+                    f"collective {self.collective!r} supports variants "
+                    f"{pattern.supported_variants}, not {self.variant!r}")
+            if self.codec != "identity" and not pattern.supports_codec:
+                raise ValueError(
+                    f"collective {self.collective!r} forbids wire codecs "
+                    "(reduced/replicated rows cannot ride an encoded wire)")
+            if self.pack_impl != "jnp":
+                raise ValueError(
+                    f"collective {self.collective!r} uses the jnp "
+                    "pack/unpack path (kernel tile shapes are baked for "
+                    "the alltoallv bucket layout)")
+            if not self.baked_metadata:
+                raise ValueError(
+                    f"collective {self.collective!r} requires "
+                    "baked_metadata=True (no in-graph A/B twin exists)")
+            if self.hier_leader_perm is not None:
+                raise ValueError(
+                    f"collective {self.collective!r} has no leader roles "
+                    "(its hierarchy is nested gathers, not a leader "
+                    "schedule); hier_leader_perm must be None")
         if self.hier_leader_perm is not None:
             lp = tuple(tuple(int(x) for x in row)
                        for row in self.hier_leader_perm)
@@ -151,10 +187,17 @@ class AlltoallvSpec:
             raise ValueError("pack_impl='fused' needs host-baked index maps")
 
 
-class AlltoallvPlan:
-    """Persistent request object: metadata + window + compiled executable."""
+class ExchangePlan:
+    """Persistent request object: metadata + window + compiled executable.
 
-    def __init__(self, spec: AlltoallvSpec, mesh: jax.sharding.Mesh,
+    Collective-agnostic: the spec's ``collective`` resolves to an
+    ``ExchangePattern`` (``core.patterns``) that owns the family-specific
+    pieces — count-matrix structure, buffer geometry, table baking,
+    identity detection, and (for non-alltoallv families) the epoch body.
+    Everything else here is shared across families.
+    """
+
+    def __init__(self, spec: ExchangeSpec, mesh: jax.sharding.Mesh,
                  window_cache: WindowCache | None = None, warm=None):
         """``warm`` is an optional plan-store artifact (duck-typed: anything
         with ``index_tables`` / ``hier_schedule`` attributes).  When it
@@ -164,10 +207,12 @@ class AlltoallvPlan:
         self.spec = spec
         self.mesh = mesh
         self.warm_loaded = False
+        self.pattern = patterns_mod.get(spec.collective)
         t0 = time.perf_counter()
 
         sc = np.asarray(spec.send_counts, dtype=np.int64)
         self.p = sc.shape[0]
+        self.pattern.validate_matrix(sc)
         axis_sizes = [mesh.shape[a] for a in spec.axis]
         p_mesh = int(np.prod(axis_sizes))
         if p_mesh != self.p:
@@ -196,13 +241,15 @@ class AlltoallvPlan:
             int(md.active_round_schedule(self.round_capacities).size)
             if spec.variant == "lock" else None)
         # --- buffer geometry (SPMD: padded to the max over ranks) ---
-        self.send_rows = max(
-            md.round_up(md.max_total_send(sc), spec.tile_rows), spec.tile_rows)
-        self.recv_rows = max(
-            md.round_up(md.max_total_recv(sc), spec.tile_rows), spec.tile_rows)
+        # Pattern-owned: allgatherv sends ONE bucket and receives P;
+        # reduce_scatter sends P buckets and receives one reduced bucket.
+        self.send_rows = self.pattern.send_rows(sc, spec.tile_rows)
+        self.recv_rows = self.pattern.recv_rows(sc, spec.tile_rows)
 
-        # --- leader-combined two-stage schedule (hierarchy only) ---
-        if spec.variant == "fence_hierarchy":
+        # --- leader-combined two-stage schedule (alltoallv hierarchy) ---
+        # Other families' fence_hierarchy is nested gathers over the
+        # (outer, inner) axes — no leader schedule to bake.
+        if spec.variant == "fence_hierarchy" and spec.collective == "alltoallv":
             self.p_outer, self.p_inner = axis_sizes
             want_perm = md.normalize_leader_perm(
                 spec.hier_leader_perm, self.p_outer, self.p_inner)
@@ -232,7 +279,10 @@ class AlltoallvPlan:
             self.hierarchy_remote_needed = self.hier_schedule.remote_needed
             self.cross_group_puts = self.hier_schedule.cross_group_puts
         else:
-            self.p_outer = self.p_inner = None
+            if spec.variant == "fence_hierarchy":
+                self.p_outer, self.p_inner = axis_sizes
+            else:
+                self.p_outer = self.p_inner = None
             self.hier_schedule = None
             self.hierarchy_remote_needed = None
             self.cross_group_puts = None
@@ -244,7 +294,8 @@ class AlltoallvPlan:
             lock_schedule=spec.lock_schedule, tile_rows=spec.tile_rows,
             pack_impl=spec.pack_impl, baked_metadata=spec.baked_metadata,
             axis_sizes=axis_sizes, codec=spec.codec,
-            hier_leader_perm=spec.hier_leader_perm or ())
+            hier_leader_perm=spec.hier_leader_perm or (),
+            collective=spec.collective)
 
         # --- window (paper: reuse while total_recv_bytes unchanged) ---
         self._window_cache = window_cache if window_cache is not None else WindowCache()
@@ -269,29 +320,32 @@ class AlltoallvPlan:
         # arithmetic remains in the compiled START program.
         # (baked_metadata=False keeps the seed's in-graph recomputation for
         # honest A/B benchmarking.)
-        if spec.variant == "fence_hierarchy":
+        if spec.variant == "fence_hierarchy" and spec.collective == "alltoallv":
             # The two-stage schedule carries its own gather/unpack tables
             # (s1 pack -> s2 slab build -> s3 scatter -> final unpack).
             self.index_tables = None
             self._table_host = self.hier_schedule.tables
         elif spec.baked_metadata and spec.variant != "ragged":
+            want_pack, want_unpack = self.pattern.table_shapes(
+                self.p, self.capacity, self.recv_rows)
             warm_tables = getattr(warm, "index_tables", None)
             if warm_tables is not None:
-                if (warm_tables.pack_src.shape != (self.p, self.p * self.capacity)
-                        or warm_tables.unpack_src.shape != (self.p, self.recv_rows)):
+                if (warm_tables.pack_src.shape != want_pack
+                        or warm_tables.unpack_src.shape != want_unpack):
                     raise WarmStartError(
                         f"baked tables {warm_tables.pack_src.shape}/"
-                        f"{warm_tables.unpack_src.shape} do not fit plan "
-                        f"(P={self.p}, C={self.capacity}, "
-                        f"recv_rows={self.recv_rows})")
+                        f"{warm_tables.unpack_src.shape} do not fit "
+                        f"{spec.collective} plan (want {want_pack}/"
+                        f"{want_unpack})")
                 tables = warm_tables
                 self.warm_loaded = True
             else:
                 INIT_STATS.bump("table_bakes")
                 with TRACER.span("index_table_bake", "init.bake",
-                                 p=self.p, variant=spec.variant):
-                    tables = md.baked_index_tables(sc, self.capacity,
-                                                   self.recv_rows)
+                                 p=self.p, variant=spec.variant,
+                                 collective=spec.collective):
+                    tables = self.pattern.bake_tables(sc, self.capacity,
+                                                      self.recv_rows)
             self.index_tables = tables
             self._table_host = (tables.pack_src, tables.pack_valid,
                                 tables.unpack_src, tables.unpack_valid)
@@ -310,10 +364,8 @@ class AlltoallvPlan:
         # one-header-read load must never page in.
         self.identity_maps = bool(
             self.index_tables is not None
-            and sc.size > 0
-            and (sc == self.capacity).all()
-            and self.send_rows == self.p * self.capacity
-            and self.recv_rows == self.p * self.capacity)
+            and self.pattern.identity_maps(sc, self.capacity,
+                                           self.send_rows, self.recv_rows))
 
         self.shard_fn = self._build_shard_fn()
         self._embedded = None
@@ -335,11 +387,13 @@ class AlltoallvPlan:
         # allocation (``TRACER.emit_span`` stores the same dict by ref).
         self._digest = self.signature.digest
         self._epoch_span_args = {"digest": self._digest,
-                                 "variant": spec.variant}
+                                 "variant": spec.variant,
+                                 "collective": spec.collective}
         if TRACER.enabled:
             TRACER.emit_span("plan_init", "init", t0, time.perf_counter(),
                              {"digest": self._digest,
                               "variant": spec.variant,
+                              "collective": spec.collective,
                               "warm": self.warm_loaded,
                               "p": self.p,
                               "codec": spec.codec})
@@ -376,6 +430,20 @@ class AlltoallvPlan:
     # -- per-shard START body --------------------------------------------------
     def _build_shard_fn(self) -> Callable:
         spec = self.spec
+        if spec.collective != "alltoallv":
+            # Pattern-owned epoch body (pack -> exchange[+reduce] -> unpack);
+            # this wrapper adds only the window write-through.
+            epoch = self.pattern.build_epoch(self)
+
+            def pattern_shard_fn(x: jax.Array, window: jax.Array,
+                                 *tables) -> jax.Array:
+                rows = tuple(t[0] for t in tables)
+                out = epoch(x, *rows)
+                rvalid = rows[3]
+                mask = rvalid.reshape(rvalid.shape + (1,) * (out.ndim - 1))
+                return jnp.where(mask, out, window)
+
+            return pattern_shard_fn
         p, cap = self.p, self.capacity
         # fence/lock over a 2-axis mesh exchange over the linearized pair.
         a2a_axis = spec.axis[0] if len(spec.axis) == 1 else tuple(spec.axis)
@@ -511,6 +579,23 @@ class AlltoallvPlan:
         if not spec.baked_metadata:
             raise ValueError("embed() requires baked_metadata=True (the "
                              "A/B in-graph mode has no tables to embed)")
+        if spec.collective != "alltoallv":
+            if self.identity_maps:
+                # Uniform tile-aligned pattern: the epoch is the bare
+                # pattern exchange — no tables ever materialize on device
+                # (the Ulysses positions gather hits this path).
+                embedded = self.pattern.build_exchange(self)
+            else:
+                epoch = self.pattern.build_epoch(self)
+                tbls = tuple(jnp.asarray(t) for t in self._table_host)
+
+                def embedded(x: jax.Array) -> jax.Array:
+                    i = self._axis_index()
+                    return epoch(x, tbls[0][i], tbls[1][i],
+                                 tbls[2][i], tbls[3][i])
+
+            self._embedded = embedded
+            return embedded
         p, cap = self.p, self.capacity
         a2a_axis = spec.axis[0] if len(spec.axis) == 1 else tuple(spec.axis)
         codec = wirecodec.get(spec.codec) if spec.codec != "identity" else None
@@ -635,7 +720,7 @@ class AlltoallvPlan:
         return embedded
 
     # -- AOT compile ----------------------------------------------------------
-    def compile(self) -> "AlltoallvPlan":
+    def compile(self) -> "ExchangePlan":
         if self._compiled is not None:
             return self
         t0 = time.perf_counter()
@@ -759,6 +844,7 @@ class AlltoallvPlan:
         row_bytes = (int(np.prod(self.spec.feature_shape)) if self.spec.feature_shape
                      else 1) * jnp.dtype(self.spec.dtype).itemsize
         return {
+            "collective": self.spec.collective,
             "variant": self.spec.variant,
             "p": self.p,
             "capacity_rows": self.capacity,
@@ -788,7 +874,7 @@ class PlanCache:
     """Signature-keyed cache of plans (persistent requests) with statistics."""
 
     def __init__(self, window_cache: WindowCache | None = None):
-        self._plans: dict[md.PatternSignature, AlltoallvPlan] = {}
+        self._plans: dict[md.PatternSignature, ExchangePlan] = {}
         # variant="auto" decisions, keyed by the pattern's auto-signature:
         # {"variant": str, "times": {candidate: seconds}}.  Cached so a
         # recurring pattern pays the measurement sweep once per process
@@ -798,8 +884,8 @@ class PlanCache:
         self.hits = 0
         self.misses = 0
 
-    def get(self, spec: AlltoallvSpec, mesh: jax.sharding.Mesh,
-            store=None) -> AlltoallvPlan:
+    def get(self, spec: ExchangeSpec, mesh: jax.sharding.Mesh,
+            store=None) -> ExchangePlan:
         """Fetch-or-build.  ``store`` (a ``repro.planstore.PlanStore``, duck-
         typed) is the disk tier behind this in-memory one: a miss here
         consults it for a warm artifact before baking, and a cold build
@@ -813,7 +899,8 @@ class PlanCache:
             pack_impl=spec.pack_impl, baked_metadata=spec.baked_metadata,
             axis_sizes=tuple(mesh.shape[a] for a in spec.axis),
             codec=spec.codec,
-            hier_leader_perm=spec.hier_leader_perm or ())
+            hier_leader_perm=spec.hier_leader_perm or (),
+            collective=spec.collective)
         plan = self._plans.get(sig)
         if plan is not None:
             self.hits += 1
@@ -821,12 +908,12 @@ class PlanCache:
         self.misses += 1
         warm = store.get(sig) if store is not None else None
         try:
-            plan = AlltoallvPlan(spec, mesh, window_cache=self.window_cache,
-                                 warm=warm)
+            plan = ExchangePlan(spec, mesh, window_cache=self.window_cache,
+                                warm=warm)
         except WarmStartError:
             # Stale-but-colliding artifact: cold INIT, never wrong tables.
             INIT_STATS.bump("store_invalid")
-            plan = AlltoallvPlan(spec, mesh, window_cache=self.window_cache)
+            plan = ExchangePlan(spec, mesh, window_cache=self.window_cache)
         if store is not None and not plan.warm_loaded:
             try:
                 store.put_plan(sig, plan)
@@ -840,3 +927,12 @@ class PlanCache:
         return {"hits": self.hits, "misses": self.misses, "live": len(self._plans),
                 "auto_choices": len(self.auto_choices),
                 "window": self.window_cache.stats}
+
+
+# Deprecated shims: the founding collective's names.  Every existing caller
+# (and isinstance check) keeps working — an ExchangeSpec defaults to
+# collective="alltoallv", so AlltoallvSpec(...) means exactly what it always
+# did and its signatures/artifacts are byte-identical to the pre-patterns
+# era.
+AlltoallvSpec = ExchangeSpec
+AlltoallvPlan = ExchangePlan

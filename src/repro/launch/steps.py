@@ -108,6 +108,7 @@ def make_train_bundle(
     rules: Optional[dict] = None,
     fsdp_threshold_bytes: float = 3 * 2**30,
     grad_compression: bool = False,
+    grad_sync: str = "default",
     hier_leader_perm=None,
 ) -> StepBundle:
     sched = sched or sched_mod.ScheduleConfig()
@@ -148,12 +149,20 @@ def make_train_bundle(
         # Compressed DP gradient sync runs at TP-only sharding (every leaf
         # DP-replicated) so the int8 mean-reduce over the data axes sees
         # whole replicas; clip + AdamW then constrain back to the ZeRO
-        # shardings as before.
-        comp_sync = None
-        if grad_compression:
+        # shardings as before.  grad_sync="persistent_rs" swaps the DP wire
+        # for the plan-backed RS+AG pair (train/grad.py), composing with
+        # the error-feedback int8 path when grad_compression is also on.
+        if grad_sync not in ("default", "persistent_rs"):
+            raise ValueError(f"unknown grad_sync {grad_sync!r}")
+        comp_sync = rs_sync = None
+        if grad_sync == "persistent_rs" or grad_compression:
             from repro.parallel.sharding import specs_to_pspecs
-            comp_sync = grad_util.compressed_sync(
-                mesh, specs_to_pspecs(logical_specs, params_abs), dp_axes)
+            pspecs = specs_to_pspecs(logical_specs, params_abs)
+            if grad_sync == "persistent_rs":
+                rs_sync = grad_util.persistent_rs_sync(
+                    mesh, pspecs, dp_axes, error_feedback=grad_compression)
+            else:
+                comp_sync = grad_util.compressed_sync(mesh, pspecs, dp_axes)
 
         def train_step(params, opt_state, batch, step):
             lr = sched_mod.lr_at(sched, step)
@@ -168,13 +177,20 @@ def make_train_bundle(
 
             loss, metrics, grads = grad_util.accumulate_grads(
                 loss_fn, params, batch, n_micro, constrain=constrain)
+            new_err = None
             if comp_sync is not None:
                 grads, new_err = comp_sync(grads, opt_state["grad_err"])
+                grads = constrain(grads)
+            elif rs_sync is not None:
+                if grad_compression:
+                    grads, new_err = rs_sync(grads, opt_state["grad_err"])
+                else:
+                    grads = rs_sync(grads)
                 grads = constrain(grads)
             grads, gn = grad_util.clip_by_global_norm(grads, clip_norm)
             new_params, new_opt = opt_mod.adamw_update(grads, opt_state,
                                                        params, lr, adamw)
-            if comp_sync is not None:
+            if new_err is not None:
                 # adamw_update rebuilds the state dict from its own keys;
                 # re-attach the fresh EF residual so it checkpoints with
                 # the rest of the optimizer state.
@@ -199,6 +215,7 @@ def make_train_bundle(
               "batch_shardings": batch_sh, "logical_specs": logical_specs,
               "sched": sched, "adamw": adamw,
               "grad_compression": grad_compression,
+              "grad_sync": grad_sync,
               # Everything needed to rebuild this bundle mid-run (online
               # re-plan, device-loss recovery): make_train_bundle(cfg,
               # shape, mesh, **bundle_kwargs) reproduces it.
@@ -208,6 +225,7 @@ def make_train_bundle(
                                 "rules": rules,
                                 "fsdp_threshold_bytes": fsdp_threshold_bytes,
                                 "grad_compression": grad_compression,
+                                "grad_sync": grad_sync,
                                 "hier_leader_perm": hier_leader_perm}},
     )
 

@@ -50,6 +50,14 @@ def main(argv=None) -> dict:
                    help="int8 + error-feedback data-parallel gradient sync "
                         "(parallel.compression); the EF residual rides in "
                         "the optimizer state and checkpoints with it")
+    p.add_argument("--grad-sync", default="default",
+                   choices=["default", "persistent_rs"],
+                   help="data-parallel gradient sync wire: 'persistent_rs' "
+                        "rides a persistent reduce-scatter + allgatherv "
+                        "plan pair (train.grad.persistent_rs_sync) that "
+                        "warm-starts from --plan-store; composes with "
+                        "--grad-compression (the int8+EF payload rides the "
+                        "plan wire)")
     p.add_argument("--rules", default="default",
                    choices=["default", "long_context", "decode", "pure_dp",
                             "hier_ep"],
@@ -203,7 +211,8 @@ def main(argv=None) -> dict:
         return steps_mod.make_train_bundle(
             cfg, shape, mesh, sched=sched, zero1=not args.no_zero1,
             n_micro=args.micro, rules=RULE_PROFILES[args.rules],
-            grad_compression=args.grad_compression)
+            grad_compression=args.grad_compression,
+            grad_sync=args.grad_sync)
 
     if args.elastic:
         from repro.ckpt.reshard import mesh_axis_sizes

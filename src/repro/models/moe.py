@@ -500,6 +500,16 @@ def _a2a_shard_body(tokens, router_w, w_gate, w_up, w_down,
     y_chunk = out_entries.reshape(t_loc, plan.top_k, d).sum(axis=1)
 
     if axis:
+        # Gather-then-slice is the minimal form here, not an oversight: the
+        # slice bound t_have IS host-static (token shapes are trace-time
+        # constants), but XLA collectives move uniform per-rank shapes, so
+        # any "gather only t_have rows" schedule still ships a full
+        # t_loc-row bucket from every rank — an allgatherv plan with ragged
+        # tail counts would set capacity = max(counts) = t_loc and
+        # re-materialize the same [EP * t_loc] wire buffer inside unpack.
+        # The spill is < EP rows of routing padding, truncated before any
+        # consumer sees it.  Semantics pinned by the moe_ragged_tail_combine
+        # dist case.
         y = jax.lax.all_gather(y_chunk, axis, axis=0, tiled=True)[:t_have]
     else:
         y = y_chunk[:t_have]

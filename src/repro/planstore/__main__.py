@@ -4,6 +4,8 @@
     python -m repro.planstore purge      (--dir DIR | --store URL)
     python -m repro.planstore warm-check (--dir DIR | --store URL)
                                          [--devices 8] [--assert-warm]
+                                         [--collective alltoallv|allgatherv
+                                                      |reduce_scatter]
     python -m repro.planstore prewarm    --store URL
                                          [--from-dryrun PATH ...]
                                          [--profile arch:shape:DxD[:rules] ...]
@@ -16,7 +18,9 @@ see ``planstore.parse_store_url``).
 
 ``warm-check`` runs one ``variant="auto"`` INIT of a canonical skewed
 pattern on a grouped host-device mesh against the store and prints the
-``init_stats`` counters as JSON.  The first invocation against an empty
+``init_stats`` counters as JSON.  ``--collective`` picks the exchange
+family (default alltoallv); gatherv/reduce-scatter artifacts are keyed
+separately in the store, so CI warm-checks each family it deploys.  The first invocation against an empty
 store is cold (it measures, bakes, and populates); any later invocation is
 warm.  ``--assert-warm`` turns the warm contract into an exit code: zero
 autotune measurement bursts and zero host-side table bakes, or failure —
@@ -79,14 +83,19 @@ def _cmd_purge(args) -> int:
     return 0
 
 
-def _warm_check_pattern(p: int):
-    """Canonical skewed pattern: dense-ish with one hot receiver — exercises
-    all three candidate variants (and their baked tables) meaningfully."""
+def _warm_check_pattern(collective: str, p: int):
+    """Canonical skewed pattern per family: dense-ish with one hot rank —
+    exercises every candidate variant (and its baked tables) meaningfully,
+    and stays off the uniform identity fast path."""
     import numpy as np
 
     rng = np.random.default_rng(42)
-    counts = rng.integers(4, 24, size=(p, p)).astype(np.int64)
-    counts[:, 0] += 40          # receiver skew: lock's worst case
+    if collective == "alltoallv":
+        counts = rng.integers(4, 24, size=(p, p)).astype(np.int64)
+        counts[:, 0] += 40      # receiver skew: lock's worst case
+        return counts
+    counts = rng.integers(4, 24, p).astype(np.int64)
+    counts[0] += 40             # hot contributor / hot destination
     return counts
 
 
@@ -99,24 +108,25 @@ def _cmd_warm_check(args) -> int:
     import jax.numpy as jnp
     from jax.sharding import NamedSharding  # noqa: F401  (jax init)
 
-    from repro.core import PlanCache, alltoallv_init, init_stats, reset_init_stats
+    from repro.core import PlanCache, exchange_init, init_stats, reset_init_stats
     from repro.launch.mesh import make_mesh
 
     p = args.devices
     if p % 2:
         raise SystemExit("warm-check needs an even device count")
-    counts = _warm_check_pattern(p)
+    counts = _warm_check_pattern(args.collective, p)
     mesh = make_mesh((2, p // 2), ("o", "i"))
     store = _open_store(args)
 
     reset_init_stats()
-    plan = alltoallv_init(counts, (16,), jnp.float32, mesh, axis=("o", "i"),
-                          variant="auto", cache=PlanCache(), store=store,
-                          autotune_iters=args.iters)
+    plan = exchange_init(args.collective, counts, (16,), jnp.float32, mesh,
+                         axis=("o", "i"), variant="auto", cache=PlanCache(),
+                         store=store, autotune_iters=args.iters)
     stats = init_stats()
     warm = stats["autotune_bursts"] == 0 and stats["table_bakes"] == 0
     report = {
         "warm": warm,
+        "collective": plan.spec.collective,
         "chosen_variant": plan.spec.variant,
         "auto_times": getattr(plan, "auto_choice", {}).get("times"),
         "init_stats": stats,
@@ -205,6 +215,10 @@ def main(argv=None) -> int:
             sp.add_argument("--iters", type=int, default=6,
                             help="autotune iterations when cold")
             sp.add_argument("--assert-warm", action="store_true")
+            sp.add_argument("--collective", default="alltoallv",
+                            choices=("alltoallv", "allgatherv",
+                                     "reduce_scatter"),
+                            help="exchange family to warm-check")
         if name == "prewarm":
             sp.add_argument("--from-dryrun", action="append", metavar="PATH",
                             help="dryrun cell JSON file or directory of them "

@@ -29,10 +29,13 @@ import sys
 from typing import Iterable
 
 #: Record field order is irrelevant; this canonical form keys deduplication.
-_REQ_FIELDS = ("send_counts", "feature_shape", "dtype", "axis", "axis_sizes",
-               "variant", "lock_schedule", "tile_rows", "pack_impl",
-               "baked_metadata", "embeddable", "codec", "error_tol",
-               "hier_leader_perm")
+#: ``collective`` is absent from pre-refactor captures; ``request_key``'s
+#: ``req.get`` treats that as None, distinct from explicit "alltoallv" only
+#: in the dedup key (harmless: both replay identically).
+_REQ_FIELDS = ("collective", "send_counts", "feature_shape", "dtype", "axis",
+               "axis_sizes", "variant", "lock_schedule", "tile_rows",
+               "pack_impl", "baked_metadata", "embeddable", "codec",
+               "error_tol", "hier_leader_perm")
 
 
 def request_key(req: dict) -> str:
@@ -104,7 +107,7 @@ def replay_request(req: dict, store, cache=None,
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.core import PlanCache, alltoallv_init
+    from repro.core import PlanCache, exchange_init
     from repro.launch.mesh import make_mesh
 
     sizes = tuple(int(s) for s in req["axis_sizes"])
@@ -116,7 +119,8 @@ def replay_request(req: dict, store, cache=None,
         return {"skipped": f"needs {need} devices, have {avail}",
                 "axis_sizes": list(sizes), "variant": req["variant"]}
     mesh = make_mesh(sizes, tuple(req["axis"]))
-    plan = alltoallv_init(
+    plan = exchange_init(
+        req.get("collective", "alltoallv"),    # pre-refactor captures
         np.asarray(req["send_counts"], np.int64),
         tuple(req["feature_shape"]),
         jnp.dtype(req["dtype"]),
@@ -137,6 +141,7 @@ def replay_request(req: dict, store, cache=None,
         hier_leader_perm=req.get("hier_leader_perm"),
     )
     row = {"digest": plan.signature.digest,
+           "collective": plan.spec.collective,
            "variant": plan.spec.variant,
            "codec": plan.spec.codec,
            "requested_variant": req["variant"],

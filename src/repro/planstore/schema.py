@@ -42,6 +42,12 @@ from repro.core import metadata as md
 # (PatternSignature.hier_leader_perm / HierSchedule.leader_perm) — a
 # rebaked-leadership schedule must never warm a round-robin INIT or vice
 # versa.  Same upgrade rule: old entries become clean misses.
+# v3 (additive, no version bump): signature_meta carries the collective
+# family (PatternSignature.collective).  Alltoallv — the only collective
+# that existed before — hashes identically (the signature digest skips the
+# field at its default) and older entries lacking the key are normalized to
+# "alltoallv" on read, so every pre-existing artifact stays a warm hit;
+# allgatherv / reduce_scatter entries key and validate on the new field.
 SCHEMA_VERSION = 3
 
 
@@ -103,6 +109,7 @@ def signature_meta(sig: "md.PatternSignature") -> dict:
         "axis_sizes": [int(s) for s in sig.axis_sizes],
         "codec": sig.codec,
         "hier_leader_perm": [list(row) for row in sig.hier_leader_perm],
+        "collective": sig.collective,
     }
 
 
@@ -168,12 +175,17 @@ class PlanArtifact:
                 f"backend {self.backend!r} != {want_backend!r}")
         want = signature_meta(sig)
         got = dict(self.signature)
+        # Entries written before the collective field existed are all
+        # alltoallv by construction — normalize instead of invalidating the
+        # whole deployed store on upgrade.
+        got.setdefault("collective", "alltoallv")
         if got != want:
             raise ArtifactError(f"signature mismatch: {got} != {want}")
 
     def summary(self) -> dict:
         return {
             "digest": self.signature.get("digest"),
+            "collective": self.signature.get("collective", "alltoallv"),
             "variant": self.signature.get("variant"),
             "p": self.signature.get("p"),
             "axis_sizes": self.signature.get("axis_sizes"),

@@ -311,6 +311,49 @@ def moe_dispatch_distributed():
                                    rtol=2e-4, atol=2e-5)
 
 
+@case
+def moe_ragged_tail_combine():
+    """Pin the post-combine gather-then-slice semantics (moe.py): when the
+    per-shard token count is NOT divisible by the EP size, the EP chunks
+    carry trailing routing padding and the combine all_gather truncates it
+    with a host-static slice.  125 tokens/shard over ep=4 -> t_loc=32,
+    3 pad rows; every dispatch path must agree."""
+    import dataclasses
+
+    from repro.configs.base import MoEConfig
+    from repro.launch.mesh import make_mesh
+    from repro.models import moe as moe_mod
+    from repro.parallel.sharding import DEFAULT_RULES, ParamFactory, axis_rules
+
+    mesh = make_mesh((2, 4), ("data", "model"))
+    d_model, tokens = 64, 250                 # 125/shard, not divisible by 4
+    base = MoEConfig(n_experts=8, top_k=2, d_expert=32, capacity_factor=8.0)
+    with axis_rules(DEFAULT_RULES, mesh):
+        f = ParamFactory(jax.random.key(0), jnp.float32)
+        moe_mod.init_moe(f.scope("moe"), d_model, base)
+        params = f.params["moe"]
+        x = jax.device_put(
+            jnp.asarray(np.random.default_rng(0).standard_normal(
+                (2, tokens // 2, d_model)), jnp.float32),
+            NamedSharding(mesh, P("data", None, None)))
+        outs = {}
+        for dispatch in ("gspmd", "persistent_a2a", "nonpersistent_a2a"):
+            mcfg = dataclasses.replace(base, dispatch=dispatch)
+            plan = moe_mod.MoEDispatchPlan.build(mcfg, tokens // 2, mesh,
+                                                 d_model=d_model,
+                                                 dtype=jnp.float32)
+            assert plan.ep_size * plan.tokens_per_shard > tokens // 2, \
+                "case must exercise a ragged tail (EP chunks carry padding)"
+            y, aux = jax.jit(lambda xx, m=mcfg, pl=plan:
+                             moe_mod.apply_moe(params, xx, m, pl))(x)
+            outs[dispatch] = np.asarray(y)
+        np.testing.assert_allclose(outs["persistent_a2a"], outs["gspmd"],
+                                   rtol=2e-4, atol=2e-5)
+        np.testing.assert_allclose(outs["persistent_a2a"],
+                                   outs["nonpersistent_a2a"],
+                                   rtol=2e-4, atol=2e-5)
+
+
 def _routed_moe_setup(pattern, d_model, tokens, n_experts, seed=0):
     """MoE params + inputs whose *routing* follows a controlled pattern.
 
@@ -610,20 +653,175 @@ def hierarchical_psum():
         return hierarchical_psum_mean(t, inner_axis="data", outer_axis="pod",
                                       scatter_dim=1)
 
+    def hier_plan(t):
+        # the plan-backed RS+AG pair (persistent plans over "data")
+        return hierarchical_psum_mean(t, inner_axis="data", outer_axis="pod",
+                                      scatter_dim=1, mesh=mesh)
+
     def flat(t):
         return flat_psum_mean(t, ("pod", "data"))
 
     fh = jax.jit(shard_map(hier, mesh=mesh, in_specs=P(("pod", "data")),
                                out_specs=P(("pod", "data")), check_vma=False))
+    fp = jax.jit(shard_map(hier_plan, mesh=mesh, in_specs=P(("pod", "data")),
+                               out_specs=P(("pod", "data")), check_vma=False))
     ff = jax.jit(shard_map(flat, mesh=mesh, in_specs=P(("pod", "data")),
                                out_specs=P(("pod", "data")), check_vma=False))
     np.testing.assert_allclose(np.asarray(fh(xs)), np.asarray(ff(xs)),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(fp(xs)), np.asarray(ff(xs)),
                                rtol=1e-5, atol=1e-6)
     # the hierarchical schedule really reduce-scatters: check HLO
     txt = jax.jit(shard_map(hier, mesh=mesh, in_specs=P(("pod", "data")),
                                 out_specs=P(("pod", "data")),
                                 check_vma=False)).lower(xs).compile().as_text()
     assert "reduce-scatter" in txt or "all-to-all" in txt
+
+
+@case
+def allgatherv_plan_parity():
+    """Plan-backed allgatherv (fence / lock / fence_hierarchy) vs the
+    pattern's numpy oracle on ragged counts (one empty rank, one hot
+    rank), on both the flat and the (2, p//2) grouped mesh."""
+    from repro.core import allgatherv_init, metadata as md, patterns
+    from repro.launch.mesh import make_host_mesh, make_mesh
+
+    p = len(jax.devices())
+    pat = patterns.get("allgatherv")
+    counts = np.asarray([0, 29] + [7] * (p - 2), np.int64)[:p]
+    sc = pat.expand_counts(counts)
+    send_rows = pat.send_rows(sc, md.TILE_ROWS)
+    recv_rows = pat.recv_rows(sc, md.TILE_ROWS)
+    rng = np.random.default_rng(11)
+    bufs = np.zeros((p, send_rows, 4), np.float32)
+    for i in range(p):
+        bufs[i, : counts[i]] = rng.standard_normal((counts[i], 4))
+    expect = pat.reference(bufs, counts, recv_rows)
+    n = int(counts.sum())
+
+    mesh = make_host_mesh(p)
+    x = jax.device_put(jnp.asarray(bufs.reshape(p * send_rows, 4)),
+                       NamedSharding(mesh, P("x")))
+    for variant in ("fence", "lock"):
+        plan = allgatherv_init(counts, (4,), jnp.float32, mesh, axis="x",
+                               variant=variant)
+        assert plan.spec.collective == "allgatherv"
+        got = np.asarray(plan.wait(plan.start(x))).reshape(p, recv_rows, 4)
+        np.testing.assert_array_equal(got[:, :n], expect[:, :n])
+
+    if p % 2 == 0:
+        mesh2 = make_mesh((2, p // 2), ("o", "i"))
+        x2 = jax.device_put(jnp.asarray(bufs.reshape(p * send_rows, 4)),
+                            NamedSharding(mesh2, P(("o", "i"))))
+        plan = allgatherv_init(counts, (4,), jnp.float32, mesh2,
+                               axis=("o", "i"), variant="fence_hierarchy")
+        got = np.asarray(plan.wait(plan.start(x2))).reshape(p, recv_rows, 4)
+        np.testing.assert_array_equal(got[:, :n], expect[:, :n])
+    print("allgatherv plan parity: ok")
+
+
+@case
+def reduce_scatter_grad_parity():
+    """Plan-backed reduce-scatter vs ``jax.lax.psum_scatter`` — BIT
+    comparison on integer-valued float payloads (order-independent sums),
+    plus an exact ragged-counts check against the pattern oracle."""
+    from repro.core import metadata as md, patterns, reduce_scatter_init
+    from repro.launch.mesh import make_host_mesh
+
+    p = len(jax.devices())
+    pat = patterns.get("reduce_scatter")
+    mesh = make_host_mesh(p)
+    rng = np.random.default_rng(7)
+
+    # --- uniform tile-aligned counts: bit-compare vs lax.psum_scatter ----
+    c = 2 * md.TILE_ROWS
+    bufs = rng.integers(-64, 64, (p, p * c, 4)).astype(np.float32)
+    x = jax.device_put(jnp.asarray(bufs.reshape(p * p * c, 4)),
+                       NamedSharding(mesh, P("x")))
+    for variant in ("fence", "lock"):
+        plan = reduce_scatter_init(np.full(p, c, np.int64), (4,), jnp.float32,
+                                   mesh, axis="x", variant=variant)
+        assert plan.spec.collective == "reduce_scatter"
+        got = np.asarray(plan.wait(plan.start(x)))
+
+        def ps(t):
+            return jax.lax.psum_scatter(t, "x", scatter_dimension=0,
+                                        tiled=True)
+
+        ref = np.asarray(jax.jit(shard_map(
+            ps, mesh=mesh, in_specs=P("x"), out_specs=P("x"),
+            check_vma=False))(x))
+        np.testing.assert_array_equal(got, ref)   # bitwise: integer floats
+
+    # --- ragged counts: exact vs the pattern's numpy oracle --------------
+    counts = np.asarray([5, 0, 21] + [9] * (p - 3), np.int64)[:p]
+    sc = pat.expand_counts(counts)
+    send_rows = pat.send_rows(sc, md.TILE_ROWS)
+    recv_rows = pat.recv_rows(sc, md.TILE_ROWS)
+    bufs = np.zeros((p, send_rows, 4), np.float32)
+    tot = int(counts.sum())
+    bufs[:, :tot] = rng.integers(-32, 32, (p, tot, 4)).astype(np.float32)
+    expect = pat.reference(bufs, counts, recv_rows)
+    x = jax.device_put(jnp.asarray(bufs.reshape(p * send_rows, 4)),
+                       NamedSharding(mesh, P("x")))
+    plan = reduce_scatter_init(counts, (4,), jnp.float32, mesh, axis="x")
+    got = np.asarray(plan.wait(plan.start(x))).reshape(p, recv_rows, 4)
+    for j in range(p):
+        np.testing.assert_array_equal(got[j, : counts[j]],
+                                      expect[j, : counts[j]])
+    print("reduce-scatter grad parity: ok")
+
+
+@case
+def gatherv_planstore_warm_start():
+    """A second process (fresh cache, same store dir) building the same
+    allgatherv plan performs zero autotune bursts and zero table bakes —
+    the collective-keyed artifact round-trips through the store."""
+    import tempfile
+
+    from repro.core import INIT_STATS, PlanCache, allgatherv_init, \
+        metadata as md, patterns
+    from repro.launch.mesh import make_host_mesh
+    from repro.planstore import PlanStore
+
+    p = len(jax.devices())
+    pat = patterns.get("allgatherv")
+    counts = np.asarray([3, 17] + [11] * (p - 2), np.int64)[:p]  # non-identity
+    sc = pat.expand_counts(counts)
+    send_rows = pat.send_rows(sc, md.TILE_ROWS)
+    recv_rows = pat.recv_rows(sc, md.TILE_ROWS)
+    rng = np.random.default_rng(23)
+    bufs = np.zeros((p, send_rows, 4), np.float32)
+    for i in range(p):
+        bufs[i, : counts[i]] = rng.standard_normal((counts[i], 4))
+    expect = pat.reference(bufs, counts, recv_rows)
+    n = int(counts.sum())
+    mesh = make_host_mesh(p)
+    x = jax.device_put(jnp.asarray(bufs.reshape(p * send_rows, 4)),
+                       NamedSharding(mesh, P("x")))
+
+    with tempfile.TemporaryDirectory() as d:
+        INIT_STATS.reset()
+        plan = allgatherv_init(counts, (4,), jnp.float32, mesh, axis="x",
+                               variant="auto", cache=PlanCache(),
+                               store=PlanStore(d), autotune_iters=4)
+        assert INIT_STATS.table_bakes > 0 and INIT_STATS.autotune_bursts > 0
+        assert INIT_STATS.store_puts > 0 and INIT_STATS.warm_inits == 0
+        assert plan.signature.collective == "allgatherv"
+        got = np.asarray(plan.wait(plan.start(x))).reshape(p, recv_rows, 4)
+        np.testing.assert_array_equal(got[:, :n], expect[:, :n])
+
+        INIT_STATS.reset()
+        plan2 = allgatherv_init(counts, (4,), jnp.float32, mesh, axis="x",
+                                variant="auto", cache=PlanCache(),
+                                store=PlanStore(d), autotune_iters=4)
+        assert INIT_STATS.autotune_bursts == 0, INIT_STATS.as_dict()
+        assert INIT_STATS.table_bakes == 0, INIT_STATS.as_dict()
+        assert INIT_STATS.warm_inits >= 1 and INIT_STATS.store_hits >= 1
+        assert plan2.warm_loaded and plan2.spec.variant == plan.spec.variant
+        got2 = np.asarray(plan2.wait(plan2.start(x))).reshape(p, recv_rows, 4)
+        np.testing.assert_array_equal(got2[:, :n], expect[:, :n])
+    print("gatherv planstore warm-start:", INIT_STATS.as_dict())
 
 
 def _banded_counts(p, width=1, base=11, seed=3):

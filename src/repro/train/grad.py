@@ -51,6 +51,96 @@ def compressed_sync(mesh, specs, dp_axes):
                      out_specs=(specs, specs), check_vma=False)
 
 
+def persistent_rs_sync(mesh, specs, dp_axes, error_feedback: bool = False):
+    """Plan-backed DP gradient sync (``grad_sync="persistent_rs"``).
+
+    Same contract and sharding story as ``compressed_sync`` — a shard_map
+    over the full mesh at the TP-only ``specs`` (every leaf DP-replicated)
+    — but the DP wire is the persistent-plan engine instead of a bare
+    psum: the leaf shards flatten into one fp32 row buffer, a persistent
+    reduce-scatter plan sums it across the DP replicas (counts frozen by
+    the parameter geometry, so INIT warm-starts from the plan store and a
+    second process pays zero bakes), the matching allgatherv plan — the
+    identity fast path, counts are uniform tile-aligned — gathers the
+    1/P shard back, and the mean follows.  That is the Rabenseifner
+    RS+AG decomposition of the all-reduce, riding the same baked plans
+    MoE dispatch and Ulysses use.  Replicas hold identical grads
+    (autodiff already mean-reduced the loss), so the sync is
+    value-preserving — what changes is what crosses the wire.
+
+    ``error_feedback=True`` composes with the int8 path: each leaf is
+    quantized with the carried residual folded in (``compression``'s EF
+    arithmetic) and the *dequantized* payload rides the plan wire.
+    Returns ``sync(grads, err) -> (grads, new_err)`` with error feedback,
+    ``sync(grads) -> grads`` without.
+
+    ``dp_axes`` absent from the mesh (or size 1) drop out; with none left
+    the exchange is skipped and the sync degenerates to the same local
+    quantize+EF pass (or the identity) as ``compressed_sync``.
+    """
+    import numpy as np
+
+    from repro.compat import shard_map
+    from repro.core import allgatherv_init, metadata as md, reduce_scatter_init
+    from repro.parallel import compression
+
+    dp = tuple(a for a in dp_axes
+               if a in mesh.axis_names and int(mesh.shape[a]) > 1)
+    n_dp = 1
+    for a in dp:
+        n_dp *= int(mesh.shape[a])
+    axis = dp[0] if len(dp) == 1 else dp
+
+    def _wire(leaves):
+        """flatten -> plan-RS -> plan-AG -> mean -> unflatten (fp32)."""
+        flat = (jnp.concatenate([l.reshape(-1) for l in leaves])
+                if len(leaves) > 1 else leaves[0].reshape(-1))
+        n = flat.shape[0]
+        if n_dp > 1 and n:
+            cap = md.round_up(-(-n // n_dp), md.TILE_ROWS)
+            counts = np.full(n_dp, cap, np.int64)
+            rs = reduce_scatter_init(counts, (), jnp.float32, mesh,
+                                     axis=axis, embeddable=True)
+            ag = allgatherv_init(counts, (), jnp.float32, mesh,
+                                 axis=axis, embeddable=True)
+            padded = jnp.zeros((n_dp * cap,), jnp.float32).at[:n].set(flat)
+            shard = rs.embed()(padded)
+            flat = ag.embed()(shard)[:n] / n_dp
+        out, off = [], 0
+        for l in leaves:
+            out.append(jax.lax.dynamic_slice_in_dim(
+                flat, off, l.size).reshape(l.shape))
+            off += l.size
+        return out
+
+    if error_feedback:
+        def body(g, e):
+            leaves, treedef = jax.tree.flatten(g)
+            wire, new_err = [], []
+            for x, err in zip(leaves, jax.tree.leaves(e)):
+                carry = x.astype(jnp.float32) + err.astype(jnp.float32)
+                q, scale = compression.quantize_int8(carry)
+                deq = compression.dequantize_int8(q, scale)
+                wire.append(deq)
+                new_err.append((carry - deq).astype(err.dtype))
+            synced = _wire(wire)
+            out = [s.astype(x.dtype) for s, x in zip(synced, leaves)]
+            return (jax.tree.unflatten(treedef, out),
+                    jax.tree.unflatten(treedef, new_err))
+
+        return shard_map(body, mesh=mesh, in_specs=(specs, specs),
+                         out_specs=(specs, specs), check_vma=False)
+
+    def body(g):
+        leaves, treedef = jax.tree.flatten(g)
+        synced = _wire([l.astype(jnp.float32) for l in leaves])
+        out = [s.astype(l.dtype) for s, l in zip(synced, leaves)]
+        return jax.tree.unflatten(treedef, out)
+
+    return shard_map(body, mesh=mesh, in_specs=(specs,), out_specs=specs,
+                     check_vma=False)
+
+
 def accumulate_grads(loss_fn, params, batch, n_micro: int, constrain=None):
     """Split the batch into n_micro slices along dim 0 and scan-accumulate.
 

@@ -128,6 +128,22 @@ def test_hierarchical_psum(dist):
     dist("hierarchical_psum", devices=8)
 
 
+def test_allgatherv_plan_parity(dist):
+    dist("allgatherv_plan_parity", devices=8)
+
+
+def test_reduce_scatter_grad_parity(dist):
+    dist("reduce_scatter_grad_parity", devices=8)
+
+
+def test_gatherv_planstore_warm_start(dist):
+    dist("gatherv_planstore_warm_start", devices=8)
+
+
+def test_moe_ragged_tail_combine(dist):
+    dist("moe_ragged_tail_combine", devices=8)
+
+
 def test_replan_hot_swap(dist):
     dist("replan_hot_swap", devices=8, timeout=1800)
 

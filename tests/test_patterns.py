@@ -1,0 +1,175 @@
+"""Property tests for the collective-agnostic exchange patterns.
+
+Pure numpy: the baked pack/unpack tables of ``AllgathervPattern`` and
+``ReduceScatterPattern`` are driven through a host-side simulation of the
+wire (pack -> bucket exchange -> unpack, the reduction fused into unpack
+for reduce-scatter) and compared against each pattern's own numpy oracle,
+over dense / ragged / skewed count vectors at every mesh cardinality the
+dist suites use ((2,4) and (4,2) both linearize to p=8; plus p=4, p=2).
+"""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, strategies as st
+
+from repro.core import metadata as md, patterns
+from repro.core.plan import ExchangeSpec
+
+
+def _counts(kind: str, p: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed + p)
+    if kind == "dense":
+        return rng.integers(16, 40, p)
+    if kind == "ragged":
+        c = rng.integers(0, 30, p)
+        c[rng.integers(0, p)] = 0              # force at least one empty rank
+        return c
+    if kind == "skewed":
+        c = rng.integers(1, 6, p)
+        c[0] = 200                              # hot rank
+        return c
+    raise ValueError(kind)
+
+
+def _simulate_allgatherv(counts, feature=(3,), tile=md.TILE_ROWS):
+    """Host-side replay of the gatherv epoch off the baked tables."""
+    pat = patterns.get("allgatherv")
+    sc = pat.expand_counts(counts)
+    p = sc.shape[0]
+    send_rows = pat.send_rows(sc, tile)
+    recv_rows = pat.recv_rows(sc, tile)
+    cap = send_rows                             # gatherv: one bucket
+    t = pat.bake_tables(sc, cap, recv_rows)
+    rng = np.random.default_rng(1)
+    bufs = rng.standard_normal((p, send_rows) + feature).astype(np.float32)
+
+    own = np.where(t.pack_valid[..., None], bufs[np.arange(p)[:, None],
+                                                 t.pack_src], 0.0)
+    buckets = own.reshape((p * cap,) + feature)          # the all_gather wire
+    out = np.where(t.unpack_valid[..., None],
+                   buckets[t.unpack_src], 0.0)           # [p, recv_rows, F]
+    want = pat.reference(bufs, counts, recv_rows)
+    return out, want, (sc, cap, send_rows, recv_rows)
+
+
+def _simulate_reduce_scatter(counts, feature=(3,), tile=md.TILE_ROWS):
+    """Host-side replay of the RS epoch: the sum is fused into unpack."""
+    pat = patterns.get("reduce_scatter")
+    sc = pat.expand_counts(counts)
+    p = sc.shape[0]
+    send_rows = pat.send_rows(sc, tile)
+    recv_rows = pat.recv_rows(sc, tile)
+    cap = recv_rows                             # RS: one reduced bucket out
+    t = pat.bake_tables(sc, cap, recv_rows)
+    rng = np.random.default_rng(2)
+    bufs = rng.standard_normal((p, send_rows) + feature).astype(np.float32)
+
+    packed = np.where(t.pack_valid[..., None], bufs[np.arange(p)[:, None],
+                                                    t.pack_src], 0.0)
+    packed = packed.reshape((p, p, cap) + feature)       # [src, dst, cap, F]
+    moved = packed.sum(axis=0)                           # fused reduction
+    out = np.where(t.unpack_valid[..., None],
+                   moved[np.arange(p)[:, None], t.unpack_src], 0.0)
+    want = pat.reference(bufs, counts, recv_rows)
+    return out, want, (sc, cap, send_rows, recv_rows)
+
+
+@pytest.mark.parametrize("p", [2, 4, 8])        # 8 covers (2,4) and (4,2)
+@pytest.mark.parametrize("kind", ["dense", "ragged", "skewed"])
+def test_allgatherv_tables_roundtrip(kind, p):
+    out, want, _ = _simulate_allgatherv(_counts(kind, p))
+    np.testing.assert_array_equal(out, want)
+
+
+@pytest.mark.parametrize("p", [2, 4, 8])
+@pytest.mark.parametrize("kind", ["dense", "ragged", "skewed"])
+def test_reduce_scatter_tables_roundtrip(kind, p):
+    out, want, _ = _simulate_reduce_scatter(_counts(kind, p))
+    np.testing.assert_allclose(out, want, rtol=1e-6, atol=1e-6)
+
+
+count_vectors = st.integers(2, 9).flatmap(
+    lambda p: st.lists(st.integers(0, 40), min_size=p, max_size=p)
+    .map(np.array))
+
+
+@given(count_vectors)
+def test_allgatherv_roundtrip_property(counts):
+    out, want, _ = _simulate_allgatherv(counts)
+    np.testing.assert_array_equal(out, want)
+
+
+@given(count_vectors)
+def test_reduce_scatter_roundtrip_property(counts):
+    out, want, _ = _simulate_reduce_scatter(counts)
+    np.testing.assert_allclose(out, want, rtol=1e-6, atol=1e-6)
+
+
+@given(count_vectors)
+def test_expanded_matrices_validate_and_conserve(counts):
+    """expand_counts output passes the family's own structural validation
+    and conserves totals: gatherv ships each contribution once per rank,
+    RS receives exactly the per-destination totals."""
+    ag = patterns.get("allgatherv")
+    rs = patterns.get("reduce_scatter")
+    m_ag, m_rs = ag.expand_counts(counts), rs.expand_counts(counts)
+    ag.validate_matrix(m_ag)
+    rs.validate_matrix(m_rs)
+    p = len(counts)
+    np.testing.assert_array_equal(m_ag, np.asarray(counts)[:, None] * np.ones((1, p), np.int64))
+    np.testing.assert_array_equal(m_rs, np.ones((p, 1), np.int64) * np.asarray(counts)[None, :])
+    # recv side: every gatherv rank receives the full concat; every RS rank
+    # receives its own block from each source
+    np.testing.assert_array_equal(md.recv_counts(m_ag).sum(axis=1),
+                                  np.full(p, np.sum(counts)))
+    np.testing.assert_array_equal(md.recv_counts(m_rs),
+                                  np.asarray(counts)[:, None] * np.ones((1, p), np.int64))
+
+
+def test_identity_detection_uniform_tile_aligned():
+    p, c = 4, 2 * md.TILE_ROWS
+    counts = np.full(p, c)
+    ag = patterns.get("allgatherv")
+    rs = patterns.get("reduce_scatter")
+    sc_ag, sc_rs = ag.expand_counts(counts), rs.expand_counts(counts)
+    assert ag.identity_maps(sc_ag, c, ag.send_rows(sc_ag, md.TILE_ROWS),
+                            ag.recv_rows(sc_ag, md.TILE_ROWS))
+    assert rs.identity_maps(sc_rs, c, rs.send_rows(sc_rs, md.TILE_ROWS),
+                            rs.recv_rows(sc_rs, md.TILE_ROWS))
+    ragged = counts.copy()
+    ragged[1] -= 3
+    sc_r = ag.expand_counts(ragged)
+    cap = md.global_capacity(sc_r, md.TILE_ROWS)
+    assert not ag.identity_maps(sc_r, cap, ag.send_rows(sc_r, md.TILE_ROWS),
+                                ag.recv_rows(sc_r, md.TILE_ROWS))
+
+
+def test_structural_validation_rejects_wrong_family():
+    ag = patterns.get("allgatherv")
+    rs = patterns.get("reduce_scatter")
+    m = np.arange(16).reshape(4, 4)
+    with pytest.raises(ValueError, match="row-constant"):
+        ag.validate_matrix(m)
+    with pytest.raises(ValueError, match="column-constant"):
+        rs.validate_matrix(m)
+    with pytest.raises(ValueError, match="unknown collective"):
+        patterns.get("allreduce")
+
+
+def test_spec_rejects_unsupported_combinations():
+    counts = np.full(4, md.TILE_ROWS)
+    base = dict(feature_shape=(4,), dtype=np.float32, axis=("x",))
+    with pytest.raises(ValueError):
+        ExchangeSpec(send_counts=patterns.as_matrix("reduce_scatter", counts),
+                     variant="fence_hierarchy", collective="reduce_scatter",
+                     **base)
+    with pytest.raises(ValueError):
+        ExchangeSpec(send_counts=patterns.as_matrix("reduce_scatter", counts),
+                     variant="fence", codec="int8", collective="reduce_scatter",
+                     **base)
+    with pytest.raises(ValueError):
+        ExchangeSpec(send_counts=patterns.as_matrix("allgatherv", counts),
+                     variant="ragged", collective="allgatherv", **base)
+    # the alltoallv spec is untouched by the generalization
+    ExchangeSpec(send_counts=np.full((4, 4), 8), variant="fence", **base)

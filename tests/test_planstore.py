@@ -154,6 +154,57 @@ def test_tampered_entry_fails_meta_validation(field):
         assert store.get(sig) is None and store.invalid == 1
 
 
+def test_pre_collective_artifact_loads_warm():
+    """Migration: a schema-v3 artifact written before the ``collective``
+    field existed (its signature echo lacks the key) must keep warm-starting
+    alltoallv INITs — the validator fills in the implicit default instead of
+    invalidating every deployed store."""
+    counts = np.full((4, 4), 7)
+    sig, art, tables = _baked_artifact(counts)
+    assert sig.collective == "alltoallv"
+    legacy_meta = dict(art.signature)
+    assert legacy_meta.pop("collective") == "alltoallv"
+    art.signature = legacy_meta
+    with tempfile.TemporaryDirectory() as d:
+        store = PlanStore(d)
+        with open(store.path_for(sig), "wb") as f:   # bypass put_artifact
+            codec.dump(art, f)
+        got = store.get(sig)
+        assert got is not None and store.invalid == 0   # warm, not a crash
+        np.testing.assert_array_equal(
+            np.asarray(got.index_tables.pack_src), tables.pack_src)
+        assert got.summary()["collective"] == "alltoallv"
+
+
+def test_collective_field_keys_and_validates():
+    """allgatherv signatures never alias an alltoallv entry even when the
+    expanded count matrices coincide: distinct digests and store keys, and
+    a legacy (collective-less) artifact hand-copied under a gatherv key is
+    rejected by the signature echo."""
+    from repro.core import patterns
+
+    counts = np.full(4, 16, np.int64)
+    sc = patterns.as_matrix("allgatherv", counts)    # row-constant [4, 4]
+    sig_a2a = _sig(sc)                               # alltoallv over same sc
+    sig_ag = _sig(sc, collective="allgatherv")
+    assert sig_a2a.digest != sig_ag.digest
+    assert store_key(sig_a2a) != store_key(sig_ag)
+    assert signature_meta(sig_ag)["collective"] == "allgatherv"
+
+    _, art, _ = _baked_artifact(np.asarray(sc))
+    # Echo sig_ag's meta but drop the collective key: the validator's
+    # implicit default ("alltoallv") must then mismatch "allgatherv" — the
+    # one field standing between a legacy file and the wrong family.
+    forged = dict(signature_meta(sig_ag))
+    forged.pop("collective")
+    art.signature = forged
+    with tempfile.TemporaryDirectory() as d:
+        store = PlanStore(d)
+        with open(store.path_for(sig_ag), "wb") as f:
+            codec.dump(art, f)
+        assert store.get(sig_ag) is None and store.invalid == 1
+
+
 def test_backend_mismatch_falls_back_cold():
     """Auto decisions measured on one backend must not be served to another
     (CPU timings would pin the wrong variant for a TPU process)."""
